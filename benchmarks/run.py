@@ -1,0 +1,222 @@
+"""Benchmark harness — one benchmark per paper claim/bound.
+
+The paper is analytic (no experimental tables); each benchmark therefore
+(1) measures wall time of our implementation of the corresponding theorem,
+(2) derives the quantity the paper bounds (rounds R, communication C,
+congestion, fan-in) and reports it against the O(.) claim.
+
+Output: ``name,us_per_call,derived`` CSV (one line per benchmark).
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+import argparse
+import math
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _timeit(fn, n=3, warmup=1):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6      # us
+
+
+def bench_prefix_sums(quick):
+    from repro.core import MRCost, tree_prefix_sum, prefix_sum_opt, log_M
+    n, M = (20000, 64) if not quick else (2000, 32)
+    x = jnp.ones(n, jnp.int32)
+    c = MRCost()
+    tree_prefix_sum(x, M, cost=c)
+    us_faithful = _timeit(lambda: jax.block_until_ready(
+        tree_prefix_sum(x, M)))
+    us_opt = _timeit(lambda: jax.block_until_ready(prefix_sum_opt(x)))
+    print(f"prefix_tree_lemma2.2,{us_faithful:.0f},"
+          f"rounds={c.rounds}|bound=O(log_M N)={2*log_M(n, M)+1}"
+          f"|comm={c.communication}")
+    print(f"prefix_opt_cumsum,{us_opt:.0f},speedup={us_faithful/us_opt:.1f}x")
+
+
+def bench_random_indexing(quick):
+    from repro.core import MRCost, random_indexing
+    n, M = (20000, 64) if not quick else (2000, 32)
+    c = MRCost()
+    random_indexing(n, jax.random.PRNGKey(0), M, cost=c)
+    us = _timeit(lambda: jax.block_until_ready(
+        random_indexing(n, jax.random.PRNGKey(0), M)))
+    print(f"random_indexing_lemma2.3,{us:.0f},"
+          f"rounds={c.rounds}|max_leaf={c.max_reducer_io}|M={M}")
+
+
+def bench_multisearch(quick):
+    from repro.core import MRCost, multisearch, multisearch_opt
+    rng = np.random.default_rng(0)
+    nq, m, M = (8192, 1024, 32) if not quick else (1024, 128, 16)
+    q = jnp.asarray(rng.normal(size=nq).astype(np.float32))
+    piv = jnp.sort(jnp.asarray(rng.normal(size=m).astype(np.float32)))
+    res = multisearch(q, piv, M)
+    flat = multisearch(q, piv, M, pipelined=False)
+    us = _timeit(lambda: jax.block_until_ready(
+        multisearch(q, piv, M).buckets), n=2)
+    us_opt = _timeit(lambda: jax.block_until_ready(multisearch_opt(q, piv)))
+    print(f"multisearch_thm4.1,{us:.0f},"
+          f"rounds={res.rounds}|congestion={res.max_congestion}"
+          f"|unpipelined={flat.max_congestion}")
+    print(f"multisearch_opt,{us_opt:.0f},speedup={us/us_opt:.1f}x")
+
+
+def bench_sorting(quick):
+    from repro.core import MRCost, sample_sort, sort_opt, log_M
+    rng = np.random.default_rng(0)
+    n, M = (20000, 64) if not quick else (2000, 32)
+    x = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    c = MRCost()
+    sample_sort(x, M, cost=c)
+    us = _timeit(lambda: jax.block_until_ready(sample_sort(x, M)), n=1)
+    us_opt = _timeit(lambda: jax.block_until_ready(sort_opt(x)))
+    print(f"sample_sort_s4.3,{us:.0f},"
+          f"rounds={c.rounds}|comm={c.communication}"
+          f"|bound~N*log_M N={n*log_M(n, M)}")
+    print(f"sort_opt_laxsort,{us_opt:.0f},speedup={us/us_opt:.1f}x")
+
+
+def bench_funnel(quick):
+    from repro.core import MRCost, funnel_write, scatter_combine_opt
+    rng = np.random.default_rng(0)
+    P, N, M = (8192, 256, 32) if not quick else (1024, 64, 16)
+    addrs = jnp.asarray(rng.integers(0, N, P).astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=P).astype(np.float32))
+    mem = jnp.zeros(N, jnp.float32)
+    c = MRCost()
+    funnel_write(addrs, vals, mem, jnp.add, M, cost=c,
+                 identity=jnp.float32(0))
+    us = _timeit(lambda: jax.block_until_ready(
+        funnel_write(addrs, vals, mem, jnp.add, M,
+                     identity=jnp.float32(0)).memory), n=2)
+    us_opt = _timeit(lambda: jax.block_until_ready(
+        scatter_combine_opt(addrs, vals, mem, "sum")))
+    print(f"funnel_write_thm3.2,{us:.0f},"
+          f"rounds={c.rounds}|P={P}|comm={c.communication}")
+    print(f"funnel_opt_scatter,{us_opt:.0f},speedup={us/us_opt:.1f}x")
+
+
+def bench_queues(quick):
+    from repro.core import make_queues, enqueue, dequeue
+    V, M, cap, burst = 8, 32, 1024, 512
+    q = make_queues(V, cap, jnp.float32(0))
+    dests = jnp.zeros(burst, jnp.int32)
+    payload = jnp.arange(float(burst))
+
+    def drain():
+        qq, _ = enqueue(q, dests, payload)
+        rounds = 0
+        while int(jnp.sum(qq.size)) > 0:
+            qq, out, valid = dequeue(qq, M)
+            rounds += 1
+        return rounds
+    rounds = drain()
+    us = _timeit(drain, n=1)
+    print(f"fifo_queues_thm4.2,{us:.0f},"
+          f"burst={burst}|M={M}|rounds={rounds}|bound=C/M+O(1)="
+          f"{burst//M + 2}")
+
+
+def bench_kernels(quick):
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(0)
+    b, h, s, d = (2, 4, 256, 64) if not quick else (1, 2, 128, 32)
+    q = jnp.asarray(rng.normal(size=(b, h, s, d)).astype(np.float32))
+    k, v = q, q
+    us_k = _timeit(lambda: jax.block_until_ready(
+        ops.flash_attention(q, k, v, block_q=64, block_k=64)), n=2)
+    us_r = _timeit(lambda: jax.block_until_ready(
+        ref.flash_attention_ref(q.reshape(b*h, s, d), k.reshape(b*h, s, d),
+                                v.reshape(b*h, s, d))))
+    print(f"kernel_flash_attention,{us_k:.0f},interpret_vs_ref={us_k/us_r:.1f}x"
+          f"|note=CPU interpret mode; TPU is the target")
+
+    x = jnp.asarray(rng.normal(size=(8, 2048)).astype(np.float32))
+    us_k = _timeit(lambda: jax.block_until_ready(ops.prefix_scan(x)), n=3)
+    print(f"kernel_prefix_scan,{us_k:.0f},blocked 2-pass (Lem 2.2 in VMEM)")
+
+    ids = jnp.asarray(rng.integers(0, 384, 8192).astype(np.int32))
+    us_k = _timeit(lambda: jax.block_until_ready(ops.bincount(ids, 384)), n=3)
+    print(f"kernel_bincount,{us_k:.0f},one-hot MXU histogram")
+
+    kk = jnp.asarray(rng.normal(size=(4, 512)).astype(np.float32))
+    us_k = _timeit(lambda: jax.block_until_ready(
+        ops.bitonic_sort(kk, kk)[0]), n=2)
+    print(f"kernel_bitonic_sort,{us_k:.0f},log^2(n) dense stages")
+
+    a = jnp.asarray(rng.uniform(0.8, 1, (2, 512, 64)).astype(np.float32))
+    xx = jnp.asarray(rng.normal(size=(2, 512, 64)).astype(np.float32))
+    us_k = _timeit(lambda: jax.block_until_ready(ops.ssm_scan(a, xx)), n=2)
+    us_r = _timeit(lambda: jax.block_until_ready(ref.ssm_scan_ref(a, xx)),
+                   n=2)
+    print(f"kernel_ssm_scan,{us_k:.0f},chunked_vs_sequential_ref="
+          f"{us_r/us_k:.1f}x")
+
+
+def bench_moe_dispatch(quick):
+    from repro.configs import get_config
+    from repro.models.moe import init_moe, apply_moe
+    cfg = get_config("kimi-k2-1t-a32b", reduced=True)
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(2, 64, cfg.d_model)).astype(np.float32))
+    out = apply_moe(p, cfg, x)
+    us = _timeit(lambda: jax.block_until_ready(apply_moe(p, cfg, x).y), n=2)
+    print(f"moe_dispatch_einsum,{us:.0f},"
+          f"dropped={float(out.dropped_frac):.3f}|aux={float(out.aux_loss):.2f}")
+
+
+def bench_geometry(quick):
+    from repro.core import MRCost, convex_hull_mr, convex_hull_oracle, \
+        linear_program_2d
+    import numpy as np, jax.numpy as jnp
+    rng = np.random.default_rng(0)
+    n, M = (4000, 64) if not quick else (500, 32)
+    pts = rng.normal(size=(n, 2))
+    c = MRCost()
+    convex_hull_mr(jnp.asarray(pts), M, cost=c)
+    us = _timeit(lambda: convex_hull_mr(jnp.asarray(pts), M), n=1)
+    print(f"convex_hull_s1.4,{us:.0f},rounds={c.rounds}|n={n}|M={M}")
+    A = rng.normal(size=(24, 2)); b = rng.uniform(1, 2, 24)
+    us = _timeit(lambda: linear_program_2d([1.0, -0.5], A, b), n=2)
+    print(f"lp2d_funnel_s1.4,{us:.0f},Min-CRCW funnel over C(24,2) vertices")
+
+
+def bench_cost_model(quick):
+    from repro.core import MRCost, sample_sort, HardwareModel
+    n, M = 4096, 64
+    x = jnp.asarray(np.random.default_rng(0).normal(size=n
+                                                    ).astype(np.float32))
+    c = MRCost()
+    sample_sort(x, M, cost=c)
+    hw = HardwareModel(chips=256)
+    t = hw.shuffle_time(c)
+    print(f"cost_model_T,{t*1e6:.1f},T=t+R*L+C/B on 256 chips"
+          f"|R={c.rounds}|C={c.communication}")
+
+
+BENCHES = [bench_prefix_sums, bench_random_indexing, bench_multisearch,
+           bench_sorting, bench_funnel, bench_queues, bench_kernels,
+           bench_moe_dispatch, bench_geometry, bench_cost_model]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args, _ = ap.parse_known_args()
+    print("name,us_per_call,derived")
+    for b in BENCHES:
+        b(args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Continuous-batching serving demo (Theorem 4.2 admission control).
+
+  PYTHONPATH=src python examples/serve_batch.py
+
+Submits a skewed burst of requests (more than the engine's max_batch — the
+paper's over-M congestion case), watches the FIFO queue drain under the
+bounded-admission discipline, and prints latency/TTFT statistics.
+"""
+import numpy as np
+import jax
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import ServeEngine, Request, ServeConfig
+
+
+def main():
+    cfg = get_config("tinyllama-1.1b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, ServeConfig(max_batch=4, max_len=96))
+
+    rng = np.random.default_rng(0)
+    # a burst of 12 requests with skewed lengths — 3x over the M=4 bound
+    for i in range(12):
+        plen = int(rng.integers(4, 16))
+        eng.submit(Request(
+            uid=i, prompt=rng.integers(0, cfg.vocab_size, plen
+                                       ).astype(np.int32),
+            max_new_tokens=int(rng.integers(8, 24))))
+    print(f"submitted 12 requests against max_batch=4 "
+          f"(Thm 4.2 FIFO input buffer holds the excess)")
+    done = eng.run_until_drained()
+    s = eng.stats()
+    print(f"drained in {s['rounds']} rounds; {s['tokens']} tokens; "
+          f"mean latency {s['mean_latency_s']*1e3:.0f} ms; "
+          f"mean TTFT {s['mean_ttft_s']*1e3:.0f} ms")
+    print(f"FIFO order preserved: "
+          f"{[r.uid for r in sorted(done, key=lambda r: r.finished_at)][:6]}... "
+          f"(first-submitted finish first for equal lengths)")
+    assert len(done) == 12
+    assert eng.cost.max_reducer_io <= 4      # the M bound held every round
+
+
+if __name__ == "__main__":
+    main()

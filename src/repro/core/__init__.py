@@ -1,0 +1,32 @@
+"""Executable implementation of Goodrich-Sitchinava-Zhang, "Sorting,
+Searching, and Simulation in the MapReduce Framework" (2011), plus the
+TPU-native counterparts of each primitive.  See DESIGN.md."""
+
+from .costmodel import MRCost, HardwareModel, log_M, tree_height
+from .mrmodel import Mailbox, make_mailbox, shuffle, run_round, run_rounds
+from .prefix import (tree_prefix_sum, prefix_sum_opt, random_indexing,
+                     prefix_cost_bound, max_leaf_occupancy)
+from .funnel import (funnel_write, funnel_read, scatter_combine_opt,
+                     PRAMProgram, simulate_crcw)
+from .multisearch import (multisearch, multisearch_opt,
+                          brute_force_multisearch, MultisearchResult)
+from .sortmr import brute_force_sort, sample_sort, sort_opt
+from .bsp import BSPProgram, run_bsp
+from .queues import QueueState, make_queues, enqueue, dequeue, run_queued
+from .applications import (convex_hull_mr, convex_hull_oracle,
+                           linear_program_2d)
+
+__all__ = [
+    "MRCost", "HardwareModel", "log_M", "tree_height",
+    "Mailbox", "make_mailbox", "shuffle", "run_round", "run_rounds",
+    "tree_prefix_sum", "prefix_sum_opt", "random_indexing",
+    "prefix_cost_bound", "max_leaf_occupancy",
+    "funnel_write", "funnel_read", "scatter_combine_opt",
+    "PRAMProgram", "simulate_crcw",
+    "multisearch", "multisearch_opt", "brute_force_multisearch",
+    "MultisearchResult",
+    "brute_force_sort", "sample_sort", "sort_opt",
+    "BSPProgram", "run_bsp",
+    "QueueState", "make_queues", "enqueue", "dequeue", "run_queued",
+    "convex_hull_mr", "convex_hull_oracle", "linear_program_2d",
+]

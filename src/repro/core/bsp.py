@@ -1,0 +1,58 @@
+"""BSP simulation (paper §3.1, Theorem 3.1).
+
+A BSP algorithm with P <= N processors, memory N and R supersteps maps
+directly onto the generic model: processor p_i = node v_i; its internal state
+pi_i and memory cells m_{i,*} are the node's items; one superstep = one MR
+round; message routing = the shuffle.  M = ceil(N/P) bounds per-processor
+message volume, matching the reducer I/O bound.
+
+This module is also the semantic core of the *training runtime*: a pjit'd
+``train_step`` on a TPU mesh is exactly one BSP superstep (local compute +
+collective exchange), and the pipeline-parallel schedule in
+:mod:`repro.train` is pipelined supersteps.  See DESIGN.md §2.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .costmodel import MRCost
+from .mrmodel import Mailbox, shuffle
+
+
+class BSPProgram(NamedTuple):
+    """superstep(t, proc_ids, proc_state, inbox, inbox_valid) ->
+         (new_proc_state, out_dests (P, M), out_msgs pytree (P, M, ...))
+
+    ``out_dests`` entries < 0 mean "no message".  ``proc_state`` is a pytree
+    with leading dim P and persists across supersteps (the paper's pi_i and
+    memory cells m_{i,j}, which the node keeps by sending to itself)."""
+    superstep: Callable
+
+
+def run_bsp(prog: BSPProgram, proc_state: Any, n_supersteps: int, M: int,
+            n_procs: int, msg_template: Any,
+            cost: Optional[MRCost] = None) -> Any:
+    """Theorem 3.1 driver: R supersteps -> R rounds, C = O(R * N)."""
+    proc_ids = jnp.arange(n_procs, dtype=jnp.int32)
+    inbox = Mailbox(
+        payload=jax.tree_util.tree_map(
+            lambda t: jnp.zeros((n_procs, M) + t.shape, t.dtype), msg_template),
+        valid=jnp.zeros((n_procs, M), bool),
+    )
+    state_items = sum(int(x.shape[0]) if x.ndim else 1
+                      for x in jax.tree_util.tree_leaves(proc_state))
+    for t in range(n_supersteps):
+        proc_state, dests, msgs = prog.superstep(
+            t, proc_ids, proc_state, inbox.payload, inbox.valid)
+        inbox, stats = shuffle(dests, msgs, n_procs, M)
+        if int(stats.dropped):
+            raise RuntimeError(
+                f"superstep {t}: processor exceeded message bound M={M}")
+        if cost is not None:
+            # kept state counts as send-to-self (paper's "keep" primitive)
+            cost.round(items_sent=int(stats.items_sent) + state_items,
+                       max_io=int(jnp.maximum(stats.max_sent, stats.max_received)))
+    return proc_state

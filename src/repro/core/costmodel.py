@@ -1,0 +1,111 @@
+"""Cost model of the I/O-memory-bound MapReduce framework (paper §1.2-1.3).
+
+The paper evaluates algorithms by
+  R  -- number of map-shuffle-reduce rounds,
+  C  -- communication complexity (total items sent over all rounds),
+  t  -- total internal running time (sum over rounds of the max reducer time),
+and lower-bounds wall time by
+
+  T = Omega(t + R*L + C/B)
+
+where L is shuffle latency and B shuffle bandwidth.  Every algorithm in
+``repro.core`` threads an :class:`MRCost` accumulator so tests and benchmarks
+can check the measured R and C against the paper's O(.) bounds, and the
+roofline analysis can evaluate T against TPU constants.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+
+@dataclasses.dataclass
+class MRCost:
+    """Accumulator for the paper's three complexity measures."""
+
+    rounds: int = 0
+    communication: int = 0        # items sent, summed over rounds
+    internal_time: int = 0        # sum over rounds of max reducer I/O (t_r >= max n_{r,i})
+    max_reducer_io: int = 0       # max_{r,i} n_{r,i}: must stay <= M for validity
+
+    def round(self, items_sent: int, max_io: int) -> None:
+        """Record one map-shuffle-reduce round."""
+        self.rounds += 1
+        self.communication += int(items_sent)
+        self.internal_time += int(max_io)
+        self.max_reducer_io = max(self.max_reducer_io, int(max_io))
+
+    def merge_parallel(self, other: "MRCost") -> None:
+        """Merge a cost incurred *in parallel* with this one (e.g. recursive
+        sub-sorts running simultaneously): rounds take the max, communication
+        adds."""
+        self.rounds = max(self.rounds, other.rounds)
+        self.communication += other.communication
+        self.internal_time = max(self.internal_time, other.internal_time)
+        self.max_reducer_io = max(self.max_reducer_io, other.max_reducer_io)
+
+    def merge_sequential(self, other: "MRCost") -> None:
+        self.rounds += other.rounds
+        self.communication += other.communication
+        self.internal_time += other.internal_time
+        self.max_reducer_io = max(self.max_reducer_io, other.max_reducer_io)
+
+    def check_io_bound(self, M: int) -> None:
+        if self.max_reducer_io > M:
+            raise ValueError(
+                f"I/O-memory bound violated: reducer I/O {self.max_reducer_io} > M={M}"
+            )
+
+    def lower_bound_time(self, *, latency_s: float, bandwidth_items_s: float,
+                         item_time_s: float = 1e-9) -> float:
+        """Evaluate T = t + R*L + C/B with concrete constants (seconds)."""
+        return (self.internal_time * item_time_s
+                + self.rounds * latency_s
+                + self.communication / bandwidth_items_s)
+
+
+def log_M(n: int, M: int) -> int:
+    """ceil(log_M n) with the paper's convention log_M n >= 1 for n > 1."""
+    if n <= 1:
+        return 1
+    if M < 2:
+        raise ValueError("M must be >= 2")
+    return max(1, math.ceil(math.log(n) / math.log(M)))
+
+
+def tree_height(n_leaves: int, d: int) -> int:
+    """Height L = ceil(log_d n) of the paper's d-ary trees (root = level 0)."""
+    if n_leaves <= 1:
+        return 1
+    if d < 2:
+        raise ValueError("branching factor must be >= 2")
+    return max(1, math.ceil(math.log(n_leaves) / math.log(d)))
+
+
+# TPU v5e-class constants used when the abstract cost model is mapped onto the
+# target hardware (see DESIGN.md §2 and EXPERIMENTS.md §Roofline).
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link
+COLLECTIVE_LAUNCH_LATENCY = 1e-6  # ~ "L" for one shuffle hop on ICI
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    """Maps the paper's (L, B) shuffle network onto a TPU mesh axis."""
+
+    chips: int
+    peak_flops: float = PEAK_FLOPS_BF16
+    hbm_bw: float = HBM_BW
+    ici_bw_per_link: float = ICI_BW
+    latency_s: float = COLLECTIVE_LAUNCH_LATENCY
+
+    def shuffle_time(self, cost: MRCost, bytes_per_item: int = 4) -> float:
+        """Paper lower bound T = Omega(t + R*L + C/B) with B = aggregate ICI
+        bandwidth and t charged at HBM streaming rate."""
+        agg_bw_items = self.chips * self.ici_bw_per_link / bytes_per_item
+        t_seconds = cost.internal_time * bytes_per_item / self.hbm_bw
+        return (t_seconds
+                + cost.rounds * self.latency_s
+                + cost.communication / agg_bw_items)

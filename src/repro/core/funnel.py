@@ -1,0 +1,199 @@
+"""Invisible funnels and the CRCW PRAM simulation (paper §3.2, Theorem 3.2).
+
+The paper simulates an f-CRCW PRAM (concurrent writes combined by a
+commutative semigroup f) by hanging an *implicit* d-ary tree over the P
+processors at every one of the N memory cells.  Reads funnel up (duplicate
+requests collapse) and the value fans back down; writes funnel up combining
+with f.  The trees are "invisible": only non-empty tree nodes ever
+communicate, so no O(NP) structure is materialized.
+
+Here the sparse per-level representation is exact: an item at funnel level l
+is keyed by (cell, group) with group = floor(leaf / d^l); combining items
+that share a key is one MR round.  The general-semigroup segment combine uses
+a flag-segmented associative scan, so any associative ``op`` works (sum, min,
+max, logaddexp, ...).
+
+TPU counterpart (DESIGN.md §2): a funnel with f=+ over a mesh axis *is* a
+reduce-scatter/all-reduce; a funnel keyed by arbitrary cells is a
+``segment_sum``; the flash-decode (max, sum-exp) merge used for
+sequence-sharded attention is a funnel under a non-trivial semigroup.  The
+optimized counterparts live in :mod:`repro.core.distributed` and
+:func:`scatter_combine_opt` below.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .costmodel import MRCost, tree_height
+
+Semigroup = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+def _combine_sorted_segments(new_seg: jnp.ndarray, values: jnp.ndarray,
+                             op: Semigroup) -> jnp.ndarray:
+    """Inclusive flag-segmented scan: position i holds op-combination of all
+    values since the last segment start.  The last position of each segment
+    holds the fully combined value."""
+
+    def combine(a, b):
+        flag_a, val_a = a
+        flag_b, val_b = b
+        val = jnp.where(flag_b, val_b, op(val_a, val_b))
+        return flag_a | flag_b, val
+
+    _, scanned = jax.lax.associative_scan(combine, (new_seg, values))
+    return scanned
+
+
+class FunnelResult(NamedTuple):
+    memory: jnp.ndarray
+    max_fan_in: int          # max items any tree node combined in one round
+
+
+def funnel_write(addrs: jnp.ndarray, values: jnp.ndarray, memory: jnp.ndarray,
+                 op: Semigroup, M: int,
+                 cost: Optional[MRCost] = None,
+                 identity: Optional[jnp.ndarray] = None) -> FunnelResult:
+    """Bottom-up write phase of Theorem 3.2.
+
+    Processor i writes ``values[i]`` to cell ``addrs[i]`` (addr < 0 = no
+    write); concurrent writes to a cell are combined with the commutative
+    semigroup ``op`` through the cell's implicit d-ary funnel, then the root
+    applies the combined update to ``memory`` (again with ``op``).
+    """
+    P = addrs.shape[0]
+    d = max(2, M // 2)
+    L = tree_height(max(P, 2), d)
+
+    live = addrs >= 0
+    cells = jnp.where(live, addrs, -1).astype(jnp.int32)
+    group = jnp.arange(P, dtype=jnp.int32)   # leaf of proc i in every tree
+    vals = values
+    max_fan = 1
+    for _ in range(L):                        # L rounds up the funnel
+        group = group // d
+        # Items sharing (cell, group) meet at one tree node: sort and combine.
+        order = jnp.lexsort((group, cells))   # cells primary, group secondary
+        cells_s, group_s, vals_s = cells[order], group[order], vals[order]
+        live_s = live[order]
+        new_seg = jnp.concatenate([
+            jnp.ones((1,), bool),
+            (cells_s[1:] != cells_s[:-1]) | (group_s[1:] != group_s[:-1])])
+        scanned = _combine_sorted_segments(new_seg, vals_s, op)
+        is_last = jnp.concatenate([new_seg[1:], jnp.ones((1,), bool)])
+        seg_ord = jnp.cumsum(new_seg) - 1     # ordinal of each segment
+        # Fan-in accounting: size of the largest live segment this round.
+        sizes = jnp.zeros((P,), jnp.int32).at[seg_ord].add(
+            live_s.astype(jnp.int32))
+        round_fan = int(jnp.max(sizes))
+        max_fan = max(max_fan, round_fan)
+        # Compact: one item per segment survives (at its ordinal position).
+        tgt = jnp.where(is_last, seg_ord, P)
+        cells = jnp.full((P,), -1, jnp.int32).at[tgt].set(cells_s, mode="drop")
+        group = jnp.zeros((P,), jnp.int32).at[tgt].set(group_s, mode="drop")
+        vals = jnp.zeros_like(vals).at[tgt].set(scanned, mode="drop")
+        live = jnp.zeros((P,), bool).at[tgt].set(live_s, mode="drop")
+        if cost is not None:
+            cost.round(items_sent=int(jnp.sum(live)),
+                       max_io=min(max(round_fan, 1), M))
+
+    # Root round: each cell now has at most one live combined item.
+    upd_addr = jnp.where(live, cells, memory.shape[0])
+    if identity is None:
+        current = memory[jnp.clip(cells, 0, memory.shape[0] - 1)]
+        merged = op(current, vals)
+        memory = memory.at[upd_addr].set(
+            jnp.where(live, merged, current), mode="drop")
+    else:
+        base = jnp.full_like(memory, identity)
+        base = base.at[upd_addr].set(jnp.where(live, vals, identity),
+                                     mode="drop")
+        memory = op(memory, base)
+    if cost is not None:
+        cost.round(items_sent=int(jnp.sum(live)), max_io=1)
+    return FunnelResult(memory=memory, max_fan_in=max_fan)
+
+
+def funnel_read(addrs: jnp.ndarray, memory: jnp.ndarray, M: int,
+                cost: Optional[MRCost] = None) -> jnp.ndarray:
+    """Read phase of Theorem 3.2: processor i reads cell ``addrs[i]``.
+
+    Bottom-up: duplicate requests for the same cell collapse at each funnel
+    level (so a cell read by all P processors costs O(log_M P) rounds, not
+    O(P) fan-in).  Top-down: the value retraces the funnel to every requester.
+    The dense result equals ``memory[addrs]``; rounds/communication are
+    accounted per the sparse funnel.
+    """
+    P = addrs.shape[0]
+    d = max(2, M // 2)
+    L = tree_height(max(P, 2), d)
+    if cost is not None:
+        group = jnp.arange(P, dtype=jnp.int32)
+        live = int(P)
+        fan_out_per_level = []
+        for _ in range(L):
+            group = group // d
+            order = jnp.lexsort((group, addrs))
+            a_s, g_s = addrs[order], group[order]
+            uniq = int(jnp.sum(jnp.concatenate([
+                jnp.ones((1,), bool),
+                (a_s[1:] != a_s[:-1]) | (g_s[1:] != g_s[:-1])])))
+            cost.round(items_sent=live, max_io=min(d, M))   # requests up
+            fan_out_per_level.append(live)
+            live = uniq
+        for width in reversed(fan_out_per_level):           # values down
+            cost.round(items_sent=width, max_io=min(d, M))
+        cost.round(items_sent=int(P), max_io=1)             # leaves -> procs
+    return memory[addrs]
+
+
+def scatter_combine_opt(addrs: jnp.ndarray, values: jnp.ndarray,
+                        memory: jnp.ndarray, op_name: str) -> jnp.ndarray:
+    """Optimized funnel-write: one XLA scatter-reduce (TPU lowers this to an
+    on-chip sorted segment reduction — the funnel folded into a kernel)."""
+    ok = addrs >= 0
+    a = jnp.where(ok, addrs, memory.shape[0])
+    if op_name == "sum":
+        return memory.at[a].add(jnp.where(ok, values, 0), mode="drop")
+    if op_name == "max":
+        neutral = (jnp.finfo(values.dtype).min
+                   if jnp.issubdtype(values.dtype, jnp.floating)
+                   else jnp.iinfo(values.dtype).min)
+        return memory.at[a].max(jnp.where(ok, values, neutral), mode="drop")
+    if op_name == "min":
+        neutral = (jnp.finfo(values.dtype).max
+                   if jnp.issubdtype(values.dtype, jnp.floating)
+                   else jnp.iinfo(values.dtype).max)
+        return memory.at[a].min(jnp.where(ok, values, neutral), mode="drop")
+    raise ValueError(f"unsupported semigroup {op_name!r}")
+
+
+class PRAMProgram(NamedTuple):
+    """One step of an f-CRCW PRAM program (paper §3.2 read/compute/write).
+
+    read_addr(state, t)               -> (P,) cell per processor (>=0)
+    compute(state, read_vals, t)      -> (new_state, write_addr (P,), write_val (P,))
+                                          write_addr < 0 suppresses the write.
+    """
+    read_addr: Callable
+    compute: Callable
+
+
+def simulate_crcw(prog: PRAMProgram, proc_state, memory: jnp.ndarray,
+                  n_steps: int, M: int, op: Semigroup,
+                  cost: Optional[MRCost] = None,
+                  identity: Optional[jnp.ndarray] = None):
+    """Theorem 3.2 driver: T PRAM steps -> O(T log_M P) MR rounds.
+
+    Returns (final_proc_state, final_memory)."""
+    for t in range(n_steps):
+        addrs = prog.read_addr(proc_state, t)
+        vals = funnel_read(addrs, memory, M, cost=cost)
+        proc_state, w_addr, w_val = prog.compute(proc_state, vals, t)
+        memory = funnel_write(w_addr, w_val, memory, op, M,
+                              cost=cost, identity=identity).memory
+    return proc_state, memory

@@ -1,0 +1,155 @@
+"""Generic MapReduce computation model (paper §2, Theorem 2.1), executable in JAX.
+
+The paper models a MapReduce computation as rounds on a dynamic directed graph
+G = (V, E):  each node v holds a state A_v(r) of items; every round, a
+sequential function f maps A_v(r) to a set B_v(r) of (destination, item)
+pairs; items are routed to their destinations, forming A_v(r+1).  Theorem 2.1:
+if every node sends / keeps / receives at most M items per round, the
+computation runs in the I/O-memory-bound MapReduce framework with unchanged
+round complexity R and communication complexity C.
+
+JAX adaptation (DESIGN.md §2): node states are *fixed-capacity mailboxes* —
+pytrees of arrays with leading dims (V, M) plus a validity mask.  The M bound
+the paper imposes on reducer I/O becomes the static mailbox capacity; routing
+is a stable sort by destination plus a rank-addressed scatter (on a TPU mesh
+the same routing is an ``all_to_all`` — see :mod:`repro.core.distributed`).
+Overflow — the w.h.p. failure event in the paper's randomized algorithms — is
+returned as an explicit drop counter instead of crashing a reducer, and can be
+eliminated with the Theorem 4.2 queue discipline (:mod:`repro.core.queues`).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .costmodel import MRCost
+
+Payload = Any  # pytree of arrays with leading dims (V, M, ...)
+
+
+class Mailbox(NamedTuple):
+    """State A_v(r) for all nodes: ``payload`` leaves have shape (V, M, ...)."""
+
+    payload: Payload
+    valid: jnp.ndarray  # (V, M) bool
+
+    @property
+    def n_nodes(self) -> int:
+        return self.valid.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.valid.shape[1]
+
+
+def make_mailbox(payload: Payload, valid: jnp.ndarray) -> Mailbox:
+    return Mailbox(payload=payload, valid=valid.astype(bool))
+
+
+def empty_like(box: Mailbox) -> Mailbox:
+    return Mailbox(
+        payload=jax.tree_util.tree_map(jnp.zeros_like, box.payload),
+        valid=jnp.zeros_like(box.valid),
+    )
+
+
+class ShuffleStats(NamedTuple):
+    items_sent: jnp.ndarray      # scalar int32: sum_v |B_v(r)|  (includes keeps)
+    max_sent: jnp.ndarray        # max items sent by any node
+    max_received: jnp.ndarray    # max items received by any node
+    dropped: jnp.ndarray         # items lost to capacity overflow (0 in a valid run)
+
+
+def shuffle(dests: jnp.ndarray, payload: Payload, n_nodes: int,
+            capacity: int) -> Tuple[Mailbox, ShuffleStats]:
+    """The Shuffle step: deliver item j to node ``dests[j]``.
+
+    ``dests`` is any-shape int32; entries < 0 mark invalid (non-existent)
+    items.  ``payload`` leaves share ``dests``'s leading shape.  Items are
+    delivered in stable (source-order) FIFO order into per-node slots
+    ``0..capacity-1``; items ranked past ``capacity`` at their destination are
+    dropped and counted.
+    """
+    flat_dest = dests.reshape(-1)
+    n = flat_dest.shape[0]
+    valid = flat_dest >= 0
+    # Stable sort by destination; invalid items sort to the end.
+    sort_key = jnp.where(valid, flat_dest, n_nodes)
+    order = jnp.argsort(sort_key, stable=True)
+    sorted_dest = sort_key[order]
+    # Rank of each item within its destination segment.
+    first_occurrence = jnp.searchsorted(sorted_dest, sorted_dest, side="left")
+    rank_sorted = jnp.arange(n, dtype=jnp.int32) - first_occurrence.astype(jnp.int32)
+    # Scatter back to source order.
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(rank_sorted)
+
+    in_range = valid & (rank < capacity)
+    dropped = jnp.sum(valid & (rank >= capacity))
+    # mode='drop' discards writes with out-of-range indices.
+    dest_idx = jnp.where(in_range, flat_dest, -1)
+    slot_idx = jnp.where(in_range, rank, capacity)
+
+    def place(leaf: jnp.ndarray) -> jnp.ndarray:
+        flat = leaf.reshape((n,) + leaf.shape[dests.ndim:])
+        out = jnp.zeros((n_nodes, capacity) + flat.shape[1:], flat.dtype)
+        return out.at[dest_idx, slot_idx].set(flat, mode="drop")
+
+    new_payload = jax.tree_util.tree_map(place, payload)
+    new_valid = jnp.zeros((n_nodes, capacity), bool).at[dest_idx, slot_idx].set(
+        in_range, mode="drop")
+
+    recv_counts = jnp.bincount(jnp.where(valid, flat_dest, 0),
+                               weights=valid.astype(jnp.int32),
+                               length=n_nodes)
+    if dests.ndim >= 2:
+        sent_per_node = jnp.sum(valid.reshape(dests.shape[0], -1), axis=1)
+        max_sent = jnp.max(sent_per_node)
+    else:
+        max_sent = jnp.array(1, jnp.int32)
+    stats = ShuffleStats(
+        items_sent=jnp.sum(valid),
+        max_sent=max_sent,
+        max_received=jnp.max(recv_counts).astype(jnp.int32),
+        dropped=dropped,
+    )
+    return Mailbox(payload=new_payload, valid=new_valid), stats
+
+
+# A round function f: (round_idx, node_ids, mailbox) -> (dests, payload).
+# ``dests`` has shape (V, M_out); -1 entries are "no item".  Keeping item x at
+# node v is expressed by dests[v, j] = v — exactly the paper's "keep" primitive.
+RoundFn = Callable[[int, jnp.ndarray, Mailbox], Tuple[jnp.ndarray, Payload]]
+
+
+def run_round(f: RoundFn, box: Mailbox, round_idx: int,
+              cost: Optional[MRCost] = None,
+              capacity: Optional[int] = None) -> Tuple[Mailbox, ShuffleStats]:
+    """Execute one round of the generic computation: apply f, then shuffle."""
+    n_nodes = box.n_nodes
+    cap = capacity if capacity is not None else box.capacity
+    node_ids = jnp.arange(n_nodes, dtype=jnp.int32)
+    dests, payload = f(round_idx, node_ids, box)
+    new_box, stats = shuffle(dests, payload, n_nodes, cap)
+    if cost is not None:
+        cost.round(items_sent=int(stats.items_sent),
+                   max_io=int(jnp.maximum(stats.max_sent, stats.max_received)))
+    return new_box, stats
+
+
+def run_rounds(f: RoundFn, box: Mailbox, n_rounds: int,
+               cost: Optional[MRCost] = None,
+               capacity: Optional[int] = None) -> Mailbox:
+    """Drive R rounds.  Host-level loop: the paper's algorithms have static
+    round structure, so the loop bound is a Python int and each round may jit
+    its own f."""
+    for r in range(n_rounds):
+        box, stats = run_round(f, box, r, cost=cost, capacity=capacity)
+        if int(stats.dropped) != 0:
+            raise RuntimeError(
+                f"round {r}: {int(stats.dropped)} items exceeded mailbox capacity "
+                f"M={capacity or box.capacity}; use repro.core.queues for the "
+                f"Theorem 4.2 bounded-I/O discipline")
+    return box

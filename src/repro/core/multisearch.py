@@ -1,0 +1,156 @@
+"""Multi-searching (paper §4.1, Theorem 4.1, and Appendix A brute force).
+
+N queries are routed through a search DAG built over the sorted pivots.  The
+paper's DAG (from Goodrich's BSP multisearch) has O(log_M N) levels with
+O(N / log_M N) nodes per level; congestion is controlled by splitting the
+queries into K = log_M N random batches and *pipelining* them: batch i enters
+the sources at round i, so every level processes one batch per round and each
+node sees at most M queries per round w.h.p.
+
+Faithful implementation: an (M/2)-ary search tree over the pivots, executed
+level-synchronously with explicit batches; per-round per-node congestion is
+measured and reported (the w.h.p. claim), and rounds/communication are
+accounted.  The final answer equals ``searchsorted(pivots, queries)``.
+
+Optimized TPU counterpart: when the pivot frontier fits in VMEM (<= M), a
+single vectorized ``jnp.searchsorted`` per shard — used by the MoE dispatch
+bucketizer and the sample sort.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .costmodel import MRCost, log_M, tree_height
+from .prefix import random_indexing
+
+
+class MultisearchResult(NamedTuple):
+    buckets: jnp.ndarray        # (n_queries,) index in [0, n_pivots]
+    max_congestion: int         # max queries at any tree node in any round
+    rounds: int
+
+
+def _tree_descend(queries: jnp.ndarray, padded_pivots: jnp.ndarray,
+                  node: jnp.ndarray, level: int, L: int, f: int) -> jnp.ndarray:
+    """One level of descent in the implicit f-ary search tree.
+
+    A query at node k (level ``level``) moves to child k*f + c where c is the
+    number of child-subtree maxima < query.  Subtree maxima are gathered from
+    the padded pivot array by index arithmetic — the tree is never built.
+    """
+    stride = f ** (L - level - 1)                 # leaves under one child
+    child_base = node * f                          # (nq,)
+    j = jnp.arange(f)
+    # max leaf under child (k*f + j) = padded_pivots[(k*f+j+1)*stride - 1]
+    bound_idx = (child_base[:, None] + j[None, :] + 1) * stride - 1
+    bounds = padded_pivots[jnp.clip(bound_idx, 0, padded_pivots.shape[0] - 1)]
+    c = jnp.sum(queries[:, None] > bounds, axis=1)
+    c = jnp.minimum(c, f - 1)
+    return child_base + c
+
+
+def multisearch(queries: jnp.ndarray, pivots: jnp.ndarray, M: int,
+                key: Optional[jax.Array] = None,
+                cost: Optional[MRCost] = None,
+                pipelined: bool = True) -> MultisearchResult:
+    """Theorem 4.1: route all queries through the pivot search tree.
+
+    Returns bucket b per query with pivots[b-1] < q <= pivots[b] (i.e.
+    ``searchsorted(pivots, q, side='left')``), the measured per-node
+    congestion, and the number of rounds taken.
+    """
+    n_q = queries.shape[0]
+    m = pivots.shape[0]
+    n = n_q + m
+    f = max(2, M // 2)
+    L = tree_height(max(m, 2), f)
+    pad = f ** L - m
+    big = (jnp.finfo(pivots.dtype).max
+           if jnp.issubdtype(pivots.dtype, jnp.floating)
+           else jnp.iinfo(pivots.dtype).max)
+    padded = jnp.concatenate([jnp.sort(pivots), jnp.full((pad,), big, pivots.dtype)])
+
+    # Random batching (the congestion-control half of Thm 4.1).
+    K = max(1, log_M(n, max(2, M))) if pipelined else 1
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    if pipelined and n_q > 1:
+        idx = random_indexing(n_q, key, M, cost=cost)
+        batch = (idx * K) // n_q                   # K near-equal random batches
+    else:
+        batch = jnp.zeros((n_q,), jnp.int32)
+
+    node = jnp.zeros((n_q,), jnp.int32)            # all queries at the root
+    level = jnp.zeros((n_q,), jnp.int32) - batch   # batch i enters at round i
+    max_cong = 0
+    total_rounds = L + K - 1
+    for r in range(total_rounds):
+        active = (level >= 0) & (level < L)
+        for l in range(L):                          # static unroll over levels
+            sel = active & (level == l)
+            moved = _tree_descend(queries, padded, node, l, L, f)
+            node = jnp.where(sel, moved, node)
+        # congestion: queries per (level, node) among active ones this round
+        cong_key = jnp.where(active, level * (f ** L) + node, -1)
+        sk = jnp.sort(cong_key)
+        seg_start = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]])
+        seg_id = jnp.cumsum(seg_start) - 1
+        sizes = jnp.bincount(seg_id, weights=(sk >= 0).astype(jnp.int32),
+                             length=n_q)
+        max_cong = max(max_cong, int(jnp.max(sizes)))
+        level = level + 1
+        if cost is not None:
+            cost.round(items_sent=int(jnp.sum(active)) + m,
+                       max_io=min(max(int(jnp.max(sizes)), 1), M))
+
+    leaf = node                                     # leaf index in padded tree
+    buckets = jnp.minimum(leaf, m).astype(jnp.int32)
+    # queries beyond the largest pivot belong to the past-the-end bucket m
+    # (when m == f^L the tree has no padding leaf to express this)
+    buckets = jnp.where(queries > padded[m - 1], m, buckets)
+    return MultisearchResult(buckets=buckets, max_congestion=max_cong,
+                             rounds=total_rounds)
+
+
+def multisearch_opt(queries: jnp.ndarray, pivots: jnp.ndarray) -> jnp.ndarray:
+    """Optimized counterpart: fused vectorized search (one VMEM-resident
+    frontier per shard)."""
+    return jnp.searchsorted(jnp.sort(pivots), queries, side="left").astype(jnp.int32)
+
+
+def brute_force_multisearch(queries: jnp.ndarray, pivots: jnp.ndarray, M: int,
+                            cost: Optional[MRCost] = None) -> jnp.ndarray:
+    """Appendix A: all-pairs comparison over nodes v_{i,j}.
+
+    k_i = |{j : y_j < x_i}| computed by materializing comparisons in M x M
+    tiles (the nodes), then summing each row with the Lemma 2.2 bottom-up
+    phase.  O(n*m) communication, O(log_M) replication rounds.
+    """
+    n, m = queries.shape[0], pivots.shape[0]
+    ps = jnp.sort(pivots)
+    ranks = jnp.zeros((n,), jnp.int32)
+    tile = max(2, M)
+    n_row_tiles = math.ceil(n / tile)
+    n_col_tiles = math.ceil(m / tile)
+    for bi in range(n_row_tiles):
+        qs = queries[bi * tile:(bi + 1) * tile]
+        acc = jnp.zeros((qs.shape[0],), jnp.int32)
+        for bj in range(n_col_tiles):
+            ys = ps[bj * tile:(bj + 1) * tile]
+            acc = acc + jnp.sum(qs[:, None] > ys[None, :], axis=1,
+                                dtype=jnp.int32)
+        ranks = ranks.at[bi * tile:(bi + 1) * tile].set(acc)
+    if cost is not None:
+        # replication of x over column tiles and y over row tiles (App A step 1)
+        repl_rounds = max(1, log_M(max(n_col_tiles, 2), max(2, M)))
+        for _ in range(repl_rounds):
+            cost.round(items_sent=n * n_col_tiles + m * n_row_tiles, max_io=M)
+        cost.round(items_sent=n * n_col_tiles + m * n_row_tiles, max_io=M)  # compare
+        # add-up phase (bottom-up tree over column tiles)
+        for _ in range(max(1, log_M(max(n_col_tiles, 2), max(2, M)))):
+            cost.round(items_sent=n * n_col_tiles, max_io=M)
+    return ranks

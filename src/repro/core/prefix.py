@@ -1,0 +1,142 @@
+"""All-prefix-sums and random indexing (paper §2.1, Lemmas 2.2 and 2.3).
+
+Faithful implementation: the d-ary tree T with branching factor d = M/2 and
+height L = ceil(log_d N), executed level-by-level exactly as the paper's
+bottom-up / top-down phases, with round and communication accounting.  The
+level arrays *are* the per-level node states; routing between levels is index
+arithmetic on the implicit labels v = (l, k) (parent p(v) = (l-1, floor(k/d)),
+j-th child w_j = (l+1, k*d + j)), exactly the paper's labeling scheme.
+
+Optimized TPU counterpart: a single ``jnp.cumsum`` / ``associative_scan`` (and
+the blocked Pallas two-pass kernel in :mod:`repro.kernels.prefix_scan`, which
+is the same tree folded into VMEM tiles).  Both are tested to agree.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .costmodel import MRCost, tree_height
+
+
+def _pad_to_tree(x: jnp.ndarray, d: int, height: int) -> jnp.ndarray:
+    n_leaves = d ** height
+    pad = n_leaves - x.shape[0]
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+    return x
+
+
+def tree_prefix_sum(values: jnp.ndarray, M: int,
+                    cost: Optional[MRCost] = None,
+                    inclusive: bool = True) -> jnp.ndarray:
+    """Lemma 2.2: all-prefix-sums on the d-ary tree, d = M/2.
+
+    Rounds: 1 (input -> leaves) + (L-1) bottom-up + L top-down + 1 (output)
+    = O(log_M N).  Communication: O(N) per round (dominated by the N leaves
+    keeping their items), O(N log_M N) total.
+    """
+    if values.ndim != 1:
+        raise ValueError("tree_prefix_sum expects a 1-D collection of items")
+    n = values.shape[0]
+    d = max(2, M // 2)
+    L = tree_height(max(n, 2), d)
+    leaves = _pad_to_tree(values, d, L)
+
+    # Round 0: input node i sends a_i to leaf (L-1, i); leaves keep items after.
+    if cost is not None:
+        cost.round(items_sent=n, max_io=1)
+
+    # --- Bottom-up phase.  levels[i] = subtree sums of the nodes at tree
+    # level L-1-i; levels[0] = leaves (width d^L), levels[-1] = the root's
+    # children (width d).  Each iteration is one MR round: every node at the
+    # current level sends s_v to p(v) = (l-1, floor(k/d)).
+    levels = [leaves]
+    occupied = n                                  # non-empty nodes this level
+    for _ in range(L - 1):
+        child = levels[-1]
+        parent = jnp.sum(child.reshape(-1, d), axis=1)
+        levels.append(parent)
+        if cost is not None:
+            # only non-empty nodes communicate (the tree is implicit)
+            cost.round(items_sent=occupied + n, max_io=d)
+            occupied = -(-occupied // d)
+
+    # --- Top-down phase.  offsets[k] = sum of all leaves strictly left of
+    # node k's subtree at the current level.  Each iteration is one MR round:
+    # node v sends child w_i the value s_{p(v)} + sum_{j<i} s_{w_j}.
+    offsets = jnp.zeros((1,), leaves.dtype)      # the (virtual) root
+    for l in range(L):
+        child_sums = levels[L - 1 - l].reshape(-1, d)
+        excl = jnp.cumsum(child_sums, axis=1) - child_sums
+        offsets = (offsets[:, None] + excl).reshape(-1)
+        if cost is not None:
+            occupied = min(offsets.shape[0], -(-n // d ** (L - 1 - l)) * d, 2 * n)
+            cost.round(items_sent=occupied + n, max_io=d)
+
+    # Final round: leaf k outputs a_k + s_{p(v)}.
+    if cost is not None:
+        cost.round(items_sent=n, max_io=1)
+    return offsets[:n] + values if inclusive else offsets[:n]
+
+
+def prefix_sum_opt(values: jnp.ndarray, inclusive: bool = True) -> jnp.ndarray:
+    """Optimized counterpart: one fused scan (XLA lowers to a work-efficient
+    parallel scan; on TPU the Pallas kernel repro.kernels.prefix_scan is the
+    blocked version of the same tree)."""
+    c = jnp.cumsum(values)
+    return c if inclusive else c - values
+
+
+def prefix_cost_bound(n: int, M: int) -> Tuple[int, int]:
+    """The paper's bound as concrete ceilings our implementation must respect:
+    rounds <= 2L + 1, communication <= (2L + 1) * 2N (Lemma 2.2)."""
+    d = max(2, M // 2)
+    L = tree_height(max(n, 2), d)
+    return 2 * L + 1, (2 * L + 1) * 2 * n
+
+
+def random_indexing(n: int, key: jax.Array, M: int,
+                    n_hat: Optional[int] = None,
+                    cost: Optional[MRCost] = None) -> jnp.ndarray:
+    """Lemma 2.3: assign the n input items dense unique indices 0..n-1 w.h.p.
+
+    Paper: each item picks a uniform slot in [0, N_hat^3); per-leaf counts are
+    prefix-summed over the (implicit) tree of N_hat^3 leaves, converting slots
+    to dense ranks; ties within a leaf are ordered arbitrarily.  Only
+    non-empty leaves communicate, so the dense equivalent computed here is a
+    stable sort by slot — which is exactly the ranking the tree computes.
+
+    Returns ``idx`` with idx[i] = dense index of item i (a permutation).
+    """
+    n_hat = int(n_hat if n_hat is not None else max(n, 2))
+    universe = min(n_hat ** 3, 2**31 - 1)   # x64 disabled: clamp the universe;
+    # collision probability stays N^{-Omega(1)} for the sizes we run on CPU.
+    slots = jax.random.randint(key, (n,), 0, universe, dtype=jnp.int32)
+    order = jnp.argsort(slots, stable=True)       # the tree ranks the slots
+    idx = jnp.zeros((n,), jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
+    if cost is not None:
+        d = max(2, M // 2)
+        L = max(1, math.ceil(3 * math.log(max(n_hat, 2)) / math.log(d)))
+        occupancy = int(max_leaf_occupancy(slots))
+        cost.round(items_sent=n, max_io=occupancy)      # throw into leaves
+        for _ in range(2 * L):                           # tree up + down
+            cost.round(items_sent=n, max_io=max(occupancy, d))
+    return idx
+
+
+def max_leaf_occupancy(slots: jnp.ndarray) -> jnp.ndarray:
+    """Max leaf occupancy n_v — the paper's w.h.p. O(M) bound (Lemma 2.3):
+    P[n_v > M] <= N^{-Omega(M)}."""
+    s = jnp.sort(slots)
+    same = jnp.concatenate([jnp.zeros((1,), bool), s[1:] == s[:-1]])
+
+    def step(carry, x):
+        run = jnp.where(x, carry + 1, 0)
+        return run, run
+
+    _, runs = jax.lax.scan(step, jnp.array(0, jnp.int32), same)
+    return jnp.max(runs) + 1

@@ -1,0 +1,142 @@
+"""Sorting in the MapReduce model (paper §4.3 and Lemma 4.3 / Appendix A).
+
+``brute_force_sort``: every pair of items is compared at a (tiled) node
+v_{i,j}; summing each row of the comparison matrix with the Lemma 2.2
+bottom-up phase yields each item's rank.  O(log_M N) rounds but O(N^2 log_M N)
+communication — only viable for small inputs, which is exactly how §4.3 uses
+it: on the Theta(sqrt(N)) pivots.
+
+``sample_sort`` (the paper's algorithm, fully parallel — no master node):
+  1. pick Theta(sqrt(N)) random pivots;
+  2. rank the pivots with the brute-force sort;
+  3. multi-search (Thm 4.1) every item over the pivot tree -> bucket label;
+  4. route items to their buckets (a shuffle) and recurse in parallel until a
+     bucket fits one reducer (<= M), then sort locally.
+
+Recursion bottoms out in a per-reducer local sort: on TPU that is the bitonic
+in-VMEM Pallas kernel (:mod:`repro.kernels.bitonic_sort`); here we call its
+jnp oracle.  Round cost of parallel recursion is the max over branches;
+communication adds (MRCost.merge_parallel).
+
+Optimized counterpart: single fused ``jax.lax.sort`` per shard + all_to_all
+redistribution (see repro.core.distributed.sharded_sample_sort).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .costmodel import MRCost, log_M
+from .multisearch import brute_force_multisearch, multisearch
+
+
+def brute_force_sort(x: jnp.ndarray, M: int,
+                     cost: Optional[MRCost] = None) -> jnp.ndarray:
+    """Lemma 4.3: rank by all-pairs comparison, then permute by rank.
+
+    Stable: ties are broken by input index (the paper assumes an indexed
+    collection; index = position)."""
+    n = x.shape[0]
+    # rank_i = |{j : x_j < x_i or (x_j == x_i and j < i)}| computed in tiles.
+    tile = max(2, M)
+    n_tiles = math.ceil(n / tile)
+    idx = jnp.arange(n)
+    ranks = jnp.zeros((n,), jnp.int32)
+    for bi in range(n_tiles):
+        sl = slice(bi * tile, min((bi + 1) * tile, n))
+        xi, ii = x[sl], idx[sl]
+        acc = jnp.zeros((xi.shape[0],), jnp.int32)
+        for bj in range(n_tiles):
+            sj = slice(bj * tile, min((bj + 1) * tile, n))
+            xj, ij = x[sj], idx[sj]
+            less = (xj[None, :] < xi[:, None])
+            tie = (xj[None, :] == xi[:, None]) & (ij[None, :] < ii[:, None])
+            acc = acc + jnp.sum(less | tie, axis=1, dtype=jnp.int32)
+        ranks = ranks.at[sl].set(acc)
+    out = jnp.zeros_like(x).at[ranks].set(x)
+    if cost is not None:
+        repl = max(1, log_M(max(n_tiles, 2), max(2, M)))
+        for _ in range(repl):                       # replicate rows+cols
+            cost.round(items_sent=2 * n * n_tiles, max_io=M)
+        cost.round(items_sent=n * n_tiles, max_io=M)        # compare
+        for _ in range(max(1, log_M(max(n_tiles, 2), max(2, M)))):
+            cost.round(items_sent=n * n_tiles, max_io=M)    # row-sum tree
+        cost.round(items_sent=n, max_io=1)                  # permute by rank
+    return out
+
+
+def _local_sort(x: np.ndarray) -> np.ndarray:
+    """Reducer-local sort of <= M items (TPU: bitonic Pallas kernel)."""
+    return np.sort(x, kind="stable")
+
+
+def sample_sort(x: jnp.ndarray, M: int, key: Optional[jax.Array] = None,
+                cost: Optional[MRCost] = None,
+                _depth: int = 0) -> jnp.ndarray:
+    """§4.3 sample sort.  Returns x ascending; cost tracks the paper's
+    O(log_M N) rounds / O(N log_M N) communication (w.h.p.) accounting."""
+    if key is None:
+        key = jax.random.PRNGKey(7)
+    xs = np.asarray(x)
+    n = xs.shape[0]
+    if n <= max(2, M):
+        if cost is not None:
+            cost.round(items_sent=n, max_io=n)      # one reducer sorts locally
+        return jnp.asarray(_local_sort(xs))
+    if _depth > 8:  # w.h.p. never reached; guards adversarial duplicates
+        return jnp.asarray(_local_sort(xs))
+
+    # 1. Theta(sqrt(N)) random pivots.
+    n_piv = max(2, int(math.isqrt(n)))
+    k_piv, k_ms, k_rec = jax.random.split(key, 3)
+    piv_idx = jax.random.choice(k_piv, n, shape=(n_piv,), replace=False)
+    pivots = jnp.asarray(xs)[piv_idx]
+    # 2. brute-force sort of the pivots (Lemma 4.3): N_piv^2 = N comparisons.
+    sorted_piv = brute_force_sort(pivots, M, cost=cost)
+    # 3. multi-search every item over the pivot tree (Theorem 4.1).
+    ms = multisearch(jnp.asarray(xs), sorted_piv, M, key=k_ms, cost=cost)
+    buckets = np.asarray(ms.buckets)
+    # 4. shuffle to buckets (one round) and recurse in parallel.
+    if cost is not None:
+        cost.round(items_sent=n, max_io=int(np.max(np.bincount(
+            buckets, minlength=n_piv + 1))))
+    order = np.argsort(buckets, kind="stable")
+    xs_b = xs[order]
+    counts = np.bincount(buckets, minlength=n_piv + 1)
+    offs = np.concatenate([[0], np.cumsum(counts)])
+    out = np.empty_like(xs)
+    sub_costs = []
+    sub_keys = jax.random.split(k_rec, n_piv + 1)
+    for b in range(n_piv + 1):
+        lo, hi = offs[b], offs[b + 1]
+        if hi <= lo:
+            continue
+        sub_cost = MRCost() if cost is not None else None
+        out[lo:hi] = np.asarray(sample_sort(
+            jnp.asarray(xs_b[lo:hi]), M, key=sub_keys[b], cost=sub_cost,
+            _depth=_depth + 1))
+        if sub_cost is not None:
+            sub_costs.append(sub_cost)
+    if cost is not None and sub_costs:
+        par = sub_costs[0]
+        for c in sub_costs[1:]:
+            par.merge_parallel(c)
+        cost.merge_sequential(par)
+    return jnp.asarray(out)
+
+
+def sort_opt(x: jnp.ndarray) -> jnp.ndarray:
+    """Optimized counterpart: XLA's fused on-device sort."""
+    return jnp.sort(x)
+
+
+def sort_cost_bound(n: int, M: int) -> Tuple[int, int]:
+    """Paper bound for sample sort: O(log_M N) rounds, O(N log_M N) words,
+    as concrete ceilings (constants derived in EXPERIMENTS.md §Paper-validation):
+    rounds <= c_r * log_M(n)^2 ... we use the measured-vs-asymptote check
+    instead; this returns (log_M n, n * log_M n) as the unit scale."""
+    return log_M(n, M), n * log_M(n, M)

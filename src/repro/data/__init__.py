@@ -1,0 +1,2 @@
+from .pipeline import (SyntheticCorpus, DataPipeline, make_pipeline,
+                       global_shuffle_indices)

@@ -1,0 +1,56 @@
+"""Bucket-histogram Pallas kernel — the fan-in counting round of the shuffle.
+
+Every shuffle/dispatch round of the paper starts by counting how many items
+target each reducer (Thm 4.2's R1 "send the counts" round; MoE dispatch's
+tokens-per-expert).  On TPU a histogram is MXU-friendly when phrased as a
+one-hot contraction: each VMEM tile of ids becomes a (tile, n_buckets)
+comparison matrix reduced over rows; the sequential grid accumulates tile
+partials into the output block — a depth-1 funnel in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bincount_kernel(ids_ref, o_ref, *, n_buckets: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    ids = ids_ref[...]                                # (1, block_t) int32
+    buckets = jax.lax.broadcasted_iota(jnp.int32, (1, n_buckets), 1)
+    onehot = (ids[0, :, None] == buckets[0, None, :]).astype(o_ref.dtype)
+    o_ref[...] += jnp.sum(onehot, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("n_buckets", "block_t", "interpret"))
+def bincount(ids: jnp.ndarray, n_buckets: int, *, block_t: int = 1024,
+             interpret: bool = False) -> jnp.ndarray:
+    """Count occurrences of each id in [0, n_buckets); ids < 0 are ignored.
+
+    ids: (n,) int32.  Returns (n_buckets,) int32.
+    """
+    if ids.ndim != 1:
+        raise ValueError("bincount expects (n,)")
+    n = ids.shape[0]
+    block_t = min(block_t, n)
+    if n % block_t != 0:
+        pad = block_t - n % block_t
+        ids = jnp.pad(ids, (0, pad), constant_values=-1)
+        n = ids.shape[0]
+    ids2 = ids.reshape(1, n)
+    out = pl.pallas_call(
+        functools.partial(_bincount_kernel, n_buckets=n_buckets),
+        grid=(n // block_t,),
+        in_specs=[pl.BlockSpec((1, block_t), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, n_buckets), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, n_buckets), jnp.int32),
+        interpret=interpret,
+    )(ids2)
+    return out[0]

@@ -1,0 +1,88 @@
+"""In-VMEM bitonic key-value sort Pallas kernel — the reducer-local sort.
+
+The paper's sample sort (§4.3) bottoms out when a bucket fits one reducer
+(<= M items); that reducer then sorts locally.  On TPU "one reducer" is one
+VMEM tile, and the TPU-native local sort is a bitonic network: data-oblivious
+compare-exchange stages expressed as dense reshape/min/max — no gathers, no
+divergence, fully VPU-vectorized.  n must be a power of two (pad with +inf).
+
+Stages: for k in 2,4,..,n (merge size), for j in k/2,..,1 (distance):
+elements at distance j swap so each k-block becomes ascending/descending by
+position — log^2(n) dense passes over the tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _compare_exchange(keys, vals, k: int, j: int):
+    """One bitonic stage on (rows, n): partners at distance j within 2j-blocks,
+    direction flips every k elements."""
+    rows, n = keys.shape
+    kb = keys.reshape(rows, n // (2 * j), 2, j)
+    vb = vals.reshape(rows, n // (2 * j), 2, j)
+    a_k, b_k = kb[:, :, 0, :], kb[:, :, 1, :]
+    a_v, b_v = vb[:, :, 0, :], vb[:, :, 1, :]
+    # ascending iff floor(global_index / k) is even
+    base = jnp.arange(n // (2 * j)) * (2 * j)
+    ascending = ((base // k) % 2 == 0)[None, :, None]
+    swap = jnp.where(ascending, a_k > b_k, a_k < b_k)
+    new_a_k = jnp.where(swap, b_k, a_k)
+    new_b_k = jnp.where(swap, a_k, b_k)
+    new_a_v = jnp.where(swap, b_v, a_v)
+    new_b_v = jnp.where(swap, a_v, b_v)
+    keys = jnp.stack([new_a_k, new_b_k], axis=2).reshape(rows, n)
+    vals = jnp.stack([new_a_v, new_b_v], axis=2).reshape(rows, n)
+    return keys, vals
+
+
+def _bitonic_kernel(k_ref, v_ref, ok_ref, ov_ref):
+    keys, vals = k_ref[...], v_ref[...]
+    n = keys.shape[-1]
+    k = 2
+    while k <= n:                      # static Python loop: n is a trace const
+        j = k // 2
+        while j >= 1:
+            keys, vals = _compare_exchange(keys, vals, k, j)
+            j //= 2
+        k *= 2
+    ok_ref[...] = keys
+    ov_ref[...] = vals
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitonic_sort(keys: jnp.ndarray, values: jnp.ndarray, *,
+                 interpret: bool = False):
+    """Sort each row of (rows, n) ascending by key, permuting values along.
+
+    n is padded to the next power of two with +inf keys (dropped on return).
+    The whole tile must fit VMEM: rows * n_pad <= ~512K f32 elements.
+    """
+    if keys.shape != values.shape or keys.ndim != 2:
+        raise ValueError("bitonic_sort expects matching (rows, n) arrays")
+    rows, n = keys.shape
+    n_pad = 1
+    while n_pad < n:
+        n_pad *= 2
+    if n_pad != n:
+        big = (jnp.finfo(keys.dtype).max
+               if jnp.issubdtype(keys.dtype, jnp.floating)
+               else jnp.iinfo(keys.dtype).max)
+        keys = jnp.pad(keys, ((0, 0), (0, n_pad - n)), constant_values=big)
+        values = jnp.pad(values, ((0, 0), (0, n_pad - n)))
+    out_k, out_v = pl.pallas_call(
+        _bitonic_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((rows, n_pad), lambda i: (0, 0)),
+                  pl.BlockSpec((rows, n_pad), lambda i: (0, 0))],
+        out_specs=[pl.BlockSpec((rows, n_pad), lambda i: (0, 0)),
+                   pl.BlockSpec((rows, n_pad), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((rows, n_pad), keys.dtype),
+                   jax.ShapeDtypeStruct((rows, n_pad), values.dtype)],
+        interpret=interpret,
+    )(keys, values)
+    return out_k[:, :n], out_v[:, :n]

@@ -1,0 +1,110 @@
+"""Blocked (flash) attention forward Pallas kernel.
+
+The compute hot-spot of every attention architecture in the pool.  Classic
+VMEM-tiled formulation: Q tiles stay resident; K/V tiles stream through
+VMEM; the running (max, sum-exp, weighted-V) triple is carried in scratch
+across the sequential KV grid axis.  That running triple is exactly the
+(max, Sigma-exp) semigroup of repro.core.distributed.softmax_merge_pair —
+the invisible-funnel combine — so the kernel is the within-chip leaf of the
+same funnel that merges across-chip partials for sequence-sharded decode.
+
+Supports causal masking; GQA is handled by the wrapper (K/V heads broadcast
+to Q-head groups before the call).  MXU alignment: block_q/block_k multiples
+of 128, head_dim padded to 128 by the wrapper in ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  causal: bool, scale: float, block_q: int, block_k: int,
+                  kv_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    n_k = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+    # Causal skip: block where every key index > every query index.
+    run = (not causal) or (k_start <= q_start + block_q - 1)
+
+    @pl.when(jnp.asarray(run))
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+        v = v_ref[0].astype(jnp.float32)                  # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        k_idx = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+        s = jnp.where(k_idx < kv_len, s, NEG_INF)     # mask padded keys
+        if causal:
+            q_idx = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (block_q, block_k), 0)
+            s = jnp.where(q_idx >= k_idx, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])                   # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                              preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "kv_len", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, kv_len: int = -1,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q, k, v: (bh, seq, d) with matching bh (batch*heads, post-GQA
+    broadcast).  Returns (bh, seq_q, d).  seq must divide by the blocks
+    (wrapper pads); ``kv_len`` = true (pre-pad) KV length for masking."""
+    bh, sq, d = q.shape
+    _, sk, _ = k.shape
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    grid = (bh, sq // block_q, sk // block_k)
+    scale = 1.0 / (d ** 0.5)
+    kv_len = sk if kv_len < 0 else kv_len
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, causal=causal, scale=scale,
+                          block_q=block_q, block_k=block_k, kv_len=kv_len),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

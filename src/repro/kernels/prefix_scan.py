@@ -1,0 +1,67 @@
+"""Blocked prefix-sum Pallas kernel — Lemma 2.2's d-ary tree folded into VMEM.
+
+The paper's tree computes all-prefix-sums in two phases (bottom-up partial
+sums, top-down offset distribution).  On TPU the same structure becomes a
+*blocked* scan: the sequence is tiled into VMEM blocks; within a block the
+VPU computes a local cumulative sum (the subtree), and a scalar carry —
+the running "sum of everything to the left", i.e. the paper's s_{p(v)} —
+flows sequentially across grid steps (TPU grids execute in order, so the
+carry lives in a VMEM scratch accumulator).
+
+Used for MoE dispatch offsets (tokens-per-expert -> send offsets) and as the
+building block of the chunked SSM scan.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(x_ref, o_ref, carry_ref, *, exclusive: bool):
+    """Grid step i scans block i of the last axis, offset by the carry."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    x = x_ref[...]                                   # (rows, block_n)
+    local = jnp.cumsum(x, axis=-1)                   # bottom-up within block
+    carry = carry_ref[...]                           # s_{p(v)}: all to the left
+    if exclusive:
+        o_ref[...] = carry[:, None] + local - x      # top-down: shift by self
+    else:
+        o_ref[...] = carry[:, None] + local
+    carry_ref[...] = carry + local[:, -1]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "exclusive", "interpret"))
+def prefix_scan(x: jnp.ndarray, *, block_n: int = 512, exclusive: bool = False,
+                interpret: bool = False) -> jnp.ndarray:
+    """Cumulative sum along the last axis of a 2-D array (rows, n).
+
+    block_n: VMEM tile width (lane-aligned multiples of 128 on real TPU).
+    """
+    if x.ndim != 2:
+        raise ValueError("prefix_scan expects (rows, n)")
+    rows, n = x.shape
+    block_n = min(block_n, n)
+    if n % block_n != 0:
+        pad = block_n - n % block_n
+        xp = jnp.pad(x, ((0, 0), (0, pad)))
+        return prefix_scan(xp, block_n=block_n, exclusive=exclusive,
+                           interpret=interpret)[:, :n]
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        functools.partial(_scan_kernel, exclusive=exclusive),
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows, block_n), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((rows, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((rows, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((rows,), x.dtype)],
+        interpret=interpret,
+    )(x)

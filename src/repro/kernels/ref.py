@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function mirrors its kernel's public contract exactly; the kernel tests
+sweep shapes/dtypes and assert_allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def prefix_scan_ref(x: jnp.ndarray, exclusive: bool = False) -> jnp.ndarray:
+    c = jnp.cumsum(x, axis=-1)
+    return c - x if exclusive else c
+
+
+def bincount_ref(ids: jnp.ndarray, n_buckets: int) -> jnp.ndarray:
+    ok = (ids >= 0) & (ids < n_buckets)
+    return jnp.bincount(jnp.where(ok, ids, 0), weights=ok.astype(jnp.int32),
+                        length=n_buckets).astype(jnp.int32)
+
+
+def bitonic_sort_ref(keys: jnp.ndarray, values: jnp.ndarray):
+    order = jnp.argsort(keys, axis=-1, stable=True)
+    return (jnp.take_along_axis(keys, order, axis=-1),
+            jnp.take_along_axis(values, order, axis=-1))
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True) -> jnp.ndarray:
+    """(bh, s, d) reference softmax attention in f32."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (d ** 0.5)
+    if causal:
+        sq, sk = s.shape[-2], s.shape[-1]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssm_scan_ref(a: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """h_t = a_t * h_{t-1} + x_t via lax.scan (sequential ground truth)."""
+
+    def step(h, ax):
+        a_t, x_t = ax
+        h = a_t.astype(jnp.float32) * h + x_t.astype(jnp.float32)
+        return h, h
+
+    b, t, d = a.shape
+    h0 = jnp.zeros((b, d), jnp.float32)
+    _, hs = jax.lax.scan(step, h0, (jnp.swapaxes(a, 0, 1), jnp.swapaxes(x, 0, 1)))
+    return jnp.swapaxes(hs, 0, 1).astype(x.dtype)

@@ -1,0 +1,74 @@
+"""Chunked diagonal linear-recurrence scan Pallas kernel (SSM / RWKV core).
+
+Computes h_t = a_t * h_{t-1} + x_t elementwise over the channel axis — the
+state update shared by Mamba2's diagonal SSD recurrence and RWKV6's
+data-dependent-decay wkv state (per (head, key) channel after the wrapper's
+einsum factorization).
+
+Structure = Lemma 2.2's prefix tree under a different associative operator:
+(a, x) pairs compose as (a1,x1)∘(a2,x2) = (a1*a2, a2*x1 + x2).  Within a VMEM
+chunk the composition runs as a log-depth associative scan on the VPU
+(bottom-up/top-down phases inside the tile); the inter-chunk carry h — the
+paper's s_{p(v)} "everything to the left" — flows through scratch across the
+sequential grid, exactly like the blocked prefix_scan kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(a_ref, x_ref, o_ref, h_ref):
+    t_idx = pl.program_id(1)
+
+    @pl.when(t_idx == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0].astype(jnp.float32)                 # (block_t, d)
+    x = x_ref[0].astype(jnp.float32)
+
+    def compose(c1, c2):
+        a1, x1 = c1
+        a2, x2 = c2
+        return a1 * a2, a2 * x1 + x2
+
+    a_sc, x_sc = jax.lax.associative_scan(compose, (a, x), axis=0)
+    h_prev = h_ref[...]                              # carry h_{chunk-1}
+    h_all = x_sc + a_sc * h_prev[None, :]            # top-down offset
+    o_ref[0] = h_all.astype(o_ref.dtype)
+    h_ref[...] = h_all[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def ssm_scan(a: jnp.ndarray, x: jnp.ndarray, *, block_t: int = 256,
+             interpret: bool = False) -> jnp.ndarray:
+    """a, x: (batch, seq, d) -> h: (batch, seq, d) with
+    h[:, t] = a[:, t] * h[:, t-1] + x[:, t],  h[:, -1] = 0.
+
+    Grid: (batch, seq chunks); chunks run sequentially carrying h in VMEM.
+    """
+    if a.shape != x.shape or a.ndim != 3:
+        raise ValueError("ssm_scan expects matching (batch, seq, d)")
+    b, t, d = a.shape
+    block_t = min(block_t, t)
+    if t % block_t != 0:
+        pad = block_t - t % block_t
+        ap = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        return ssm_scan(ap, xp, block_t=block_t, interpret=interpret)[:, :t]
+    grid = (b, t // block_t)
+    return pl.pallas_call(
+        _ssm_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, block_t, d), lambda i, j: (i, j, 0)),
+                  pl.BlockSpec((1, block_t, d), lambda i, j: (i, j, 0))],
+        out_specs=pl.BlockSpec((1, block_t, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, t, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((d,), jnp.float32)],
+        interpret=interpret,
+    )(a, x)

@@ -1,0 +1,371 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input shape x
+mesh) cell against the production mesh, with no device allocation
+(ShapeDtypeStruct stand-ins), and record memory/cost/collective statistics
+for EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-0.5b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (including repro.*):
+# jax locks the device count at first initialization.  Do not move them.
+
+import argparse
+import json
+import pathlib
+import re
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCH_IDS, get_config, get_shape, SHAPES, shape_applicable
+from ..models import build_model
+from ..models import sharding as shmod
+from ..optim import make_optimizer
+from ..optim.api import state_shardings
+from ..optim.schedule import warmup_cosine
+from .mesh import make_production_mesh
+from . import specs as S
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(f32|bf16|f16|s32|u32|s8|u8|pred|s64|u64|f64)"
+                       r"\[([\d,]*)\]")
+_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+          "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8}
+
+
+def _first_shape_bytes(line: str) -> int:
+    """Bytes of the result shape(s) on an HLO op line (handles tuples)."""
+    total = 0
+    # result is everything left of ' = '; ops like all-to-all may return
+    # tuples — count every shape before the op name.
+    lhs = line.split(" = ", 1)
+    region = lhs[1] if len(lhs) == 2 else line
+    opidx = None
+    for op in COLLECTIVE_OPS:
+        i = region.find(op + "(")
+        if i >= 0:
+            opidx = i
+            break
+    region = region[:opidx] if opidx is not None else region
+    for m in _SHAPE_RE.finditer(region):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum per-device result bytes of every collective op in optimized HLO.
+
+    CPU-backend correction: the CPU lowering promotes bf16 dot outputs to
+    f32, so TP partial-sum all-reduces appear at 2x their TPU width.  Ops
+    whose reduction computation is a ``*_promoted`` clone are counted at
+    half weight; both raw and corrected totals are recorded."""
+    out = {op: 0 for op in COLLECTIVE_OPS}
+    counts = {op: 0 for op in COLLECTIVE_OPS}
+    raw_total = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        for op in COLLECTIVE_OPS:
+            # match op invocations, e.g. "%x = bf16[..] all-reduce(" or
+            # "all-reduce-start("
+            if re.search(rf"\b{op}(-start)?\(", ls):
+                b = _first_shape_bytes(ls)
+                raw_total += b
+                if "promoted" in ls and " f32[" in " " + ls:
+                    b //= 2          # bf16 on the TPU target
+                out[op] += b
+                counts[op] += 1
+                break
+    out_ct = {f"n_{k}": v for k, v in counts.items()}
+    out.update(out_ct)
+    out["raw_total"] = raw_total
+    return out
+
+
+def collective_op_table(hlo_text: str):
+    """Aggregated (op, result_shape, promoted) -> (count, bytes) table —
+    stored in the cell JSON so layout analyses re-run offline."""
+    import collections
+    agg = collections.Counter()
+    cnt = collections.Counter()
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        for op in COLLECTIVE_OPS:
+            if re.search(rf"\b{op}(-start)?\(", ls):
+                m = _SHAPE_RE.search(ls)
+                shape = m.group(0) if m else "?"
+                promoted = "promoted" in ls
+                key = (op, shape, promoted)
+                agg[key] += _first_shape_bytes(ls)
+                cnt[key] += 1
+                break
+    return [{"op": op, "shape": shape, "promoted": prom,
+             "count": cnt[(op, shape, prom)], "bytes": b}
+            for (op, shape, prom), b in agg.most_common()]
+
+
+def _mem_stats(compiled) -> Dict[str, Any]:
+    try:
+        m = compiled.memory_analysis()
+    except Exception:
+        return {"available": False}
+    if m is None:
+        return {"available": False}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    return {"available": True,
+            **{k: int(getattr(m, k, 0) or 0) for k in keys}}
+
+
+def _cost_stats(compiled) -> Dict[str, float]:
+    try:
+        c = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if c is None:
+        return {}
+    if isinstance(c, (list, tuple)):
+        c = c[0]
+    return {k: float(v) for k, v in c.items()
+            if k in ("flops", "bytes accessed", "transcendentals",
+                     "utilization operand 0 {}", "optimal_seconds")
+            or k.startswith("bytes accessed")}
+
+
+def build_train_step(cfg, model, opt):
+    accum = max(1, cfg.grad_accum)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(model.loss_fn, has_aux=True)(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if accum > 1:
+            # microbatch gradient accumulation: batch (B, ...) ->
+            # (accum, B/accum, ...) scanned; grads accumulate in the
+            # parameter dtype, sharded like the parameters (ZeRO).
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape((accum, x.shape[0] // accum)
+                                    + x.shape[1:]), batch)
+
+            def body(acc, mb):
+                (loss, _), g = grads_of(params, mb)
+                acc_g, acc_l = acc
+                acc_g = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(a.dtype), acc_g, g)
+                return (acc_g, acc_l + loss), None
+
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, p.dtype), params)
+            (gsum, lsum), _ = jax.lax.scan(body, (zero, jnp.float32(0)),
+                                           micro)
+            grads = jax.tree_util.tree_map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+        else:
+            (loss, metrics), grads = grads_of(params, batch)
+        step = opt_state[0]
+        lr = warmup_cosine(step, peak_lr=3e-4, warmup_steps=2000,
+                           total_steps=100_000)
+        new_params, new_state = opt.update(grads, opt_state, params, lr)
+        return new_params, new_state, loss
+    return train_step
+
+
+def build_serve_step(cfg, model):
+    def serve_step(params, tok, state):
+        logits, new_state = model.decode_step(params, tok, state)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_state
+    return serve_step
+
+
+def build_prefill_step(cfg, model, max_len: int):
+    def prefill_step(params, batch):
+        batch = dict(batch, max_len=max_len)
+        logits, state = model.prefill(params, batch)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return prefill_step
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides: Optional[Dict[str, Any]] = None,
+             save: bool = True, verbose: bool = True,
+             depth_override: Optional[int] = None) -> Dict[str, Any]:
+    cfg = get_config(arch, **(overrides or {}))
+    if depth_override is not None:
+        import dataclasses
+        n_inv = max(1, depth_override // max(cfg.shared_attn_period, 1)) \
+            if cfg.shared_attn_period else 0
+        cfg = dataclasses.replace(cfg, n_layers=depth_override,
+                                  enc_layers=min(cfg.enc_layers,
+                                                 depth_override),
+                                  scan_layers=False)
+    shape = get_shape(shape_name)
+    ok, reason = shape_applicable(cfg, shape)
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+        "kind": shape.kind,
+    }
+    if not ok:
+        record["skipped"] = reason
+        if verbose:
+            print(f"[dryrun] SKIP {arch} x {shape_name}: {reason}")
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg)
+    opt = make_optimizer(cfg)
+    t0 = time.time()
+
+    with shmod.use_mesh(mesh):
+        pshapes, p_sh = S.param_specs(cfg, mesh)
+        if shape.kind == "train":
+            ostate = jax.eval_shape(opt.init, pshapes)
+            p_specs = shmod.tree_param_specs(pshapes)
+            o_sh = state_shardings(opt, p_specs, pshapes, mesh)
+            batch, b_sh = S.train_batch_specs(cfg, shape, mesh)
+            step_fn = build_train_step(cfg, model, opt)
+            jitted = jax.jit(step_fn,
+                             in_shardings=(p_sh, o_sh, b_sh),
+                             out_shardings=(p_sh, o_sh,
+                                            NamedSharding(mesh, P())))
+            lowered = jitted.lower(pshapes, ostate, batch)
+        elif shape.kind == "prefill":
+            batch, b_sh = S.prefill_batch_specs(cfg, shape, mesh)
+            # VLM: the patch-embedding prefix occupies cache slots too
+            extra = cfg.n_patches if cfg.family == "vlm" else 0
+            step_fn = build_prefill_step(cfg, model,
+                                         max_len=shape.seq_len + extra)
+            bs = S.batch_spec(mesh, shape.global_batch)
+            jitted = jax.jit(step_fn,
+                             in_shardings=(p_sh, b_sh),
+                             out_shardings=NamedSharding(mesh, P(bs)))
+            lowered = jitted.lower(pshapes, batch)
+        else:                                   # decode
+            state_shapes, st_sh = S.decode_state_specs(cfg, shape, mesh)
+            tok, tok_sh = S.decode_input_specs(cfg, shape, mesh)
+            step_fn = build_serve_step(cfg, model)
+            jitted = jax.jit(step_fn,
+                             in_shardings=(p_sh, tok_sh, st_sh),
+                             out_shardings=(tok_sh, st_sh))
+            lowered = jitted.lower(pshapes, tok, state_shapes)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    hlo_text = compiled.as_text()
+    record.update({
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": _mem_stats(compiled),
+        "cost": _cost_stats(compiled),
+        "collectives": collective_bytes(hlo_text),
+        "collective_ops": collective_op_table(hlo_text),
+        "n_layers": cfg.n_layers,
+        "n_params": cfg.n_params(),
+        "n_active_params": cfg.n_active_params(),
+    })
+    if verbose:
+        mem = record["memory"]
+        print(f"[dryrun] OK {arch} x {shape_name} x {record['mesh']} "
+              f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)")
+        if mem.get("available"):
+            per_dev = (mem.get("argument_size_in_bytes", 0)
+                       + mem.get("temp_size_in_bytes", 0))
+            print(f"  memory/device: args+temp = {per_dev/1e9:.2f} GB "
+                  f"(args {mem.get('argument_size_in_bytes',0)/1e9:.2f}, "
+                  f"temp {mem.get('temp_size_in_bytes',0)/1e9:.2f})")
+        if record["cost"]:
+            print(f"  cost: flops={record['cost'].get('flops', 0):.3e} "
+                  f"bytes={record['cost'].get('bytes accessed', 0):.3e}")
+        coll = record["collectives"]
+        tot = sum(coll[op] for op in COLLECTIVE_OPS)
+        print(f"  collectives/device: {tot/1e9:.3f} GB "
+              + " ".join(f"{op}:{coll[op]/1e6:.1f}MB({coll['n_'+op]})"
+                         for op in COLLECTIVE_OPS if coll[op]))
+    if save:
+        RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+        suffix = f"_d{depth_override}" if depth_override else ""
+        name = f"{arch}_{shape_name}_{record['mesh']}{suffix}.json"
+        (RESULTS_DIR / name).write_text(json.dumps(record, indent=2))
+    return record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS))
+    ap.add_argument("--shape", choices=[s.name for s in SHAPES])
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) cell")
+    ap.add_argument("--depth", type=int, default=None,
+                    help="override layer count (roofline depth proxies)")
+    ap.add_argument("--dispatch", choices=["einsum", "shuffle"], default=None)
+    ap.add_argument("--attn", choices=["xla", "flash"], default=None)
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="skip cells whose result JSON already exists")
+    args = ap.parse_args(argv)
+
+    overrides = {}
+    if args.dispatch:
+        overrides["moe_dispatch"] = args.dispatch
+    if args.attn:
+        overrides["attn_impl"] = args.attn
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for sh in SHAPES:
+                cells.append((arch, sh.name))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, sh in cells:
+        for mp in meshes:
+            mesh_name = "pod2x16x16" if mp else "pod16x16"
+            suffix = f"_d{args.depth}" if args.depth else ""
+            if (args.skip_existing and
+                    (RESULTS_DIR / f"{arch}_{sh}_{mesh_name}{suffix}.json"
+                     ).exists()):
+                continue
+            try:
+                run_cell(arch, sh, mp, overrides=overrides,
+                         depth_override=args.depth)
+            except Exception as e:
+                failures.append((arch, sh, mp, repr(e)))
+                print(f"[dryrun] FAIL {arch} x {sh} multi_pod={mp}: {e}",
+                      file=sys.stderr)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:", file=sys.stderr)
+        for f in failures:
+            print("  ", *f, file=sys.stderr)
+        sys.exit(1)
+    print("\nall requested dry-run cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Hillclimb profiling tool: compile one (arch x shape) cell at reduced
+depth and list every collective op with its result shape/bytes, sorted by
+total bytes — the 'profile' of the dry-run methodology (no real hardware:
+the optimized per-device HLO is the evidence).
+
+  PYTHONPATH=src python -m repro.launch.inspect_hlo --arch granite-8b \
+      --shape prefill_32k --depth 4
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import collections
+import re
+
+from .dryrun import (COLLECTIVE_OPS, _SHAPE_RE, _first_shape_bytes,
+                     run_cell, RESULTS_DIR)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--depth", type=int, default=4)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--dispatch", default=None)
+    ap.add_argument("--top", type=int, default=20)
+    args = ap.parse_args(argv)
+
+    import jax
+    from ..configs import get_config, get_shape
+    from ..models import build_model, sharding as shmod
+    from ..optim import make_optimizer
+    from ..optim.api import state_shardings
+    from .mesh import make_production_mesh
+    from . import specs as S
+    from .dryrun import build_train_step, build_serve_step, build_prefill_step
+    import dataclasses
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    overrides = {}
+    if args.dispatch:
+        overrides["moe_dispatch"] = args.dispatch
+    cfg = get_config(args.arch, **overrides)
+    cfg = dataclasses.replace(cfg, n_layers=args.depth,
+                              enc_layers=min(cfg.enc_layers, args.depth),
+                              scan_layers=False)
+    shape = get_shape(args.shape)
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    model = build_model(cfg)
+    opt = make_optimizer(cfg)
+
+    with shmod.use_mesh(mesh):
+        pshapes, p_sh = S.param_specs(cfg, mesh)
+        if shape.kind == "train":
+            ostate = jax.eval_shape(opt.init, pshapes)
+            o_sh = state_shardings(opt, shmod.tree_param_specs(pshapes),
+                                   pshapes, mesh)
+            batch, b_sh = S.train_batch_specs(cfg, shape, mesh)
+            fn = build_train_step(cfg, model, opt)
+            lowered = jax.jit(fn, in_shardings=(p_sh, o_sh, b_sh),
+                              out_shardings=(p_sh, o_sh,
+                                             NamedSharding(mesh, P()))
+                              ).lower(pshapes, ostate, batch)
+        elif shape.kind == "prefill":
+            batch, b_sh = S.prefill_batch_specs(cfg, shape, mesh)
+            fn = build_prefill_step(cfg, model, max_len=shape.seq_len)
+            bs = S.batch_spec(mesh, shape.global_batch)
+            lowered = jax.jit(fn, in_shardings=(p_sh, b_sh),
+                              out_shardings=NamedSharding(mesh, P(bs))
+                              ).lower(pshapes, batch)
+        else:
+            st, st_sh = S.decode_state_specs(cfg, shape, mesh)
+            tok, tok_sh = S.decode_input_specs(cfg, shape, mesh)
+            fn = build_serve_step(cfg, model)
+            lowered = jax.jit(fn, in_shardings=(p_sh, tok_sh, st_sh),
+                              out_shardings=(tok_sh, st_sh)
+                              ).lower(pshapes, tok, st)
+        compiled = lowered.compile()
+
+    txt = compiled.as_text()
+    buckets = collections.Counter()
+    counts = collections.Counter()
+    examples = {}
+    for line in txt.splitlines():
+        ls = line.strip()
+        for op in COLLECTIVE_OPS:
+            if re.search(rf"\b{op}(-start)?\(", ls):
+                nbytes = _first_shape_bytes(ls)
+                m = _SHAPE_RE.search(ls)
+                shape_str = m.group(0) if m else "?"
+                key = (op, shape_str)
+                buckets[key] += nbytes
+                counts[key] += 1
+                examples.setdefault(key, ls[:160])
+                break
+    total = sum(buckets.values())
+    print(f"=== {args.arch} x {args.shape} depth={args.depth} "
+          f"{'multi' if args.multi_pod else 'single'}-pod ===")
+    print(f"total collective bytes/device: {total/1e9:.3f} GB "
+          f"(depth-{args.depth} proxy)\n")
+    for (op, shp), b in buckets.most_common(args.top):
+        print(f"{b/1e6:9.1f} MB  x{counts[(op, shp)]:<4d} {op:<20s} {shp}")
+    mem = compiled.memory_analysis()
+    if mem:
+        print(f"\nargs+temp GB/dev: "
+              f"{(mem.argument_size_in_bytes + mem.temp_size_in_bytes)/1e9:.2f}")
+    c = compiled.cost_analysis()
+    if c:
+        print(f"flops: {c.get('flops', 0):.3e}  "
+              f"bytes: {c.get('bytes accessed', 0):.3e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""ShapeDtypeStruct input specs + sharding specs for every (arch x shape)
+cell — the dry-run's stand-ins (weak-type-correct, shardable, no device
+allocation)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..models import build_model
+from ..models import sharding as shmod
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _div(n: int, mesh: Mesh, axes) -> bool:
+    size = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        size *= mesh.shape[a]
+    return n % size == 0
+
+
+def batch_spec(mesh: Mesh, n: int) -> Optional[Tuple[str, ...]]:
+    ba = _batch_axes(mesh)
+    if _div(n, mesh, ba):
+        return ba
+    if _div(n, mesh, ("data",)):
+        return ("data",)
+    return None
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh):
+    """(ShapeDtypeStructs, NamedShardings) for the training batch."""
+    b, s = shape.global_batch, shape.seq_len
+    bs = batch_spec(mesh, b)
+    structs: Dict[str, Any] = {
+        "tokens": SDS((b, s), jnp.int32),
+        "labels": SDS((b, s), jnp.int32),
+    }
+    specs: Dict[str, P] = {
+        "tokens": P(bs, None),
+        "labels": P(bs, None),
+    }
+    if cfg.family == "vlm":
+        structs["patch_embeds"] = SDS((b, cfg.n_patches, cfg.d_model),
+                                      jnp.dtype(cfg.compute_dtype))
+        specs["patch_embeds"] = P(bs, None, None)
+    if cfg.family == "encdec":
+        structs["frames"] = SDS((b, cfg.n_frames, cfg.d_model),
+                                jnp.dtype(cfg.compute_dtype))
+        specs["frames"] = P(bs, None, None)
+    shardings = {k: NamedSharding(mesh, v) for k, v in specs.items()}
+    return structs, shardings
+
+
+def decode_state_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh):
+    """Specs for the decode state: caches sharded batch x heads; when the
+    batch is too small to shard (long_500k: B=1) the KV *sequence* dim is
+    sharded over 'data' instead — attention reductions over that dim then
+    lower to the (max, sum-exp) funnel collectives (flash-decode)."""
+    model = build_model(cfg)
+    b = shape.global_batch
+    state_shapes = jax.eval_shape(
+        lambda: model.init_decode_state(b, shape.seq_len))
+    bs = batch_spec(mesh, b)
+    seq_shard = bs is None and _div(shape.seq_len, mesh, ("data",))
+
+    def spec_for(path, leaf):
+        name = "/".join(str(getattr(e, "key", getattr(e, "name", e)))
+                        for e in path)
+        nd = len(leaf.shape)
+        if nd == 1:                                   # pos
+            return P(None)
+        # stacked caches: (L, B, T, kvh, hd) / mamba (L, B, h, ds, e) / ...
+        axes = [None] * nd
+        if nd >= 2 and leaf.shape[1] == b and bs is not None:
+            axes[1] = bs
+        if "k" in name or "v" in name or "S" in name:
+            if nd == 5 and leaf.shape[3] == cfg.n_kv_heads and _div(
+                    leaf.shape[3], mesh, ("model",)):
+                axes[3] = "model"                     # KV heads over TP
+            elif nd == 5 and _div(leaf.shape[4], mesh, ("model",)):
+                # GQA with kv_heads < |model|: shard the HEAD DIM instead —
+                # scores become partial dot-products combined by a
+                # Sum-funnel psum (tiny: (b,h,1,t)); cache memory drops
+                # |model|x.  See EXPERIMENTS.md §Perf.
+                axes[4] = "model"
+            if nd == 5 and seq_shard and leaf.shape[2] == shape.seq_len:
+                axes[2] = "data"                      # sequence-sharded KV
+        if "mamba_h" in name and nd == 5 and _div(leaf.shape[2], mesh,
+                                                  ("model",)):
+            axes[2] = "model"
+        return P(*axes)
+
+    specs = jax.tree_util.tree_map_with_path(spec_for, state_shapes)
+    shardings = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+    return state_shapes, shardings
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh):
+    b = shape.global_batch
+    bs = batch_spec(mesh, b)
+    tok = SDS((b,), jnp.int32)
+    tok_sh = NamedSharding(mesh, P(bs))
+    return tok, tok_sh
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh):
+    structs, shardings = train_batch_specs(cfg, shape, mesh)
+    del structs["labels"], shardings["labels"]
+    return structs, shardings
+
+
+def param_specs(cfg: ArchConfig, mesh: Mesh):
+    """(param ShapeDtypeStructs, NamedShardings) — params never materialize."""
+    model = build_model(cfg)
+    shmod.rules_for_config(cfg)
+    with shmod.use_mesh(mesh):
+        pshapes = jax.eval_shape(model.init, SDS((2,), jnp.uint32))
+        shardings = shmod.tree_shardings(pshapes, mesh)
+    return pshapes, shardings

@@ -1,0 +1,60 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --reduced --steps 50 --batch 8 --seq 64 [--ckpt-dir /tmp/run1]
+
+On a real TPU slice this launches one process per host (jax.distributed
+initialization from the TPU environment) and builds the production mesh; on
+CPU it uses however many (fake or real) local devices exist.  The loop is
+restart-safe: re-launching with the same --ckpt-dir resumes exactly.
+"""
+import argparse
+import json
+
+import jax
+
+from ..configs import ARCH_IDS, get_config
+from ..train import Trainer, TrainConfig
+from .mesh import make_host_mesh, make_production_mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", choices=["host", "single", "multi", "none"],
+                    default="none")
+    ap.add_argument("--pod-grad-mode", choices=["auto", "compressed"],
+                    default="auto")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    mesh = {"host": make_host_mesh,
+            "single": lambda: make_production_mesh(multi_pod=False),
+            "multi": lambda: make_production_mesh(multi_pod=True),
+            "none": lambda: None}[args.mesh]()
+
+    tc = TrainConfig(arch=cfg, global_batch=args.batch, seq_len=args.seq,
+                     steps=args.steps, peak_lr=args.lr,
+                     ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                     seed=args.seed, pod_grad_mode=args.pod_grad_mode)
+    trainer = Trainer(tc, mesh=mesh)
+    if trainer.maybe_resume():
+        print(f"resumed from step {trainer.step}")
+    result = trainer.train()
+    print(json.dumps({"arch": cfg.name, "steps": trainer.step,
+                      "final_loss": result["final_loss"],
+                      "wall_s": round(result["wall_s"], 1),
+                      "history": result["history"][-5:]}))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,206 @@
+"""Whisper-style encoder-decoder backbone (audio frontend is a STUB).
+
+Per the assignment, the conv frontend is not modeled: ``input_specs`` feeds
+precomputed frame embeddings (B, n_frames, d_model).  The encoder is
+bidirectional self-attention; the decoder is causal self-attention +
+cross-attention with GELU MLPs, LayerNorm, and biases — the whisper flavor.
+
+Decode state: decoder self-attn KV caches + cross-attn KV (computed once at
+prefill from the encoder output).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import sharding
+from .layers import (Params, cdtype, init_norm, apply_norm, init_embed,
+                     apply_embed, init_lm_head, apply_lm_head, init_mlp,
+                     apply_mlp, init_attention, apply_attention,
+                     attention_prefill, attention_decode, cross_attention,
+                     init_cross_kv, cross_entropy)
+from .transformer import Model, _remat
+
+
+def _sinusoid(length: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(length)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    angle = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+class EncDecState(NamedTuple):
+    self_k: jnp.ndarray       # (L, B, T, kvh, hd)
+    self_v: jnp.ndarray
+    cross_k: jnp.ndarray      # (L, B, F, kvh, hd)
+    cross_v: jnp.ndarray
+    pos: jnp.ndarray
+
+
+def build_encdec(cfg: ArchConfig) -> Model:
+    nl, ne = cfg.n_layers, cfg.enc_layers
+
+    def init(key):
+        ks = jax.random.split(key, 6)
+        ek = jax.random.split(ks[0], ne)
+        dk = jax.random.split(ks[1], nl)
+        enc_layers = [
+            {"attn_norm": init_norm(k, cfg, kind="layernorm"),
+             "attn": init_attention(k, cfg),
+             "mlp_norm": init_norm(jax.random.fold_in(k, 1), cfg,
+                                   kind="layernorm"),
+             "mlp": init_mlp(jax.random.fold_in(k, 2), cfg, bias=True)}
+            for k in ek]
+        dec_layers = [
+            {"attn_norm": init_norm(k, cfg, kind="layernorm"),
+             "attn": init_attention(k, cfg),
+             "xattn_norm": init_norm(jax.random.fold_in(k, 1), cfg,
+                                     kind="layernorm"),
+             "xattn": init_attention(jax.random.fold_in(k, 2), cfg),
+             "mlp_norm": init_norm(jax.random.fold_in(k, 3), cfg,
+                                   kind="layernorm"),
+             "mlp": init_mlp(jax.random.fold_in(k, 4), cfg, bias=True)}
+            for k in dk]
+        return {
+            "embed": init_embed(ks[2], cfg),
+            "enc_norm": init_norm(ks[3], cfg, kind="layernorm"),
+            "dec_norm": init_norm(ks[4], cfg, kind="layernorm"),
+            "lm_head": init_lm_head(ks[5], cfg),
+            "enc": enc_layers,
+            "dec": dec_layers,
+        }
+
+    def encode(params, frames):
+        """frames: (B, F, d) precomputed stub embeddings."""
+        x = frames.astype(cdtype(cfg))
+        x = x + _sinusoid(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+        x = sharding.shard(x, "batch", None, None)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+        def enc_block(lp, h):
+            h = h + apply_attention(lp["attn"], cfg,
+                                    apply_norm(lp["attn_norm"], cfg, h,
+                                               kind="layernorm"),
+                                    positions, causal=False)
+            return h + apply_mlp(lp["mlp"], cfg,
+                                 apply_norm(lp["mlp_norm"], cfg, h,
+                                            kind="layernorm"))
+
+        block = _remat(enc_block, cfg)
+        for lp in params["enc"]:
+            x = block(lp, x)
+        return apply_norm(params["enc_norm"], cfg, x, kind="layernorm")
+
+    def _decoder_train(params, enc_out, tokens):
+        b, s = tokens.shape
+        x = apply_embed(params["embed"], cfg, tokens)
+        x = x + _sinusoid(s, cfg.d_model).astype(x.dtype)[None]
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+        def dec_block(lp, h):
+            h = h + apply_attention(lp["attn"], cfg,
+                                    apply_norm(lp["attn_norm"], cfg, h,
+                                               kind="layernorm"),
+                                    positions, causal=True)
+            kx, vx = init_cross_kv(lp["xattn"], cfg, enc_out)
+            h = h + cross_attention(lp["xattn"], cfg,
+                                    apply_norm(lp["xattn_norm"], cfg, h,
+                                               kind="layernorm"), kx, vx)
+            return h + apply_mlp(lp["mlp"], cfg,
+                                 apply_norm(lp["mlp_norm"], cfg, h,
+                                            kind="layernorm"))
+
+        block = _remat(dec_block, cfg)
+        for lp in params["dec"]:
+            x = block(lp, x)
+        return apply_norm(params["dec_norm"], cfg, x, kind="layernorm")
+
+    def loss_fn(params, batch):
+        enc_out = encode(params, batch["frames"])
+        x = _decoder_train(params, enc_out, batch["tokens"])
+        logits = apply_lm_head(params["lm_head"], cfg, x)
+        loss = cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+        return loss, {"ce": loss}
+
+    def init_decode_state(batch_size: int, max_len: int) -> EncDecState:
+        dt = cdtype(cfg)
+        kvh, hd = cfg.n_kv_heads, cfg.hd
+        return EncDecState(
+            self_k=jnp.zeros((nl, batch_size, max_len, kvh, hd), dt),
+            self_v=jnp.zeros((nl, batch_size, max_len, kvh, hd), dt),
+            cross_k=jnp.zeros((nl, batch_size, max(cfg.n_frames, 1), kvh, hd),
+                              dt),
+            cross_v=jnp.zeros((nl, batch_size, max(cfg.n_frames, 1), kvh, hd),
+                              dt),
+            pos=jnp.zeros((batch_size,), jnp.int32))
+
+    def prefill(params, batch):
+        """Encode frames, prefill the decoder on the prompt tokens."""
+        enc_out = encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        max_len = batch.get("max_len", s)
+        x = apply_embed(params["embed"], cfg, tokens)
+        x = x + _sinusoid(s, cfg.d_model).astype(x.dtype)[None]
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        sk, sv, cks, cvs = [], [], [], []
+        for lp in params["dec"]:
+            z = apply_norm(lp["attn_norm"], cfg, x, kind="layernorm")
+            h, (k, v) = attention_prefill(lp["attn"], cfg, z, positions)
+            pad = max_len - s
+            sk.append(jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))))
+            sv.append(jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))))
+            x = x + h
+            kx, vx = init_cross_kv(lp["xattn"], cfg, enc_out)
+            cks.append(kx); cvs.append(vx)
+            h = cross_attention(lp["xattn"], cfg,
+                                apply_norm(lp["xattn_norm"], cfg, x,
+                                           kind="layernorm"), kx, vx)
+            x = x + h
+            x = x + apply_mlp(lp["mlp"], cfg,
+                              apply_norm(lp["mlp_norm"], cfg, x,
+                                         kind="layernorm"))
+        x = apply_norm(params["dec_norm"], cfg, x[:, -1:], kind="layernorm")
+        logits = apply_lm_head(params["lm_head"], cfg, x)[:, 0]
+        state = EncDecState(self_k=jnp.stack(sk), self_v=jnp.stack(sv),
+                            cross_k=jnp.stack(cks), cross_v=jnp.stack(cvs),
+                            pos=jnp.full((b,), s, jnp.int32))
+        return logits, state
+
+    def decode_step(params, tok, state: EncDecState):
+        b = tok.shape[0]
+        x = apply_embed(params["embed"], cfg, tok[:, None])
+        # sinusoidal position of the current token
+        d = cfg.d_model
+        dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+        ang = state.pos[:, None].astype(jnp.float32) / jnp.power(
+            10000.0, 2 * dim / d)
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+        x = x + pe[:, None, :].astype(x.dtype)
+        sk, sv = [], []
+        for i, lp in enumerate(params["dec"]):
+            z = apply_norm(lp["attn_norm"], cfg, x, kind="layernorm")
+            h, k, v = attention_decode(lp["attn"], cfg, z, state.self_k[i],
+                                       state.self_v[i], state.pos)
+            sk.append(k); sv.append(v)
+            x = x + h
+            h = cross_attention(lp["xattn"], cfg,
+                                apply_norm(lp["xattn_norm"], cfg, x,
+                                           kind="layernorm"),
+                                state.cross_k[i], state.cross_v[i])
+            x = x + h
+            x = x + apply_mlp(lp["mlp"], cfg,
+                              apply_norm(lp["mlp_norm"], cfg, x,
+                                         kind="layernorm"))
+        x = apply_norm(params["dec_norm"], cfg, x, kind="layernorm")
+        logits = apply_lm_head(params["lm_head"], cfg, x)[:, 0]
+        new = EncDecState(self_k=jnp.stack(sk), self_v=jnp.stack(sv),
+                          cross_k=state.cross_k, cross_v=state.cross_v,
+                          pos=state.pos + 1)
+        return logits, new
+
+    return Model(cfg=cfg, init=init, loss_fn=loss_fn, prefill=prefill,
+                 decode_step=decode_step, init_decode_state=init_decode_state)

@@ -1,0 +1,374 @@
+"""Shared neural layers: norms, rotary, GQA attention, MLP, embeddings.
+
+Functional style: ``init_*`` builds a params dict, ``apply``-style functions
+consume it.  All big matmuls run in ``cfg.compute_dtype`` with params stored
+in ``cfg.param_dtype``; sharding constraints use the logical axes of
+:mod:`repro.models.sharding`.
+
+Attention has three execution paths:
+  * plain einsum (short sequences),
+  * query-chunked online-softmax (long sequences: flash algorithm in pure
+    lax, GSPMD-shardable, O(S) memory) — the default for prefill_32k+,
+  * the Pallas flash kernel (attn_impl='flash', TPU hot path).
+The online-softmax carry is the (max, sum-exp) semigroup — the same
+invisible-funnel combine used across chips for sequence-sharded decode
+(repro.core.distributed.softmax_merge_*).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import sharding
+from ..kernels import ops as kops
+
+Params = Dict[str, Any]
+
+
+def cdtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def residual_shard(cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Constraint for residual-stream (B, S, D) activations.  With
+    cfg.seq_shard_activations the sequence dim shards over the TP axis
+    (Megatron SP) — scan-remat carries shrink |model|x."""
+    seq_axis = "model" if cfg.seq_shard_activations else None
+    return sharding.shard(x, "batch", seq_axis, None)
+
+
+def pdtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0]
+    s = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * s).astype(dtype)
+
+
+# ----------------------------------------------------------------- norms
+def init_norm(key, cfg: ArchConfig, kind: Optional[str] = None) -> Params:
+    kind = kind or cfg.norm
+    d = cfg.d_model
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), pdtype(cfg))}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), pdtype(cfg)),
+                "bias": jnp.zeros((d,), pdtype(cfg))}
+    if kind == "nonparam_ln":          # OLMo: no affine parameters
+        return {}
+    raise ValueError(kind)
+
+
+def apply_norm(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+               kind: Optional[str] = None) -> jnp.ndarray:
+    kind = kind or cfg.norm
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + 1e-6)
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+    if kind == "layernorm":
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- rotary
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, hd); positions: (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., s, half)
+    cos = jnp.cos(angles)[..., None, :]                         # (..., s, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- embeddings
+def init_embed(key, cfg: ArchConfig) -> Params:
+    # padded_vocab rows: the extra rows never receive gradient (no token id
+    # reaches them) and their logits are masked in apply_lm_head.
+    return {"table": _dense_init(key, (cfg.padded_vocab, cfg.d_model),
+                                 pdtype(cfg), scale=0.02)}
+
+
+def apply_embed(p: Params, cfg: ArchConfig, ids: jnp.ndarray) -> jnp.ndarray:
+    out = p["table"].astype(cdtype(cfg))[ids]
+    return residual_shard(cfg, out)
+
+
+def init_lm_head(key, cfg: ArchConfig) -> Params:
+    return {"w": _dense_init(key, (cfg.d_model, cfg.padded_vocab),
+                             pdtype(cfg))}
+
+
+def apply_lm_head(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                  embed: Optional[Params] = None) -> jnp.ndarray:
+    """Returns logits over ``padded_vocab`` with the padding tail masked to
+    -inf (so softmax/CE see exactly the real vocabulary)."""
+    if cfg.tie_embeddings and embed is not None:
+        w = embed["table"].astype(cdtype(cfg)).T
+    else:
+        w = p["w"].astype(cdtype(cfg))
+    logits = x @ w
+    logits = sharding.shard(logits, "batch", None, "model")
+    if cfg.padded_vocab != cfg.vocab_size:
+        vocab_ids = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                             logits.ndim - 1)
+        logits = jnp.where(vocab_ids < cfg.vocab_size, logits, -1e30)
+    return logits
+
+
+# -------------------------------------------------------------------- MLP
+def init_mlp(key, cfg: ArchConfig, d_ff: Optional[int] = None,
+             bias: bool = False) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_up": _dense_init(ks[0], (d, f), pdtype(cfg)),
+         "w_down": _dense_init(ks[1], (f, d), pdtype(cfg))}
+    if cfg.act == "silu":
+        p["w_gate"] = _dense_init(ks[2], (d, f), pdtype(cfg))
+    if bias:
+        p["b_up"] = jnp.zeros((f,), pdtype(cfg))
+        p["b_down"] = jnp.zeros((d,), pdtype(cfg))
+    return p
+
+
+def apply_mlp(p: Params, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    dt = cdtype(cfg)
+    up = x @ p["w_up"].astype(dt)
+    if "b_up" in p:
+        up = up + p["b_up"].astype(dt)
+    if cfg.act == "silu":
+        gate = jax.nn.silu(x @ p["w_gate"].astype(dt))
+        h = gate * up
+    else:
+        h = jax.nn.gelu(up)
+    h = sharding.shard(h, "batch", None, "model")
+    out = h @ p["w_down"].astype(dt)
+    if "b_down" in p:
+        out = out + p["b_down"].astype(dt)
+    return residual_shard(cfg, out)
+
+
+# -------------------------------------------------------------- attention
+def init_attention(key, cfg: ArchConfig) -> Params:
+    d, hd = cfg.d_model, cfg.hd
+    h, kvh = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {"wq": _dense_init(ks[0], (d, h * hd), pdtype(cfg)),
+         "wk": _dense_init(ks[1], (d, kvh * hd), pdtype(cfg)),
+         "wv": _dense_init(ks[2], (d, kvh * hd), pdtype(cfg)),
+         "wo": _dense_init(ks[3], (h * hd, d), pdtype(cfg))}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), pdtype(cfg))
+        p["bk"] = jnp.zeros((kvh * hd,), pdtype(cfg))
+        p["bv"] = jnp.zeros((kvh * hd,), pdtype(cfg))
+    return p
+
+
+def _project_qkv(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                 positions: jnp.ndarray):
+    dt = cdtype(cfg)
+    b, s, _ = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"].astype(dt), k + p["bk"].astype(dt), v + p["bv"].astype(dt)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kvh, hd)
+    v = v.reshape(b, s, kvh, hd)
+    if cfg.use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = sharding.shard(q, "batch", None, "model", None)
+    k = sharding.shard(k, "batch", None, "model", None)
+    v = sharding.shard(v, "batch", None, "model", None)
+    return q, k, v
+
+
+def _shard_scores(s: jnp.ndarray) -> jnp.ndarray:
+    """Scores (b, h, sq, t): shard heads over TP when divisible, else the
+    query-sequence dim (whisper: 8 heads on a 16-wide axis)."""
+    mesh = sharding.get_mesh()
+    if (mesh is not None and "model" in mesh.axis_names
+            and s.shape[1] % mesh.shape["model"] == 0):
+        return sharding.shard(s, "batch", "model", None, None)
+    return sharding.shard(s, "batch", None, "model", None)
+
+
+def _repeat_kv(k: jnp.ndarray, h: int) -> jnp.ndarray:
+    """Broadcast GQA KV heads to the full head count.  TP-critical: score
+    tensors then carry the full head dim (divisible by the 16-wide 'model'
+    axis) instead of (kvh, group) factors that replicate."""
+    kvh = k.shape[2]
+    if kvh == h:
+        return k
+    return jnp.repeat(k, h // kvh, axis=2)
+
+
+def _sdpa_einsum(q, k, v, causal: bool, q_offset: int = 0):
+    """(b, s, h, hd) x (b, t, kvh, hd) full-materialization attention."""
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    k = _repeat_kv(k, h)
+    v = _repeat_kv(v, h)
+    scores = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    scores = _shard_scores(scores)
+    if causal:
+        qi = jnp.arange(s)[:, None] + q_offset
+        ki = jnp.arange(t)[None, :]
+        scores = jnp.where(qi >= ki, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def _sdpa_chunked(q, k, v, causal: bool, chunk: int = 1024, q_offset: int = 0):
+    """Query-chunked attention: O(chunk * T) live score memory.
+
+    The per-chunk (max, sum-exp) softmax structure is the flash/funnel
+    semigroup; chunking bounds the transient exactly like the paper's M."""
+    b, s, h, hd = q.shape
+    if s % chunk != 0:
+        pad = chunk - s % chunk
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        out = _sdpa_chunked(q, k, v, causal, chunk, q_offset)
+        return out[:, :s]
+    n_chunks = q.shape[1] // chunk
+    qc = q.reshape(b, n_chunks, chunk, h, hd).swapaxes(0, 1)
+    t = k.shape[1]
+    k = _repeat_kv(k, h)
+    v = _repeat_kv(v, h)
+
+    def one_chunk(ci, qi_block):
+        scores = jnp.einsum("bshd,bthd->bhst", qi_block.astype(jnp.float32),
+                            k.astype(jnp.float32)) / math.sqrt(hd)
+        scores = _shard_scores(scores)
+        if causal:
+            qpos = ci * chunk + jnp.arange(chunk)[:, None] + q_offset
+            kpos = jnp.arange(t)[None, :]
+            scores = jnp.where(qpos >= kpos, scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhst,bthd->bshd", w, v.astype(jnp.float32))
+        return out.astype(q.dtype)
+
+    outs = jax.lax.map(lambda args: one_chunk(*args),
+                       (jnp.arange(n_chunks), qc))
+    return outs.swapaxes(0, 1).reshape(b, n_chunks * chunk, h, hd)
+
+
+def sdpa(cfg: ArchConfig, q, k, v, causal: bool, q_offset: int = 0):
+    s, t = q.shape[1], k.shape[1]
+    if cfg.attn_impl == "flash" and s > 1:
+        out = kops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=causal)
+        return out.transpose(0, 2, 1, 3)
+    if s * t > 2048 * 4096 and s > 1:
+        return _sdpa_chunked(q, k, v, causal, chunk=2048, q_offset=q_offset)
+    return _sdpa_einsum(q, k, v, causal, q_offset=q_offset)
+
+
+def apply_attention(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                    positions: jnp.ndarray, causal: bool = True) -> jnp.ndarray:
+    """Training/prefill self-attention over the full sequence."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    out = sdpa(cfg, q, k, v, causal)
+    out = out.reshape(b, s, cfg.n_heads * cfg.hd)
+    y = out @ p["wo"].astype(cdtype(cfg))
+    return residual_shard(cfg, y)
+
+
+def attention_prefill(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                      positions: jnp.ndarray):
+    """Returns (y, (k_cache, v_cache)) — caches in (b, t, kvh, hd)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    out = sdpa(cfg, q, k, v, causal=True)
+    y = out.reshape(b, s, cfg.n_heads * cfg.hd) @ p["wo"].astype(cdtype(cfg))
+    return residual_shard(cfg, y), (k, v)
+
+
+def attention_decode(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                     cache_k: jnp.ndarray, cache_v: jnp.ndarray,
+                     pos: jnp.ndarray):
+    """One-token decode.  x: (b, 1, d); caches: (b, T_max, kvh, hd);
+    pos: (b,) current position (number of tokens already in cache).
+
+    Computes attention of the new token against cache[0:pos] + itself,
+    and writes the new K/V at position ``pos``."""
+    b = x.shape[0]
+    dt = cdtype(cfg)
+    q, k, v = _project_qkv(p, cfg, x, pos[:, None])
+    # write new kv into the cache at pos
+    upd = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(
+        c, n, (i, 0, 0)))
+    cache_k = upd(cache_k, k.astype(cache_k.dtype), pos)
+    cache_v = upd(cache_v, v.astype(cache_v.dtype), pos)
+    t = cache_k.shape[1]
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    kf = _repeat_kv(cache_k, h)
+    vf = _repeat_kv(cache_v, h)
+    scores = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        kf.astype(jnp.float32)) / math.sqrt(hd)
+    mask = jnp.arange(t)[None, :] <= pos[:, None]            # (b, t)
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", w, vf.astype(jnp.float32))
+    out = out.reshape(b, 1, h * hd).astype(dt)
+    y = out @ p["wo"].astype(dt)
+    return y, cache_k, cache_v
+
+
+def cross_attention(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                    kv_k: jnp.ndarray, kv_v: jnp.ndarray) -> jnp.ndarray:
+    """Decoder cross-attention against precomputed encoder K/V (no rope)."""
+    dt = cdtype(cfg)
+    b, s, _ = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"].astype(dt)).reshape(b, s, h, hd)
+    out = sdpa(cfg, q, kv_k, kv_v, causal=False)
+    y = out.reshape(b, s, h * hd) @ p["wo"].astype(dt)
+    return y
+
+
+def init_cross_kv(p: Params, cfg: ArchConfig, enc_out: jnp.ndarray):
+    dt = cdtype(cfg)
+    b, t, _ = enc_out.shape
+    kvh, hd = cfg.n_kv_heads, cfg.hd
+    k = (enc_out @ p["wk"].astype(dt)).reshape(b, t, kvh, hd)
+    v = (enc_out @ p["wv"].astype(dt)).reshape(b, t, kvh, hd)
+    return k, v
+
+
+# ------------------------------------------------------------------- loss
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None,
+                  z_loss: float = 1e-4) -> jnp.ndarray:
+    """Mean next-token CE with optional z-loss regularizer (fp32)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * lse ** 2
+    if mask is None:
+        return jnp.mean(nll)
+    m = mask.astype(jnp.float32)
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)

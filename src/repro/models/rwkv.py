@@ -1,0 +1,248 @@
+"""RWKV6 "Finch" block — attention-free sequence mixing with data-dependent
+per-channel decay (arXiv:2404.05892), adapted to the chunked-scan substrate.
+
+Time mixing: per head h with key/value dims (dk, dv), state S in R^{dk x dv}:
+
+    out_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T,     w_t = exp(-exp(w0 + lora(x_t)))
+
+The per-channel decay makes this a diagonal linear recurrence — the same
+Lemma 2.2 prefix structure as the SSD scan.  Chunked execution: intra-chunk
+terms use bounded log-space decay tensors evaluated chunk-by-chunk
+(lax.map); inter-chunk state propagation runs on the blocked Pallas scan
+(repro.kernels.ssm_scan) over channels = heads * dk * dv.
+
+Channel mixing: the RWKV squared-ReLU MLP with token shift.
+
+Decode: O(1) recurrent update (state = (S, last x per mix)) — RWKV6 runs the
+long_500k cell for free.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import sharding
+from .layers import Params, cdtype, pdtype, _dense_init, residual_shard
+from ..kernels import ops as kops
+
+RWKV_HEAD = 64          # dk = dv = 64
+DECAY_LORA = 64
+
+
+def rwkv_dims(cfg: ArchConfig) -> Tuple[int, int]:
+    n_heads = cfg.d_model // RWKV_HEAD
+    return n_heads, RWKV_HEAD
+
+
+def init_rwkv_time(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    n_heads, hd = rwkv_dims(cfg)
+    return {
+        "mu": 0.5 * jnp.ones((5, d), pdtype(cfg)),     # r,k,v,w,g shift mixes
+        "receptance": _dense_init(ks[0], (d, d), pdtype(cfg)),
+        "key": _dense_init(ks[1], (d, d), pdtype(cfg)),
+        "value": _dense_init(ks[2], (d, d), pdtype(cfg)),
+        "gate": _dense_init(ks[3], (d, d), pdtype(cfg)),
+        "output": _dense_init(ks[4], (d, d), pdtype(cfg)),
+        "w0": jnp.full((d,), -2.0, jnp.float32),
+        "w_lora_a": _dense_init(ks[5], (d, DECAY_LORA), jnp.float32),
+        "w_lora_b": _dense_init(ks[6], (DECAY_LORA, d), jnp.float32,
+                                scale=0.01),
+        "u": jnp.zeros((n_heads, hd), jnp.float32),    # bonus
+        "ln_x_scale": jnp.ones((d,), pdtype(cfg)),
+    }
+
+
+def init_rwkv_channel(key, cfg: ArchConfig) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": 0.5 * jnp.ones((2, d), pdtype(cfg)),     # k, r mixes
+        "wk": _dense_init(ks[0], (d, f), pdtype(cfg)),
+        "wv": _dense_init(ks[1], (f, d), pdtype(cfg)),
+        "wr": _dense_init(ks[2], (d, d), pdtype(cfg)),
+    }
+
+
+def _shift(x: jnp.ndarray, prev: jnp.ndarray) -> jnp.ndarray:
+    """Token shift: x_{t-1} (prev fills position 0).  x: (b, s, d)."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1]], axis=1)
+
+
+def _decay(p: Params, xw: jnp.ndarray) -> jnp.ndarray:
+    """log w_t in (-inf, 0): -exp(w0 + tanh(x A) B), clamped for the chunked
+    log-space evaluation."""
+    lora = jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"]) @ p["w_lora_b"]
+    logw = -jnp.exp(p["w0"] + lora)
+    return jnp.clip(logw, -5.0, -1e-4)
+
+
+def _group_norm(x: jnp.ndarray, scale: jnp.ndarray, n_heads: int):
+    """Per-head RMS normalization of the wkv output (RWKV's ln_x)."""
+    b, s, d = x.shape
+    xh = x.reshape(b, s, n_heads, d // n_heads).astype(jnp.float32)
+    var = jnp.mean(xh * xh, axis=-1, keepdims=True)
+    xh = xh * jax.lax.rsqrt(var + 1e-6)
+    return (xh.reshape(b, s, d) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_rwkv_time(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                    chunk: int = 32, return_state: bool = False):
+    """Training/prefill time-mixing.  x: (b, s, d).  With ``return_state``
+    also returns (S_after_last_token, x_last) for prefill -> decode."""
+    dt_c = cdtype(cfg)
+    b, s, d = x.shape
+    n_heads, hd = rwkv_dims(cfg)
+    xx = _shift(x, jnp.zeros((b, d), x.dtype))
+    mu = p["mu"].astype(dt_c)
+    xr, xk, xv, xw, xg = (x + mu[i][None, None, :] * (xx - x) for i in range(5))
+    r = (xr @ p["receptance"].astype(dt_c)).reshape(b, s, n_heads, hd)
+    k = (xk @ p["key"].astype(dt_c)).reshape(b, s, n_heads, hd)
+    v = (xv @ p["value"].astype(dt_c)).reshape(b, s, n_heads, hd)
+    g = jax.nn.silu(xg @ p["gate"].astype(dt_c))
+    logw = _decay(p, xw).reshape(b, s, n_heads, hd)        # (b,s,h,dk) fp32
+
+    s_pad = -(-s // chunk) * chunk
+    if s_pad != s:
+        pad = s_pad - s
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = s_pad // chunk
+    rc = r.reshape(b, nc, chunk, n_heads, hd).astype(jnp.float32)
+    kc = k.reshape(b, nc, chunk, n_heads, hd).astype(jnp.float32)
+    vc = v.reshape(b, nc, chunk, n_heads, hd).astype(jnp.float32)
+    lw = logw.reshape(b, nc, chunk, n_heads, hd)
+    cum = jnp.cumsum(lw, axis=2)                          # L_t inclusive
+
+    # ---- inter-chunk state scan (Pallas kernel): S_c = W_c * S_{c-1} + sum_j
+    # e^{L_end - L_j} k_j v_j^T
+    tail = jnp.exp(cum[:, :, -1:, :, :] - cum)            # (b,nc,q,h,dk)
+    s_c = jnp.einsum("bnjhk,bnjhv->bnhkv", kc * tail, vc)
+    a_chunk = jnp.exp(cum[:, :, -1])                      # (b,nc,h,dk)
+    flat_a = jnp.repeat(a_chunk.reshape(b, nc, -1), hd, axis=-1)
+    flat_s = s_c.reshape(b, nc, n_heads * hd * hd)
+    # per-chunk states are the big live tensor at long seq (b, nc, h*dk*dv):
+    # shard the channel dim over TP (channels are independent in the scan)
+    flat_a = sharding.shard(flat_a, "batch", None, "model")
+    flat_s = sharding.shard(flat_s, "batch", None, "model")
+    h_all = kops.ssm_scan(flat_a, flat_s)
+    h_all = sharding.shard(h_all, "batch", None, "model")
+    h_prev = jnp.concatenate(
+        [jnp.zeros_like(h_all[:, :1]), h_all[:, :-1]], axis=1)
+    h_prev = h_prev.reshape(b, nc, n_heads, hd, hd)
+
+    # ---- per-chunk evaluation (bounded memory via lax.map over chunks)
+    iq = jnp.arange(chunk)
+    strict = (iq[:, None] > iq[None, :])                  # j < t
+
+    def one_chunk(args):
+        rc_, kc_, vc_, cum_, hp_ = args                   # (b, q, h, *)
+        # intra: A[t,j] = sum_i r_t[i] k_j[i] e^{L_{t-1}[i] - L_j[i]}, j < t
+        ratio = jnp.exp(jnp.clip(
+            lwq(cum_)[:, :, None, :, :] - cum_[:, None, :, :, :],
+            -60.0, 60.0))                                  # (b,t,j,h,dk)
+        att = jnp.einsum("bthk,btjhk,bjhk->bthj", rc_, ratio, kc_)
+        att = jnp.where(strict[None, :, None, :], att, 0.0)
+        y_intra = jnp.einsum("bthj,bjhv->bthv", att, vc_)
+        # bonus: (r_t . (u*k_t)) v_t
+        bonus = jnp.einsum("bthk,hk,bthk->bth", rc_, p["u"], kc_)
+        y_bonus = bonus[..., None] * vc_
+        # inter: r_t e^{L_{t-1}} . H_prev
+        rdec = rc_ * jnp.exp(lwq(cum_))
+        y_inter = jnp.einsum("bthk,bhkv->bthv", rdec, hp_)
+        return y_intra + y_bonus + y_inter
+
+    def lwq(cum_):
+        """L_{t-1} relative to chunk start (0 for t=0)."""
+        return jnp.concatenate(
+            [jnp.zeros_like(cum_[:, :1]), cum_[:, :-1]], axis=1)
+
+    ys = jax.lax.map(one_chunk,
+                     (rc.swapaxes(0, 1), kc.swapaxes(0, 1), vc.swapaxes(0, 1),
+                      cum.swapaxes(0, 1), h_prev.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1).reshape(b, s_pad, d)[:, :s].astype(dt_c)
+    y = _group_norm(y, p["ln_x_scale"], n_heads) * g
+    out = y @ p["output"].astype(dt_c)
+    out = residual_shard(cfg, out)
+    if not return_state:
+        return out
+    # padded steps carry w=... logw padded with 0 -> decay 1, k=0 -> S frozen
+    S_last = h_all[:, -1].reshape(b, n_heads, hd, hd)
+    return out, (S_last, x[:, -1].astype(jnp.float32))
+
+
+def apply_rwkv_channel(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                       prev: jnp.ndarray = None) -> jnp.ndarray:
+    dt_c = cdtype(cfg)
+    b, s, d = x.shape
+    xx = _shift(x, jnp.zeros((b, d), x.dtype) if prev is None else prev)
+    mu = p["mu"].astype(dt_c)
+    xk = x + mu[0][None, None] * (xx - x)
+    xr = x + mu[1][None, None] * (xx - x)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"].astype(dt_c)))
+    k = sharding.shard(k, "batch", None, "model")
+    kv = k @ p["wv"].astype(dt_c)
+    return jax.nn.sigmoid(xr @ p["wr"].astype(dt_c)) * kv
+
+
+class RWKVState(NamedTuple):
+    S: jnp.ndarray            # (b, h, dk, dv) fp32 wkv state
+    x_time: jnp.ndarray       # (b, d) last input of time mix
+    x_chan: jnp.ndarray       # (b, d) last input of channel mix
+
+
+def init_rwkv_state(cfg: ArchConfig, batch: int) -> RWKVState:
+    n_heads, hd = rwkv_dims(cfg)
+    d = cfg.d_model
+    return RWKVState(S=jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+                     x_time=jnp.zeros((batch, d), jnp.float32),
+                     x_chan=jnp.zeros((batch, d), jnp.float32))
+
+
+def rwkv_time_decode(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                     state: RWKVState) -> Tuple[jnp.ndarray, RWKVState]:
+    """x: (b, 1, d) one-token decode."""
+    dt_c = cdtype(cfg)
+    b, _, d = x.shape
+    n_heads, hd = rwkv_dims(cfg)
+    x1 = x[:, 0]
+    xx = state.x_time.astype(x1.dtype)
+    mu = p["mu"].astype(dt_c)
+    xr, xk, xv, xw, xg = (x1 + mu[i][None, :] * (xx - x1) for i in range(5))
+    r = (xr @ p["receptance"].astype(dt_c)).reshape(b, n_heads, hd)
+    k = (xk @ p["key"].astype(dt_c)).reshape(b, n_heads, hd)
+    v = (xv @ p["value"].astype(dt_c)).reshape(b, n_heads, hd)
+    g = jax.nn.silu(xg @ p["gate"].astype(dt_c))
+    w = jnp.exp(_decay(p, xw)).reshape(b, n_heads, hd)
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    kv = jnp.einsum("bhk,bhv->bhkv", kf, vf)
+    out = jnp.einsum("bhk,bhkv->bhv", rf, state.S
+                     + p["u"][None, :, :, None] * kv)
+    new_S = w[..., None] * state.S + kv
+    y = out.reshape(b, 1, d).astype(dt_c)
+    y = _group_norm(y, p["ln_x_scale"], n_heads) * g[:, None]
+    y = (y[:, 0] @ p["output"].astype(dt_c))[:, None]
+    return y, state._replace(S=new_S, x_time=x1.astype(jnp.float32))
+
+
+def rwkv_channel_decode(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                        state: RWKVState) -> Tuple[jnp.ndarray, RWKVState]:
+    dt_c = cdtype(cfg)
+    b, _, d = x.shape
+    x1 = x[:, 0]
+    xx = state.x_chan.astype(x1.dtype)
+    mu = p["mu"].astype(dt_c)
+    xk = x1 + mu[0][None] * (xx - x1)
+    xr = x1 + mu[1][None] * (xx - x1)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"].astype(dt_c)))
+    kv = k @ p["wv"].astype(dt_c)
+    y = (jax.nn.sigmoid(xr @ p["wr"].astype(dt_c)) * kv)[:, None]
+    return y, state._replace(x_chan=x1.astype(jnp.float32))

@@ -1,0 +1,230 @@
+"""Mesh context + sharding rules for the model stack.
+
+Logical axes:
+  'batch'  -> ('pod', 'data') on the multi-pod mesh, ('data',) on one pod
+  'data'   -> the FSDP/ZeRO param-sharding axis (16-wide within a pod)
+  'model'  -> the TP/EP axis (heads, d_ff, experts, vocab)
+
+Parameter sharding follows Megatron-style TP on the 'model' axis combined
+with ZeRO-3/FSDP on the 'data' axis: every large parameter is sharded along
+one dimension by 'model' and another by 'data', so per-chip parameter +
+optimizer memory scales 1/(data*model).  Gradients reduce through the
+two-level invisible funnel (reduce-scatter over 'data', psum over 'pod' —
+see repro.core.distributed.funnel_allreduce and DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import re
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar(
+    "repro_mesh", default=None)
+_RULE_OVERRIDES: contextvars.ContextVar[Tuple[Tuple[str, Optional[Tuple]], ...]] = \
+    contextvars.ContextVar("repro_rule_overrides", default=())
+
+
+def set_rule_overrides(overrides) -> None:
+    """Prepend (pattern, spec) pairs to the parameter rules — config-driven
+    layout experiments (e.g. replicate_kv_proj)."""
+    _RULE_OVERRIDES.set(tuple(overrides))
+
+
+def rules_for_config(cfg) -> None:
+    ov = []
+    if getattr(cfg, "replicate_kv_proj", False):
+        ov.append((r"(attn|attention)\w*/w[kv]$", ("fsdp", None)))
+    if getattr(cfg, "replicate_attn", False):
+        # archs whose head count can't use the TP axis (whisper: 8 heads on
+        # a 16-wide axis): replicate attention weights, TP only the MLP —
+        # redundant attention compute beats per-layer gather traffic.
+        ov.append((r"(attn|attention)\w*/w[qkvo]$", ("fsdp", None)))
+    set_rule_overrides(ov)
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _MESH.get()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    token = _MESH.set(mesh)
+    try:
+        if mesh is not None:
+            with mesh:
+                yield mesh
+        else:
+            yield None
+    finally:
+        _MESH.reset(token)
+
+
+def batch_axes() -> Tuple[str, ...]:
+    mesh = get_mesh()
+    if mesh is not None and "pod" in mesh.axis_names:
+        return ("pod", "data")
+    return ("data",)
+
+
+def _resolve(axis):
+    """Map a logical axis name to mesh axes (or None when unavailable)."""
+    mesh = get_mesh()
+    names = mesh.axis_names if mesh is not None else ()
+    if axis is None:
+        return None
+    if axis == "batch":
+        ba = tuple(a for a in batch_axes() if a in names)
+        return ba if ba else None
+    if axis == "fsdp":
+        # parameter/optimizer sharding axis: ZeRO across pods too when a
+        # 'pod' axis exists (1T-class models need the aggregate HBM of the
+        # full multi-pod slice — see EXPERIMENTS.md kimi memory analysis)
+        fa = tuple(a for a in ("pod", "data") if a in names)
+        return fa if fa else None
+    if isinstance(axis, (tuple, list)):
+        got = tuple(a for a in axis if a in names)
+        return got if got else None
+    return axis if axis in names else None
+
+
+def logical_spec(*axes) -> P:
+    return P(*[_resolve(a) for a in axes])
+
+
+def shard(x: jnp.ndarray, *axes) -> jnp.ndarray:
+    """Apply a sharding constraint if a mesh is active; no-op otherwise.
+
+    ``axes`` are logical names per dimension ('batch'/'data'/'model'/None).
+    Axes whose size does not divide the dimension are dropped (GSPMD would
+    pad; we prefer replication for correctness of tiny dims)."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    try:
+        manual = set(getattr(jax.sharding.get_abstract_mesh(),
+                             "manual_axes", ()) or ())
+    except Exception:
+        manual = set()
+    resolved = []
+    for dim, axis in zip(x.shape, axes):
+        r = _resolve(axis)
+        if r is not None:
+            parts = tuple(a for a in (r if isinstance(r, tuple) else (r,))
+                          if a not in manual)
+            r = parts if len(parts) > 1 else (parts[0] if parts else None)
+        if r is not None:
+            sz = 1
+            for a in (r if isinstance(r, tuple) else (r,)):
+                sz *= mesh.shape[a]
+            if dim % sz != 0:
+                r = None
+        resolved.append(r)
+    return jax.lax.with_sharding_constraint(x, P(*resolved))
+
+
+# ---------------------------------------------------------------------------
+# Parameter partitioning rules (path regex -> logical spec)
+# ---------------------------------------------------------------------------
+# Patterns are matched against '/'-joined param paths.  First match wins.
+# Logical specs use the names above; a leading '*' entry means "leave any
+# extra leading (stacked-layer) dimensions unsharded".
+PARAM_RULES: Sequence[Tuple[str, Tuple]] = (
+    (r"embed/table$",            ("model", "fsdp")),      # vocab-parallel
+    (r"lm_head/w$",              ("fsdp", "model")),      # d_model, vocab
+    (r"(attn|attention)\w*/wq$", ("fsdp", "model")),      # (D, H*dh)
+    (r"(attn|attention)\w*/wk$", ("fsdp", "model")),
+    (r"(attn|attention)\w*/wv$", ("fsdp", "model")),
+    (r"(attn|attention)\w*/wo$", ("model", "fsdp")),      # (H*dh, D)
+    (r"(attn|attention)\w*/(bq|bk|bv|bo)$", (None,)),
+    (r"mlp/w_(gate|up)$",        ("fsdp", "model")),      # (D, F)
+    (r"mlp/w_down$",             ("model", "fsdp")),      # (F, D)
+    (r"mlp/b_\w+$",              (None,)),
+    (r"moe/router$",             ("fsdp", None)),         # (D, E)
+    (r"moe/w_(gate|up)$",        ("model", "fsdp", None)),  # (E, D, F): EP+FSDP
+    (r"moe/w_down$",             ("model", None, "fsdp")),  # (E, F, D)
+    (r"moe/shared/w_(gate|up)$", ("fsdp", "model")),
+    (r"moe/shared/w_down$",      ("model", "fsdp")),
+    (r"(ssm|mamba)/in_proj$",    ("fsdp", "model")),
+    (r"(ssm|mamba)/out_proj$",   ("model", "fsdp")),
+    (r"(ssm|mamba)/.*$",         None),                   # small: replicate
+    # rwkv param paths: layers/time/{receptance,key,value,gate,output},
+    # layers/chan/{wk,wv,wr}
+    (r"(rwkv|time)/(receptance|key|value|gate)$", ("fsdp", "model")),
+    (r"(rwkv|time)/output$",     ("model", "fsdp")),
+    (r"chan/wk$",                ("fsdp", "model")),
+    (r"chan/wv$",                ("model", "fsdp")),
+    (r"chan/wr$",                ("fsdp", "model")),
+    (r"(rwkv|time|chan)/.*$",    None),
+    (r"(norm|ln)\w*/(scale|bias)$", (None,)),
+    (r"pos_embed/table$",        (None, "fsdp")),
+    (r".*",                      None),                   # default: replicate
+)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    size = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        size *= mesh.shape[a]
+    return size
+
+
+def validate_spec(spec: P, shape) -> P:
+    """Drop spec axes whose mesh size does not divide the dimension —
+    replication instead of GSPMD padding keeps in_shardings legal for any
+    arch (e.g. whisper's 51865 vocab on a 16-wide model axis)."""
+    mesh = get_mesh()
+    if mesh is None:
+        return spec
+    out = []
+    for i, dim in enumerate(shape):
+        axis = spec[i] if i < len(spec) else None
+        if axis is not None and dim % _axis_size(mesh, axis) != 0:
+            axis = None
+        out.append(axis)
+    return P(*out)
+
+
+def param_spec(path: str, shape) -> P:
+    """PartitionSpec for a parameter, given its '/'-joined path and shape.
+
+    Stacked-layer parameters (scan-over-layers) have one extra leading dim;
+    the rule's spec applies to the trailing dims and the leading dims stay
+    unsharded."""
+    ndim = len(shape)
+    for pattern, spec in tuple(_RULE_OVERRIDES.get()) + tuple(PARAM_RULES):
+        if re.search(pattern, path):
+            if spec is None:
+                return P()
+            resolved = [_resolve(a) for a in spec]
+            pad = ndim - len(resolved)
+            if pad < 0:
+                # smaller array than the rule: keep the leading entries
+                resolved = resolved[:ndim]
+            return validate_spec(P(*([None] * max(pad, 0) + resolved)),
+                                 shape)
+    return P()
+
+
+def tree_param_specs(params: Any) -> Any:
+    """Pytree of PartitionSpecs matching ``params`` (path-based rules)."""
+
+    def walk(path_entries, leaf):
+        parts = []
+        for e in path_entries:
+            if hasattr(e, "key"):
+                parts.append(str(e.key))
+            elif hasattr(e, "idx"):
+                parts.append(str(e.idx))
+        return param_spec("/".join(parts), jnp.shape(leaf))
+
+    return jax.tree_util.tree_map_with_path(walk, params)
+
+
+def tree_shardings(params: Any, mesh: Mesh) -> Any:
+    specs = tree_param_specs(params)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs)

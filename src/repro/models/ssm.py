@@ -1,0 +1,210 @@
+"""Mamba2 (SSD) block — zamba2's sequence mixer.
+
+Chunked state-space duality algorithm: the sequence is tiled into chunks;
+within a chunk the recurrence is evaluated in quadratic (matmul, MXU-friendly)
+form; across chunks the per-head state H (d_head x d_state) obeys the
+diagonal recurrence  H_c = A_c * H_{c-1} + S_c  — which is exactly the
+associative prefix structure of Lemma 2.2 and runs on the blocked Pallas
+scan (:mod:`repro.kernels.ssm_scan`) with channels = heads * d_head * d_state.
+
+Decode path: single-step recurrent update, O(1) in context length — the
+reason zamba2/rwkv6 run the long_500k cell that full-attention archs skip.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import sharding
+from .layers import Params, cdtype, pdtype, _dense_init, residual_shard
+from ..kernels import ops as kops
+
+D_CONV = 4
+SSM_HEAD = 64
+
+
+def ssm_dims(cfg: ArchConfig) -> Tuple[int, int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // SSM_HEAD
+    return d_in, n_heads, cfg.ssm_state
+
+
+def init_mamba(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    d_in, n_heads, d_state = ssm_dims(cfg)
+    ks = jax.random.split(key, 5)
+    # in_proj emits [z (d_in), x (d_in), B (d_state), C (d_state), dt (heads)]
+    d_proj = 2 * d_in + 2 * d_state + n_heads
+    return {
+        "in_proj": _dense_init(ks[0], (d, d_proj), pdtype(cfg)),
+        "conv_w": (_dense_init(ks[1], (D_CONV, d_in + 2 * d_state),
+                               pdtype(cfg), scale=0.5)),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "out_proj": _dense_init(ks[2], (d_in, d), pdtype(cfg)),
+        "norm_scale": jnp.ones((d_in,), pdtype(cfg)),
+    }
+
+
+def _split_proj(cfg, proj):
+    d_in, n_heads, d_state = ssm_dims(cfg)
+    z = proj[..., :d_in]
+    x = proj[..., d_in:2 * d_in]
+    b_mat = proj[..., 2 * d_in:2 * d_in + d_state]
+    c_mat = proj[..., 2 * d_in + d_state:2 * d_in + 2 * d_state]
+    dt = proj[..., 2 * d_in + 2 * d_state:]
+    return z, x, b_mat, c_mat, dt
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv over seq.  x: (b, s, c); w: (D_CONV, c).
+    Returns (y, new_state) with state = last D_CONV-1 inputs."""
+    b, s, c = x.shape
+    if state is None:
+        state = jnp.zeros((b, D_CONV - 1, c), x.dtype)
+    xx = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xx[:, i:i + s] * w[i][None, None, :] for i in range(D_CONV))
+    return jax.nn.silu(y), xx[:, -(D_CONV - 1):]
+
+
+def _gated_rmsnorm(x, z, scale):
+    xf = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + 1e-6)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_mamba(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                return_state: bool = False):
+    """Training/prefill forward.  x: (b, s, d).  With ``return_state`` also
+    returns the MambaState after the last token (for prefill -> decode)."""
+    dt_c = cdtype(cfg)
+    b, s, d = x.shape
+    d_in, n_heads, d_state = ssm_dims(cfg)
+    q = cfg.ssm_chunk
+    proj = x @ p["in_proj"].astype(dt_c)
+    z, xs, b_mat, c_mat, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xs, b_mat, c_mat], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"].astype(dt_c))
+    xs = conv_out[..., :d_in]
+    b_mat = conv_out[..., d_in:d_in + d_state]
+    c_mat = conv_out[..., d_in + d_state:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (b,s,h)
+    a = jnp.exp(-jnp.exp(p["A_log"])[None, None, :] * dt)         # (b,s,h)
+
+    # pad sequence to a chunk multiple
+    s_pad = -(-s // q) * q
+    if s_pad != s:
+        pad = s_pad - s
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+    nc = s_pad // q
+
+    xh = xs.reshape(b, nc, q, n_heads, SSM_HEAD).astype(jnp.float32)
+    bc = b_mat.reshape(b, nc, q, d_state).astype(jnp.float32)
+    cc = c_mat.reshape(b, nc, q, d_state).astype(jnp.float32)
+    ac = a.reshape(b, nc, q, n_heads)
+    dtc = dt.reshape(b, nc, q, n_heads)
+    # effective input is dt-scaled: x_eff = dt * x
+    xh = xh * dtc[..., None]
+
+    la = jnp.log(jnp.maximum(ac, 1e-20))
+    cum = jnp.cumsum(la, axis=2)                       # (b,nc,q,h) log cumdecay
+
+    # chunk summaries: S_c = sum_j (prod_{j<t<=Q} a) B_j x_j^T  (h, s, e)
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)            # (b,nc,q,h)
+    s_c = jnp.einsum("bnjs,bnjh,bnjhe->bnhse", bc, tail, xh)
+    # inter-chunk scan (Lemma 2.2 structure; Pallas kernel):
+    a_chunk = jnp.exp(cum[:, :, -1, :])                # (b,nc,h)
+    flat_s = s_c.reshape(b, nc, n_heads * d_state * SSM_HEAD)
+    flat_a = jnp.repeat(a_chunk, d_state * SSM_HEAD, axis=-1)
+    flat_a = sharding.shard(flat_a, "batch", None, "model")
+    flat_s = sharding.shard(flat_s, "batch", None, "model")
+    h_all = kops.ssm_scan(flat_a, flat_s)              # state AFTER each chunk
+    h_all = sharding.shard(h_all, "batch", None, "model")
+    h_prev = jnp.concatenate(
+        [jnp.zeros_like(h_all[:, :1]), h_all[:, :-1]], axis=1)
+    h_prev = h_prev.reshape(b, nc, n_heads, d_state, SSM_HEAD)
+
+    # per-chunk evaluation via lax.map: the (b,q,q,h) decay tensor lives for
+    # ONE chunk at a time (materializing it for all chunks is O(S*q) memory
+    # — 34 GB/device for zamba2 train_4k; chunked it is O(q^2)).
+    iq = jnp.arange(q)
+    causal = (iq[:, None] >= iq[None, :])[None, :, :, None]
+
+    def one_chunk(args):
+        cc_, bc_, xh_, cum_, hp_ = args                # (b, q, ...)
+        decay = jnp.exp(cum_[:, :, None, :] - cum_[:, None, :, :])
+        gmat = jnp.einsum("bis,bjs->bij", cc_, bc_)[..., None] * decay
+        gmat = jnp.where(causal, gmat, 0.0)
+        y_in = jnp.einsum("bijh,bjhe->bihe", gmat, xh_)
+        y_x = jnp.einsum("bis,bih,bhse->bihe", cc_, jnp.exp(cum_), hp_)
+        return y_in + y_x
+
+    ys = jax.lax.map(one_chunk,
+                     (cc.swapaxes(0, 1), bc.swapaxes(0, 1),
+                      xh.swapaxes(0, 1), cum.swapaxes(0, 1),
+                      h_prev.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1).reshape(b, s_pad, n_heads, SSM_HEAD)[:, :s]
+    y = y + p["D"][None, None, :, None] * xs.reshape(
+        b, s_pad, n_heads, SSM_HEAD)[:, :s]
+    y = y.reshape(b, s, d_in).astype(dt_c)
+    y = _gated_rmsnorm(y, z[:, :s], p["norm_scale"])
+    out = y @ p["out_proj"].astype(dt_c)
+    out = residual_shard(cfg, out)
+    if not return_state:
+        return out
+    # state after the LAST real token: padded steps have a=1, x=0 so the
+    # final chunk state equals the state after token s-1.
+    h_last = h_all[:, -1].reshape(b, n_heads, d_state, SSM_HEAD)
+    return out, MambaState(h=h_last, conv=conv_state.astype(jnp.float32))
+
+
+class MambaState(NamedTuple):
+    h: jnp.ndarray          # (b, heads, d_state, SSM_HEAD) fp32
+    conv: jnp.ndarray       # (b, D_CONV-1, d_in + 2*d_state)
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int) -> MambaState:
+    d_in, n_heads, d_state = ssm_dims(cfg)
+    return MambaState(
+        h=jnp.zeros((batch, n_heads, d_state, SSM_HEAD), jnp.float32),
+        conv=jnp.zeros((batch, D_CONV - 1, d_in + 2 * d_state), jnp.float32))
+
+
+def mamba_decode_step(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                      state: MambaState) -> Tuple[jnp.ndarray, MambaState]:
+    """x: (b, 1, d) -> (y (b, 1, d), new state).  O(1) in context length."""
+    dt_c = cdtype(cfg)
+    b = x.shape[0]
+    d_in, n_heads, d_state = ssm_dims(cfg)
+    proj = x @ p["in_proj"].astype(dt_c)
+    z, xs, b_mat, c_mat, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xs, b_mat, c_mat], axis=-1)
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"].astype(dt_c),
+                                      state.conv)
+    xs = conv_out[..., :d_in]
+    b_mat = conv_out[..., d_in:d_in + d_state].astype(jnp.float32)
+    c_mat = conv_out[..., d_in + d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (b,h)
+    a = jnp.exp(-jnp.exp(p["A_log"])[None, :] * dt)
+    x_raw = xs[:, 0].reshape(b, n_heads, SSM_HEAD).astype(jnp.float32)
+    xh = x_raw * dt[..., None]
+    upd = jnp.einsum("bs,bhe->bhse", b_mat[:, 0], xh)
+    h = a[:, :, None, None] * state.h + upd
+    y = jnp.einsum("bs,bhse->bhe", c_mat[:, 0], h)
+    y = y + p["D"][None, :, None] * x_raw
+    y = y.reshape(b, 1, d_in).astype(dt_c)
+    y = _gated_rmsnorm(y, z, p["norm_scale"])
+    out = y @ p["out_proj"].astype(dt_c)
+    return out, MambaState(h=h, conv=new_conv)

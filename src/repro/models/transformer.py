@@ -1,0 +1,537 @@
+"""LM assemblies: dense / MoE / hybrid (zamba2) / rwkv decoder-only models,
+plus the VLM (prefix-embedding) variant.  One functional API for all:
+
+  model.init(key)                         -> params
+  model.loss_fn(params, batch)            -> (loss, metrics)     # train
+  model.prefill(params, batch)            -> (logits_last, decode_state)
+  model.decode_step(params, tok, state)   -> (logits, new_state) # serve_step
+  model.init_decode_state(batch, max_len) -> zeroed decode state
+
+The train step is one BSP superstep (Thm 3.1): local layer compute +
+collective exchange, the latter inserted by GSPMD from the sharding
+constraints (funnel gradient reduction happens in the optimizer — see
+repro.train).  Layers run under lax.scan with configurable remat when
+cfg.scan_layers (homogeneous stacks), else an unrolled loop (heterogeneous
+stacks: zamba2's shared block, whisper).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ArchConfig
+from . import sharding
+from .layers import (Params, cdtype, init_norm, apply_norm, init_embed,
+                     apply_embed, init_lm_head, apply_lm_head, init_mlp,
+                     apply_mlp, init_attention, apply_attention,
+                     attention_prefill, attention_decode, cross_entropy)
+from .moe import init_moe, apply_moe
+from . import ssm as ssm_mod
+from . import rwkv as rwkv_mod
+
+
+class Model(NamedTuple):
+    cfg: ArchConfig
+    init: Callable
+    loss_fn: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_decode_state: Callable
+
+
+def _remat(fn, cfg: ArchConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+# ===========================================================================
+# dense / MoE / VLM decoder
+# ===========================================================================
+
+def _init_block(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {"attn_norm": init_norm(ks[0], cfg),
+         "attn": init_attention(ks[1], cfg),
+         "mlp_norm": init_norm(ks[2], cfg)}
+    if cfg.is_moe:
+        p["moe"] = init_moe(ks[3], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[3], cfg)
+    return p
+
+
+def _apply_block(p: Params, cfg: ArchConfig, x, positions):
+    h = apply_attention(p["attn"], cfg, apply_norm(p["attn_norm"], cfg, x),
+                        positions, causal=True)
+    x = x + h
+    z = apply_norm(p["mlp_norm"], cfg, x)
+    if cfg.is_moe:
+        out = apply_moe(p["moe"], cfg, z)
+        return x + out.y, out.aux_loss
+    return x + apply_mlp(p["mlp"], cfg, z), jnp.float32(0)
+
+
+def _block_prefill(p, cfg, x, positions):
+    z = apply_norm(p["attn_norm"], cfg, x)
+    h, kv = attention_prefill(p["attn"], cfg, z, positions)
+    x = x + h
+    z = apply_norm(p["mlp_norm"], cfg, x)
+    if cfg.is_moe:
+        x = x + apply_moe(p["moe"], cfg, z).y
+    else:
+        x = x + apply_mlp(p["mlp"], cfg, z)
+    return x, kv
+
+
+def _block_decode(p, cfg, x, ck, cv, pos):
+    z = apply_norm(p["attn_norm"], cfg, x)
+    h, ck, cv = attention_decode(p["attn"], cfg, z, ck, cv, pos)
+    x = x + h
+    z = apply_norm(p["mlp_norm"], cfg, x)
+    if cfg.is_moe:
+        x = x + apply_moe(p["moe"], cfg, z).y
+    else:
+        x = x + apply_mlp(p["mlp"], cfg, z)
+    return x, ck, cv
+
+
+class KVDecodeState(NamedTuple):
+    k: jnp.ndarray          # (L, B, T, kvh, hd)
+    v: jnp.ndarray
+    pos: jnp.ndarray        # (B,) tokens already in cache
+
+
+def build_decoder_lm(cfg: ArchConfig) -> Model:
+    """Dense, MoE, and VLM families (VLM = embeddings prefix from the stub
+    frontend, concatenated before the token embeddings)."""
+
+    is_vlm = cfg.family == "vlm"
+
+    def init(key):
+        ks = jax.random.split(key, 4 + cfg.n_layers)
+        params = {"embed": init_embed(ks[0], cfg),
+                  "final_norm": init_norm(ks[1], cfg)}
+        if not cfg.tie_embeddings:
+            params["lm_head"] = init_lm_head(ks[2], cfg)
+        layer_keys = jnp.stack(ks[4:4 + cfg.n_layers])
+        params["layers"] = jax.vmap(lambda k: _init_block(k, cfg))(layer_keys)
+        if is_vlm:
+            params["vision_proj"] = {
+                "w": jax.random.normal(ks[3], (cfg.d_model, cfg.d_model)
+                                       ).astype(cfg.param_dtype) * 0.02}
+        return params
+
+    def _embed_inputs(params, batch):
+        x = apply_embed(params["embed"], cfg, batch["tokens"])
+        if is_vlm:
+            pe = batch["patch_embeds"].astype(cdtype(cfg))
+            pe = pe @ params["vision_proj"]["w"].astype(cdtype(cfg))
+            x = jnp.concatenate([pe, x], axis=1)
+        return x
+
+    def _backbone(params, x, positions):
+        aux_total = jnp.float32(0)
+        if cfg.scan_layers:
+            def body(carry, layer_p):
+                h, aux = carry
+                h, a = _apply_block(layer_p, cfg, h, positions)
+                return (h, aux + a), None
+            (x, aux_total), _ = lax.scan(
+                _remat(body, cfg), (x, aux_total), params["layers"])
+        else:
+            block = _remat(
+                lambda lp, h: _apply_block(lp, cfg, h, positions), cfg)
+            for i in range(cfg.n_layers):
+                layer_p = jax.tree_util.tree_map(lambda a: a[i],
+                                                 params["layers"])
+                x, a = block(layer_p, x)
+                aux_total = aux_total + a
+        return x, aux_total
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = _embed_inputs(params, batch)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+        x, aux = _backbone(params, x, positions)
+        x = apply_norm(params["final_norm"], cfg, x)
+        if is_vlm:
+            x = x[:, -s:]                       # loss on text positions only
+        logits = apply_lm_head(params.get("lm_head"), cfg, x,
+                               embed=params["embed"])
+        loss = cross_entropy(logits, batch["labels"],
+                             batch.get("loss_mask"))
+        total = loss + 0.01 * aux
+        return total, {"ce": loss, "aux": aux}
+
+    def init_decode_state(batch_size: int, max_len: int) -> KVDecodeState:
+        shape = (cfg.n_layers, batch_size, max_len, cfg.n_kv_heads, cfg.hd)
+        dt = cdtype(cfg)
+        return KVDecodeState(k=jnp.zeros(shape, dt), v=jnp.zeros(shape, dt),
+                             pos=jnp.zeros((batch_size,), jnp.int32))
+
+    def prefill(params, batch):
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = _embed_inputs(params, batch)
+        t_all = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(t_all), (b, t_all))
+        max_len = batch.get("max_len", t_all)
+        state = init_decode_state(b, max_len)
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            layer_p = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+            x, (k, v) = _block_prefill(layer_p, cfg, x, positions)
+            ks.append(k)
+            vs.append(v)
+        k_st = jnp.stack(ks)                    # (L, b, s, kvh, hd)
+        v_st = jnp.stack(vs)
+        pad = max_len - t_all
+        k_st = jnp.pad(k_st, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        v_st = jnp.pad(v_st, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        x = apply_norm(params["final_norm"], cfg, x[:, -1:])
+        logits = apply_lm_head(params.get("lm_head"), cfg, x,
+                               embed=params["embed"])[:, 0]
+        state = KVDecodeState(k=k_st.astype(cdtype(cfg)),
+                              v=v_st.astype(cdtype(cfg)),
+                              pos=jnp.full((b,), t_all, jnp.int32))
+        return logits, state
+
+    def decode_step(params, tok, state: KVDecodeState):
+        """tok: (B,) int32 -> (logits (B, V), new state)."""
+        x = apply_embed(params["embed"], cfg, tok[:, None])
+
+        def body(carry, layer_in):
+            h = carry
+            layer_p, ck, cv = layer_in
+            h, ck, cv = _block_decode(layer_p, cfg, h, ck, cv, state.pos)
+            return h, (ck, cv)
+
+        if cfg.scan_layers:
+            x, (k_new, v_new) = lax.scan(body, x,
+                                         (params["layers"], state.k, state.v))
+        else:
+            knew, vnew = [], []
+            for i in range(cfg.n_layers):
+                layer_p = jax.tree_util.tree_map(lambda a: a[i],
+                                                 params["layers"])
+                x, ck, cv = _block_decode(layer_p, cfg, x, state.k[i],
+                                          state.v[i], state.pos)
+                knew.append(ck)
+                vnew.append(cv)
+            k_new, v_new = jnp.stack(knew), jnp.stack(vnew)
+        x = apply_norm(params["final_norm"], cfg, x)
+        logits = apply_lm_head(params.get("lm_head"), cfg, x,
+                               embed=params["embed"])[:, 0]
+        return logits, KVDecodeState(k=k_new, v=v_new, pos=state.pos + 1)
+
+    return Model(cfg=cfg, init=init, loss_fn=loss_fn, prefill=prefill,
+                 decode_step=decode_step, init_decode_state=init_decode_state)
+
+
+# ===========================================================================
+# zamba2-style hybrid: mamba2 stack + one shared attention block
+# ===========================================================================
+
+class HybridDecodeState(NamedTuple):
+    mamba_h: jnp.ndarray      # (L, B, heads, d_state, ssm_head)
+    mamba_conv: jnp.ndarray   # (L, B, D_CONV-1, conv_ch)
+    shared_k: jnp.ndarray     # (n_inv, B, T, kvh, hd)
+    shared_v: jnp.ndarray
+    pos: jnp.ndarray
+
+
+def _shared_positions(cfg: ArchConfig):
+    period = max(1, cfg.shared_attn_period)
+    return [i for i in range(cfg.n_layers) if i % period == 0]
+
+
+def build_hybrid_lm(cfg: ArchConfig) -> Model:
+    shared_at = _shared_positions(cfg)
+    n_inv = len(shared_at)
+
+    def init(key):
+        ks = jax.random.split(key, 6 + cfg.n_layers)
+        layer_keys = jnp.stack(ks[6:])
+        params = {
+            "embed": init_embed(ks[0], cfg),
+            "final_norm": init_norm(ks[1], cfg),
+            "lm_head": init_lm_head(ks[2], cfg),
+            "shared": {"attn_norm": init_norm(ks[3], cfg),
+                       "attn": init_attention(ks[3], cfg),
+                       "mlp_norm": init_norm(ks[4], cfg),
+                       "mlp": init_mlp(ks[4], cfg)},
+            "layers": jax.vmap(lambda k: {
+                "norm": init_norm(k, cfg),
+                "mamba": ssm_mod.init_mamba(k, cfg)})(layer_keys),
+        }
+        return params
+
+    def _body_train(params, x, positions):
+        """Scan over mamba layers; the SHARED attention block (one set of
+        params, a closure constant) fires inside the scan via lax.cond at
+        every shared_attn_period-th layer.  Scan keeps the HLO one-layer-
+        sized — 38 unrolled SSD layers at 512 devices do not compile in
+        reasonable time."""
+        period = max(1, cfg.shared_attn_period)
+        sp = params["shared"]
+
+        def with_shared(h):
+            hh = h + apply_attention(sp["attn"], cfg,
+                                     apply_norm(sp["attn_norm"], cfg, h),
+                                     positions, causal=True)
+            return hh + apply_mlp(sp["mlp"], cfg,
+                                  apply_norm(sp["mlp_norm"], cfg, hh))
+
+        def body(h, inp):
+            lp, idx = inp
+            h = lax.cond(idx % period == 0, with_shared, lambda t: t, h)
+            h = h + ssm_mod.apply_mamba(lp["mamba"], cfg,
+                                        apply_norm(lp["norm"], cfg, h))
+            return h, None
+
+        idxs = jnp.arange(cfg.n_layers)
+        x, _ = lax.scan(_remat(body, cfg), x, (params["layers"], idxs))
+        return x
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = apply_embed(params["embed"], cfg, tokens)
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        x = _body_train(params, x, positions)
+        x = apply_norm(params["final_norm"], cfg, x)
+        logits = apply_lm_head(params["lm_head"], cfg, x)
+        loss = cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+        return loss, {"ce": loss}
+
+    def init_decode_state(batch_size: int, max_len: int) -> HybridDecodeState:
+        d_in, n_heads, d_state = ssm_mod.ssm_dims(cfg)
+        dt = cdtype(cfg)
+        return HybridDecodeState(
+            mamba_h=jnp.zeros((cfg.n_layers, batch_size, n_heads, d_state,
+                               ssm_mod.SSM_HEAD), jnp.float32),
+            mamba_conv=jnp.zeros((cfg.n_layers, batch_size,
+                                  ssm_mod.D_CONV - 1,
+                                  d_in + 2 * d_state), jnp.float32),
+            shared_k=jnp.zeros((n_inv, batch_size, max_len, cfg.n_kv_heads,
+                                cfg.hd), dt),
+            shared_v=jnp.zeros((n_inv, batch_size, max_len, cfg.n_kv_heads,
+                                cfg.hd), dt),
+            pos=jnp.zeros((batch_size,), jnp.int32))
+
+    def prefill(params, batch):
+        """Chunked-scan prefill: mamba states + shared-attn KV caches."""
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        max_len = batch.get("max_len", s)
+        x = apply_embed(params["embed"], cfg, tokens)
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        mh, mc, sks, svs = [], [], [], []
+        for i in range(cfg.n_layers):
+            if i in shared_at:
+                sp = params["shared"]
+                z = apply_norm(sp["attn_norm"], cfg, x)
+                h, (k, v) = attention_prefill(sp["attn"], cfg, z, positions)
+                pad = max_len - s
+                sks.append(jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))))
+                svs.append(jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))))
+                x = x + h
+                x = x + apply_mlp(sp["mlp"], cfg,
+                                  apply_norm(sp["mlp_norm"], cfg, x))
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+            y, ms = ssm_mod.apply_mamba(lp["mamba"], cfg,
+                                        apply_norm(lp["norm"], cfg, x),
+                                        return_state=True)
+            x = x + y
+            mh.append(ms.h); mc.append(ms.conv)
+        x = apply_norm(params["final_norm"], cfg, x)
+        logits = apply_lm_head(params["lm_head"], cfg, x[:, -1:])[:, 0]
+        state = HybridDecodeState(
+            mamba_h=jnp.stack(mh), mamba_conv=jnp.stack(mc),
+            shared_k=jnp.stack(sks).astype(cdtype(cfg)),
+            shared_v=jnp.stack(svs).astype(cdtype(cfg)),
+            pos=jnp.full((b,), s, jnp.int32))
+        return logits, state
+
+    def decode_step(params, tok, state: HybridDecodeState):
+        x = apply_embed(params["embed"], cfg, tok[:, None])
+        mh, mc = [], []
+        sk, sv = list(state.shared_k), list(state.shared_v)
+        inv = 0
+        for i in range(cfg.n_layers):
+            if i in shared_at:
+                sp = params["shared"]
+                z = apply_norm(sp["attn_norm"], cfg, x)
+                h, nk, nv = attention_decode(sp["attn"], cfg, z,
+                                             state.shared_k[inv],
+                                             state.shared_v[inv], state.pos)
+                sk[inv], sv[inv] = nk, nv
+                x = x + h
+                x = x + apply_mlp(sp["mlp"], cfg,
+                                  apply_norm(sp["mlp_norm"], cfg, x))
+                inv += 1
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+            mstate = ssm_mod.MambaState(h=state.mamba_h[i],
+                                        conv=state.mamba_conv[i])
+            y, ms = ssm_mod.mamba_decode_step(
+                lp["mamba"], cfg, apply_norm(lp["norm"], cfg, x), mstate)
+            x = x + y
+            mh.append(ms.h)
+            mc.append(ms.conv)
+        x = apply_norm(params["final_norm"], cfg, x)
+        logits = apply_lm_head(params["lm_head"], cfg, x)[:, 0]
+        new = HybridDecodeState(mamba_h=jnp.stack(mh),
+                                mamba_conv=jnp.stack(mc),
+                                shared_k=jnp.stack(sk),
+                                shared_v=jnp.stack(sv),
+                                pos=state.pos + 1)
+        return logits, new
+
+    return Model(cfg=cfg, init=init, loss_fn=loss_fn, prefill=prefill,
+                 decode_step=decode_step, init_decode_state=init_decode_state)
+
+
+# ===========================================================================
+# RWKV6 LM
+# ===========================================================================
+
+class RWKVDecodeState(NamedTuple):
+    S: jnp.ndarray            # (L, B, h, dk, dv)
+    x_time: jnp.ndarray       # (L, B, d)
+    x_chan: jnp.ndarray       # (L, B, d)
+    pos: jnp.ndarray
+
+
+def build_rwkv_lm(cfg: ArchConfig) -> Model:
+
+    def init(key):
+        ks = jax.random.split(key, 4 + cfg.n_layers)
+        layer_keys = jnp.stack(ks[4:])
+        return {
+            "embed": init_embed(ks[0], cfg),
+            "final_norm": init_norm(ks[1], cfg, kind="layernorm"),
+            "lm_head": init_lm_head(ks[2], cfg),
+            "layers": jax.vmap(lambda k: {
+                "ln1": init_norm(k, cfg, kind="layernorm"),
+                "time": rwkv_mod.init_rwkv_time(k, cfg),
+                "ln2": init_norm(jax.random.fold_in(k, 1), cfg,
+                                 kind="layernorm"),
+                "chan": rwkv_mod.init_rwkv_channel(
+                    jax.random.fold_in(k, 2), cfg)})(layer_keys),
+        }
+
+    def _layer_train(lp, x):
+        x = x + rwkv_mod.apply_rwkv_time(
+            lp["time"], cfg, apply_norm(lp["ln1"], cfg, x, kind="layernorm"),
+            chunk=min(cfg.ssm_chunk, 64))
+        x = x + rwkv_mod.apply_rwkv_channel(
+            lp["chan"], cfg, apply_norm(lp["ln2"], cfg, x, kind="layernorm"))
+        return x
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        x = apply_embed(params["embed"], cfg, tokens)
+        if cfg.scan_layers:
+            def body(h, lp):
+                return _layer_train(lp, h), None
+            x, _ = lax.scan(_remat(body, cfg), x, params["layers"])
+        else:
+            for i in range(cfg.n_layers):
+                lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+                x = _layer_train(lp, x)
+        x = apply_norm(params["final_norm"], cfg, x, kind="layernorm")
+        logits = apply_lm_head(params["lm_head"], cfg, x)
+        loss = cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+        return loss, {"ce": loss}
+
+    def init_decode_state(batch_size: int, max_len: int) -> RWKVDecodeState:
+        n_heads, hd = rwkv_mod.rwkv_dims(cfg)
+        d = cfg.d_model
+        L = cfg.n_layers
+        return RWKVDecodeState(
+            S=jnp.zeros((L, batch_size, n_heads, hd, hd), jnp.float32),
+            x_time=jnp.zeros((L, batch_size, d), jnp.float32),
+            x_chan=jnp.zeros((L, batch_size, d), jnp.float32),
+            pos=jnp.zeros((batch_size,), jnp.int32))
+
+    def prefill(params, batch):
+        """Chunked-scan prefill: one parallel pass builds all layer states."""
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = apply_embed(params["embed"], cfg, tokens)
+        Ss, xts, xcs = [], [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+            z = apply_norm(lp["ln1"], cfg, x, kind="layernorm")
+            y, (S_i, xt_i) = rwkv_mod.apply_rwkv_time(
+                lp["time"], cfg, z, chunk=min(cfg.ssm_chunk, 64),
+                return_state=True)
+            x = x + y
+            z2 = apply_norm(lp["ln2"], cfg, x, kind="layernorm")
+            x = x + rwkv_mod.apply_rwkv_channel(lp["chan"], cfg, z2)
+            Ss.append(S_i); xts.append(xt_i)
+            xcs.append(z2[:, -1].astype(jnp.float32))
+        x = apply_norm(params["final_norm"], cfg, x, kind="layernorm")
+        logits = apply_lm_head(params["lm_head"], cfg, x[:, -1:])[:, 0]
+        state = RWKVDecodeState(S=jnp.stack(Ss), x_time=jnp.stack(xts),
+                                x_chan=jnp.stack(xcs),
+                                pos=jnp.full((b,), s, jnp.int32))
+        return logits, state
+
+    def decode_step(params, tok, state: RWKVDecodeState):
+        x = apply_embed(params["embed"], cfg, tok[:, None])
+
+        def body(h, layer_in):
+            lp, S, xt, xc = layer_in
+            st = rwkv_mod.RWKVState(S=S, x_time=xt, x_chan=xc)
+            z = apply_norm(lp["ln1"], cfg, h, kind="layernorm")
+            y, st = rwkv_mod.rwkv_time_decode(lp["time"], cfg, z, st)
+            h = h + y
+            z = apply_norm(lp["ln2"], cfg, h, kind="layernorm")
+            y, st = rwkv_mod.rwkv_channel_decode(lp["chan"], cfg, z, st)
+            h = h + y
+            return h, (st.S, st.x_time, st.x_chan)
+
+        if cfg.scan_layers:
+            x, (S, xt, xc) = lax.scan(
+                body, x, (params["layers"], state.S, state.x_time,
+                          state.x_chan))
+        else:
+            Ss, xts, xcs = [], [], []
+            for i in range(cfg.n_layers):
+                lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+                x, (S_i, xt_i, xc_i) = body(x, (lp, state.S[i],
+                                                state.x_time[i],
+                                                state.x_chan[i]))
+                Ss.append(S_i); xts.append(xt_i); xcs.append(xc_i)
+            S, xt, xc = jnp.stack(Ss), jnp.stack(xts), jnp.stack(xcs)
+        x = apply_norm(params["final_norm"], cfg, x, kind="layernorm")
+        logits = apply_lm_head(params["lm_head"], cfg, x)[:, 0]
+        return logits, RWKVDecodeState(S=S, x_time=xt, x_chan=xc,
+                                       pos=state.pos + 1)
+
+    return Model(cfg=cfg, init=init, loss_fn=loss_fn, prefill=prefill,
+                 decode_step=decode_step, init_decode_state=init_decode_state)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return build_decoder_lm(cfg)
+    if cfg.family == "hybrid":
+        return build_hybrid_lm(cfg)
+    if cfg.family == "ssm":
+        return build_rwkv_lm(cfg)
+    if cfg.family == "encdec":
+        from .encdec import build_encdec
+        return build_encdec(cfg)
+    raise ValueError(cfg.family)

@@ -1,0 +1,4 @@
+from .adamw import adamw_init, adamw_update
+from .adafactor import adafactor_init, adafactor_update
+from .schedule import warmup_cosine
+from .api import make_optimizer, Optimizer

@@ -1,0 +1,75 @@
+"""Adafactor (factored second moments, beta1=0) — the memory-frugal choice
+for the 1T-parameter kimi-k2 config: second-moment statistics are stored as
+row/column means of the trailing 2-D block of each parameter, so optimizer
+memory is O(rows + cols) instead of O(rows * cols)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: Any          # row stats (param shape minus last dim) or full v for 1-D
+    vc: Any          # col stats (param shape minus second-to-last dim)
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params) -> AdafactorState:
+    def vr(p):
+        # factored: row stats (shape minus last dim); 1-D params: full v
+        return jnp.zeros(p.shape[:-1] if _factored(p) else p.shape,
+                         jnp.float32)
+    def vc(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((1,), jnp.float32)      # unused for 1-D
+    return AdafactorState(step=jnp.zeros((), jnp.int32),
+                          vr=jax.tree_util.tree_map(vr, params),
+                          vc=jax.tree_util.tree_map(vc, params))
+
+
+def adafactor_update(grads, state: AdafactorState, params, lr,
+                     decay: float = 0.99, eps: float = 1e-30,
+                     clip_threshold: float = 1.0,
+                     weight_decay: float = 0.0) -> Tuple[Any, AdafactorState]:
+    step = state.step + 1
+
+    def upd(p, g, vr, vc):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if _factored(p):
+            vr = decay * vr + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc = decay * vc + (1 - decay) * jnp.mean(g2, axis=-2)
+            r = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+            u = g / jnp.sqrt(jnp.maximum(r[..., None], eps))
+            u = u / jnp.sqrt(jnp.maximum(vc[..., None, :], eps)) * jnp.sqrt(
+                jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+            )[..., None]
+            # The above implements u = g / sqrt(vr*vc/mean(vr)) with
+            # broadcasting over the trailing 2-D block.
+        else:
+            vr = decay * vr + (1 - decay) * g2
+            u = g / jnp.sqrt(jnp.maximum(vr, eps))
+        # update clipping (RMS(u) <= clip_threshold)
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        newp = (p.astype(jnp.float32) * (1 - lr * weight_decay)
+                - lr * u).astype(p.dtype)
+        return newp, vr, vc
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_vr = tdef.flatten_up_to(state.vr)
+    flat_vc = tdef.flatten_up_to(state.vc)
+    out = [upd(p, g, vr, vc) for p, g, vr, vc in
+           zip(flat_p, flat_g, flat_vr, flat_vc)]
+    return (tdef.unflatten([o[0] for o in out]),
+            AdafactorState(step=step,
+                           vr=tdef.unflatten([o[1] for o in out]),
+                           vc=tdef.unflatten([o[2] for o in out])))

@@ -1,0 +1,61 @@
+"""Uniform optimizer interface used by the trainer and the dry-run."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from .adamw import adamw_init, adamw_update, AdamWState
+from .adafactor import adafactor_init, adafactor_update, AdafactorState
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]      # (grads, state, params, lr) -> (params, state)
+    name: str
+
+
+def make_optimizer(cfg: ArchConfig) -> Optimizer:
+    if cfg.optimizer == "adamw":
+        return Optimizer(init=adamw_init, update=adamw_update, name="adamw")
+    if cfg.optimizer == "adafactor":
+        return Optimizer(init=adafactor_init, update=adafactor_update,
+                         name="adafactor")
+    raise ValueError(cfg.optimizer)
+
+
+def state_shardings(opt: Optimizer, param_specs: Any, param_shapes: Any,
+                    mesh: Mesh) -> Any:
+    """Optimizer-state shardings derived from the *parameter* specs (ZeRO:
+    moments co-sharded with their parameter; Adafactor's factored stats drop
+    the corresponding spec entry)."""
+    from ..models.sharding import validate_spec, use_mesh
+
+    def ns(spec, shape):
+        with use_mesh(mesh):
+            return NamedSharding(mesh, validate_spec(spec, shape))
+
+    scalar = NamedSharding(mesh, P())
+    if opt.name == "adamw":
+        moments = jax.tree_util.tree_map(
+            lambda s, p: ns(s, p.shape), param_specs, param_shapes)
+        return AdamWState(step=scalar, m=moments, v=moments)
+    if opt.name == "adafactor":
+        def vr_sh(s, p):
+            if len(p.shape) >= 2:
+                return ns(P(*s[:len(p.shape) - 1]), p.shape[:-1])
+            return ns(s, p.shape)
+        def vc_sh(s, p):
+            if len(p.shape) >= 2:
+                spec = list(s[:len(p.shape)]) + [None] * (
+                    len(p.shape) - len(s))
+                spec = spec[:len(p.shape) - 2] + [spec[len(p.shape) - 1]]
+                return ns(P(*spec), p.shape[:-2] + p.shape[-1:])
+            return scalar if False else ns(P(None), (1,))
+        vr = jax.tree_util.tree_map(vr_sh, param_specs, param_shapes)
+        vc = jax.tree_util.tree_map(vc_sh, param_specs, param_shapes)
+        return AdafactorState(step=scalar, vr=vr, vc=vc)
+    raise ValueError(opt.name)

@@ -1,0 +1,149 @@
+"""Serving engine: continuous batching with Theorem 4.2 admission control.
+
+The decode loop is a MapReduce round system: each decode slot is a reducer
+with bounded per-round I/O; requests are items.  The §4.2 FIFO discipline is
+applied literally — requests queue in arrival order, at most ``max_batch``
+occupy slots (the M bound), the rest wait in the input buffer; admission
+happens only at round boundaries, so no round blocks on a straggler.
+
+Continuous batching at *token* granularity: every round, each live slot
+consumes exactly one token — the next prompt token while the request is
+still prefilling (its logits are ignored), or its last sampled token while
+generating.  Slots evolve independently because the decode state is
+per-slot (per-slot pos, per-slot cache lines), so prefill and decode mix
+freely in one jitted ``decode_step`` — no separate prefill executable.
+
+Decoder-only families (dense/moe/vlm-text/hybrid/ssm).  Enc-dec serving
+needs the cross-KV prefill path (Model.prefill) and a per-slot frames feed;
+see examples/serve_batch.py for the decoder-only flow.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models import build_model
+from ..core.costmodel import MRCost
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (len,) int32
+    max_new_tokens: int = 16
+    output: Optional[List[int]] = None
+    submitted_at: float = 0.0
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    _prompt_pos: int = 0            # next prompt token to feed
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 8              # M: concurrently admitted requests
+    max_len: int = 256              # slot KV capacity
+    eos_token: int = -1             # <0: disabled (synthetic corpora)
+    pad_token: int = 0
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, scfg: ServeConfig):
+        self.cfg = cfg
+        self.scfg = scfg
+        self.model = build_model(cfg)
+        self.params = params
+        self.queue: List[Request] = []          # Thm 4.2 FIFO input buffer
+        self.active: List[Optional[Request]] = [None] * scfg.max_batch
+        self.state = self.model.init_decode_state(scfg.max_batch,
+                                                  scfg.max_len)
+        self.cur_tok = np.full(scfg.max_batch, scfg.pad_token, np.int32)
+        self.rounds = 0
+        self.finished: List[Request] = []
+        self.cost = MRCost()
+        self._jit_decode = jax.jit(self.model.decode_step)
+
+    def submit(self, req: Request) -> None:
+        req.submitted_at = time.time()
+        req.output = []
+        req._prompt_pos = 0
+        self.queue.append(req)                  # FIFO order preserved
+
+    def _admit(self) -> None:
+        for slot in range(self.scfg.max_batch):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                self.active[slot] = req
+                self.state = _zero_slot(self.state, slot)
+                self.cur_tok[slot] = int(req.prompt[0])
+                req._prompt_pos = 1
+
+    def step(self) -> int:
+        """One decode round; returns number of generated tokens emitted."""
+        self._admit()
+        live = [i for i, r in enumerate(self.active) if r is not None]
+        if not live:
+            return 0
+        logits, self.state = self._jit_decode(
+            self.params, jnp.asarray(self.cur_tok), self.state)
+        logits_np = np.asarray(logits)
+        emitted = 0
+        now = time.time()
+        for slot in live:
+            req = self.active[slot]
+            if req._prompt_pos < len(req.prompt):
+                # still prefilling: feed the next prompt token, drop logits
+                self.cur_tok[slot] = int(req.prompt[req._prompt_pos])
+                req._prompt_pos += 1
+                continue
+            nxt = int(np.argmax(logits_np[slot]))
+            if req.first_token_at is None:
+                req.first_token_at = now
+            req.output.append(nxt)
+            self.cur_tok[slot] = nxt
+            emitted += 1
+            if (nxt == self.scfg.eos_token
+                    or len(req.output) >= req.max_new_tokens
+                    or int(self.state.pos[slot]) >= self.scfg.max_len - 1):
+                req.finished_at = now
+                self.finished.append(req)
+                self.active[slot] = None
+        self.rounds += 1
+        self.cost.round(items_sent=len(live), max_io=len(live))
+        return emitted
+
+    def run_until_drained(self, max_rounds: int = 100_000) -> List[Request]:
+        while (self.queue or any(r is not None for r in self.active)):
+            self.step()
+            if self.rounds >= max_rounds:
+                raise RuntimeError("serve loop exceeded max_rounds")
+        return self.finished
+
+    def stats(self) -> Dict[str, Any]:
+        lat = [r.finished_at - r.submitted_at for r in self.finished
+               if r.finished_at]
+        ttft = [r.first_token_at - r.submitted_at for r in self.finished
+                if r.first_token_at]
+        toks = sum(len(r.output) for r in self.finished)
+        return {"requests": len(self.finished), "rounds": self.rounds,
+                "tokens": toks,
+                "mean_latency_s": float(np.mean(lat)) if lat else None,
+                "mean_ttft_s": float(np.mean(ttft)) if ttft else None}
+
+
+def _zero_slot(state, slot: int):
+    """Zero one batch slot of a decode state (per-slot pos included)."""
+    def z(path, leaf):
+        name = "/".join(str(getattr(e, "key", getattr(e, "name", e)))
+                        for e in path)
+        if leaf.ndim == 1 and "pos" in name:
+            return leaf.at[slot].set(0)
+        if leaf.ndim >= 2:
+            return leaf.at[:, slot].set(jnp.zeros_like(leaf[:, slot]))
+        return leaf
+    return jax.tree_util.tree_map_with_path(z, state)

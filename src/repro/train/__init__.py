@@ -1,0 +1,3 @@
+from .trainer import Trainer, TrainConfig
+from . import checkpoint
+from . import elastic

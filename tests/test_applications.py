@@ -1,0 +1,92 @@
+"""Paper §1.4 applications: convex hull and fixed-dim LP on the MR toolkit."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import MRCost, log_M
+from repro.core.applications import (convex_hull_mr, convex_hull_oracle,
+                                     linear_program_2d)
+
+
+class TestConvexHull:
+    @pytest.mark.parametrize("n,M", [(30, 8), (200, 16), (1000, 64)])
+    def test_matches_oracle(self, n, M):
+        rng = np.random.default_rng(n)
+        pts = rng.normal(size=(n, 2))
+        c = MRCost()
+        got = convex_hull_mr(jnp.asarray(pts), M, cost=c)
+        want = convex_hull_oracle(pts)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_round_bound(self):
+        """O(log_M N) rounds: sort rounds + merge-tree height."""
+        n, M = 2000, 32
+        rng = np.random.default_rng(0)
+        pts = rng.normal(size=(n, 2))
+        c = MRCost()
+        convex_hull_mr(jnp.asarray(pts), M, cost=c)
+        # generous concrete ceiling: sample-sort rounds + ceil(log2(n/M)) + 1
+        bound = 40 * log_M(n, M) + int(np.ceil(np.log2(n / M))) + 2
+        assert c.rounds <= bound
+
+    def test_collinear_and_duplicates(self):
+        pts = np.array([[0, 0], [1, 1], [2, 2], [3, 3], [0, 0], [3, 0],
+                        [0, 3]], np.float64)
+        got = convex_hull_mr(jnp.asarray(pts), 4)
+        want = convex_hull_oracle(pts)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.integers(3, 150), seed=st.integers(0, 99),
+           M=st.sampled_from([8, 16, 64]))
+    def test_property_hull_invariants(self, n, seed, M):
+        rng = np.random.default_rng(seed)
+        pts = rng.normal(size=(n, 2))
+        hull = convex_hull_mr(jnp.asarray(pts), M)
+        want = convex_hull_oracle(pts)
+        np.testing.assert_allclose(hull, want, rtol=1e-6)
+
+
+class TestLP:
+    def test_simple_box(self):
+        # min x + y s.t. x >= 1, y >= 2, x <= 5, y <= 5
+        A = [[-1, 0], [0, -1], [1, 0], [0, 1]]
+        b = [-1, -2, 5, 5]
+        x, obj = linear_program_2d([1.0, 1.0], A, b)
+        np.testing.assert_allclose(x, [1.0, 2.0], atol=1e-4)
+        assert abs(obj - 3.0) < 1e-4
+
+    def test_infeasible(self):
+        A = [[1, 0], [-1, 0]]
+        b = [-1, -1]                  # x <= -1 and x >= 1
+        x, obj = linear_program_2d([1.0, 0.0], A, b)
+        assert x is None and obj is None
+
+    def test_random_vs_bruteforce(self):
+        rng = np.random.default_rng(3)
+        for _ in range(5):
+            A = rng.normal(size=(12, 2))
+            b = rng.uniform(1, 2, size=12)   # contains the origin: feasible
+            cvec = rng.normal(size=2)
+            x, obj = linear_program_2d(cvec, A, b)
+            assert x is not None
+            # oracle: dense sampling of the candidate vertices
+            best = np.inf
+            for i in range(12):
+                for j in range(i + 1, 12):
+                    M2 = np.array([A[i], A[j]])
+                    if abs(np.linalg.det(M2)) < 1e-9:
+                        continue
+                    v = np.linalg.solve(M2, [b[i], b[j]])
+                    if np.all(A @ v <= b + 1e-5):
+                        best = min(best, float(cvec @ v))
+            assert abs(obj - best) < 1e-3
+
+    def test_funnel_rounds_accounted(self):
+        A = [[-1, 0], [0, -1], [1, 1]]
+        b = [0, 0, 4]
+        c = MRCost()
+        linear_program_2d([1.0, -1.0], A, b, M=8, cost=c)
+        assert c.rounds >= 1 and c.max_reducer_io <= 8

@@ -1,0 +1,98 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True on CPU) vs ref.py."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(1234)
+
+
+@pytest.mark.parametrize("rows,n,block_n", [
+    (1, 16, 8), (4, 1000, 256), (8, 2048, 512), (2, 17, 8), (16, 128, 128),
+])
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+@pytest.mark.parametrize("exclusive", [False, True])
+def test_prefix_scan(rows, n, block_n, dtype, exclusive):
+    if dtype == np.int32:
+        x = jnp.asarray(RNG.integers(-5, 50, (rows, n)).astype(dtype))
+    else:
+        x = jnp.asarray(RNG.normal(size=(rows, n)).astype(dtype))
+    got = ops.prefix_scan(x, exclusive=exclusive, block_n=block_n)
+    want = ref.prefix_scan_ref(x, exclusive=exclusive)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("n,n_buckets,block_t", [
+    (100, 8, 32), (5000, 50, 1024), (1024, 384, 256), (7, 3, 8),
+])
+def test_bincount(n, n_buckets, block_t):
+    ids = jnp.asarray(RNG.integers(-1, n_buckets, n).astype(np.int32))
+    got = ops.bincount(ids, n_buckets, block_t=block_t)
+    want = ref.bincount_ref(ids, n_buckets)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("rows,n", [(1, 8), (2, 64), (3, 100), (1, 7), (4, 256)])
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+def test_bitonic_sort(rows, n, dtype):
+    if dtype == np.int32:
+        # unique keys so the value permutation is deterministic
+        base = RNG.permutation(rows * n * 4)[:rows * n].reshape(rows, n)
+        k = jnp.asarray(base.astype(dtype))
+    else:
+        k = jnp.asarray(RNG.normal(size=(rows, n)).astype(dtype))
+    v = jnp.asarray(RNG.normal(size=(rows, n)).astype(np.float32))
+    ks, vs = ops.bitonic_sort(k, v)
+    kr, vr = ref.bitonic_sort_ref(k, v)
+    np.testing.assert_allclose(ks, kr, rtol=1e-6)
+    np.testing.assert_allclose(vs, vr, rtol=1e-6)
+
+
+@pytest.mark.parametrize("b,hq,hkv,s,d,causal", [
+    (2, 4, 2, 128, 64, True),
+    (1, 2, 2, 200, 32, False),     # exercises seq padding + key masking
+    (1, 8, 2, 256, 64, True),
+    (1, 2, 1, 100, 48, True),      # MQA + head-dim not 2^k
+    (2, 4, 4, 64, 128, False),
+])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_flash_attention(b, hq, hkv, s, d, causal, dtype):
+    q = jnp.asarray(RNG.normal(size=(b, hq, s, d)).astype(np.float32)).astype(dtype)
+    k = jnp.asarray(RNG.normal(size=(b, hkv, s, d)).astype(np.float32)).astype(dtype)
+    v = jnp.asarray(RNG.normal(size=(b, hkv, s, d)).astype(np.float32)).astype(dtype)
+    got = ops.flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    g = hq // hkv
+    kk = jnp.repeat(k, g, axis=1).reshape(b * hq, s, d)
+    vv = jnp.repeat(v, g, axis=1).reshape(b * hq, s, d)
+    want = ref.flash_attention_ref(
+        q.reshape(b * hq, s, d), kk, vv, causal=causal).reshape(b, hq, s, d)
+    tol = 2e-4 if dtype == np.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("b,t,d,block_t", [
+    (2, 100, 16, 64), (1, 513, 8, 128), (3, 64, 32, 16), (1, 16, 4, 16),
+])
+def test_ssm_scan(b, t, d, block_t):
+    a = jnp.asarray(RNG.uniform(0.8, 1.0, size=(b, t, d)).astype(np.float32))
+    x = jnp.asarray(RNG.normal(size=(b, t, d)).astype(np.float32))
+    got = ops.ssm_scan(a, x, block_t=block_t)
+    want = ref.ssm_scan_ref(a, x)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_decode_shape():
+    """serve_step pattern: 1 query token against a long KV cache."""
+    b, h, skv, d = 2, 4, 512, 64
+    q = jnp.asarray(RNG.normal(size=(b, h, 1, d)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(b, h, skv, d)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(b, h, skv, d)).astype(np.float32))
+    got = ops.flash_attention(q, k, v, causal=False, block_q=64, block_k=128)
+    want = ref.flash_attention_ref(q.reshape(b * h, 1, d),
+                                   k.reshape(b * h, skv, d),
+                                   v.reshape(b * h, skv, d),
+                                   causal=False).reshape(b, h, 1, d)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)

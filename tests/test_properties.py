@@ -1,0 +1,138 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (MRCost, shuffle, tree_prefix_sum, random_indexing,
+                        funnel_write, multisearch, sample_sort,
+                        brute_force_sort, make_queues, enqueue, dequeue)
+from repro.kernels import ops, ref
+
+SET = dict(max_examples=20, deadline=None)
+
+
+@settings(**SET)
+@given(n=st.integers(1, 300), m=st.integers(4, 64), seed=st.integers(0, 99))
+def test_prefix_sum_matches_cumsum(n, m, seed):
+    x = jnp.asarray(np.random.default_rng(seed).integers(-50, 50, n)
+                    .astype(np.int32))
+    c = MRCost()
+    got = tree_prefix_sum(x, m, cost=c)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.cumsum(np.asarray(x)))
+    c.check_io_bound(max(m, 2))
+
+
+@settings(**SET)
+@given(n=st.integers(2, 400), m=st.integers(4, 64), seed=st.integers(0, 99))
+def test_random_indexing_is_permutation(n, m, seed):
+    idx = random_indexing(n, jax.random.PRNGKey(seed), m)
+    assert sorted(np.asarray(idx).tolist()) == list(range(n))
+
+
+@settings(**SET)
+@given(n_nodes=st.integers(2, 32), cap=st.integers(1, 16),
+       seed=st.integers(0, 99))
+def test_shuffle_conservation(n_nodes, cap, seed):
+    """Items are never created or destroyed: delivered + dropped == sent."""
+    rng = np.random.default_rng(seed)
+    dests = jnp.asarray(rng.integers(-1, n_nodes, (n_nodes, 4))
+                        .astype(np.int32))
+    payload = jnp.arange(n_nodes * 4, dtype=jnp.float32).reshape(n_nodes, 4)
+    box, stats = shuffle(dests, payload, n_nodes, cap)
+    assert (int(jnp.sum(box.valid)) + int(stats.dropped)
+            == int(stats.items_sent))
+    # delivered items form a sub-multiset of the sent ones
+    got = np.sort(np.asarray(box.payload)[np.asarray(box.valid)])
+    sent = np.sort(np.asarray(payload)[np.asarray(dests) >= 0])
+    assert set(got.tolist()) <= set(sent.tolist())
+
+
+@settings(**SET)
+@given(p=st.integers(1, 300), n_cells=st.integers(1, 40),
+       m=st.integers(4, 64), seed=st.integers(0, 99))
+def test_funnel_write_equals_scatter_add(p, n_cells, m, seed):
+    rng = np.random.default_rng(seed)
+    addrs = jnp.asarray(rng.integers(-1, n_cells, p).astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=p).astype(np.float32))
+    res = funnel_write(addrs, vals, jnp.zeros(n_cells, jnp.float32),
+                       jnp.add, m, identity=jnp.float32(0))
+    oracle = np.zeros(n_cells, np.float32)
+    sel = np.asarray(addrs) >= 0
+    np.add.at(oracle, np.asarray(addrs)[sel], np.asarray(vals)[sel])
+    np.testing.assert_allclose(np.asarray(res.memory), oracle,
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(**SET)
+@given(nq=st.integers(1, 200), m=st.integers(1, 100),
+       M=st.integers(4, 64), seed=st.integers(0, 99))
+def test_multisearch_matches_searchsorted(nq, m, M, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=nq).astype(np.float32))
+    piv = jnp.sort(jnp.asarray(rng.normal(size=m).astype(np.float32)))
+    res = multisearch(q, piv, M, key=jax.random.PRNGKey(seed))
+    want = np.searchsorted(np.asarray(piv), np.asarray(q), side="left")
+    np.testing.assert_array_equal(np.asarray(res.buckets), want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 500), M=st.integers(4, 64), seed=st.integers(0, 99),
+       dup=st.booleans())
+def test_sample_sort_sorts(n, M, seed, dup):
+    rng = np.random.default_rng(seed)
+    if dup:
+        x = jnp.asarray(rng.integers(0, max(2, n // 10), n)
+                        .astype(np.float32))
+    else:
+        x = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    got = sample_sort(x, M, key=jax.random.PRNGKey(seed))
+    np.testing.assert_array_equal(np.asarray(got), np.sort(np.asarray(x)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(bursts=st.lists(st.integers(1, 40), min_size=1, max_size=5),
+       M=st.integers(2, 16))
+def test_queue_fifo_invariant(bursts, M):
+    """Whatever the burst pattern, items leave one node in arrival order
+    and at most M per round."""
+    q = make_queues(2, 512, jnp.float32(0))
+    expect = []
+    counter = 0
+    for b in bursts:
+        payload = jnp.arange(counter, counter + b, dtype=jnp.float32)
+        expect.extend(range(counter, counter + b))
+        counter += b
+        q, ov = enqueue(q, jnp.zeros(b, jnp.int32), payload)
+        assert int(ov) == 0
+    served = []
+    while int(jnp.sum(q.size)) > 0:
+        q, out, valid = dequeue(q, M)
+        batch = np.asarray(out[0])[np.asarray(valid[0])]
+        assert batch.shape[0] <= M
+        served.extend(int(v) for v in batch)
+    assert served == expect
+
+
+@settings(max_examples=10, deadline=None)
+@given(rows=st.integers(1, 4), n=st.integers(1, 130), seed=st.integers(0, 99))
+def test_bitonic_kernel_property(rows, n, seed):
+    rng = np.random.default_rng(seed)
+    k = jnp.asarray(rng.normal(size=(rows, n)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(rows, n)).astype(np.float32))
+    ks, vs = ops.bitonic_sort(k, v)
+    kr, vr = ref.bitonic_sort_ref(k, v)
+    np.testing.assert_allclose(np.asarray(ks), np.asarray(kr), rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 3), t=st.integers(1, 80), d=st.integers(1, 16),
+       bt=st.sampled_from([8, 16, 32]), seed=st.integers(0, 99))
+def test_ssm_scan_kernel_property(b, t, d, bt, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.uniform(0.5, 1.0, (b, t, d)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(b, t, d)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(ops.ssm_scan(a, x, block_t=bt)),
+                               np.asarray(ref.ssm_scan_ref(a, x)),
+                               rtol=3e-4, atol=3e-4)

@@ -1,0 +1,203 @@
+"""Substrate tests: optimizers, data pipeline, checkpoint/restart fault
+tolerance, serving engine, gradient compression."""
+import pathlib
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.optim import (adamw_init, adamw_update, adafactor_init,
+                         adafactor_update)
+from repro.optim.schedule import warmup_cosine
+from repro.optim import compress
+from repro.data import make_pipeline, SyntheticCorpus, global_shuffle_indices
+from repro.train import Trainer, TrainConfig, checkpoint as ckpt
+from repro.serve import ServeEngine, Request, ServeConfig
+
+
+class TestOptimizers:
+    def _quad_problem(self):
+        params = {"a": {"w": jnp.asarray([[1.0, -2.0], [3.0, 0.5]])},
+                  "b": jnp.asarray([0.3, -0.1])}
+        def loss(p):
+            return (jnp.sum(jnp.square(p["a"]["w"] - 1.0))
+                    + jnp.sum(jnp.square(p["b"] + 2.0)))
+        return params, loss
+
+    def test_adamw_converges(self):
+        params, loss = self._quad_problem()
+        state = adamw_init(params)
+        for _ in range(300):
+            g = jax.grad(loss)(params)
+            params, state = adamw_update(g, state, params, lr=0.05,
+                                         weight_decay=0.0)
+        assert float(loss(params)) < 1e-2
+
+    def test_adafactor_converges(self):
+        params, loss = self._quad_problem()
+        state = adafactor_init(params)
+        for _ in range(400):
+            g = jax.grad(loss)(params)
+            params, state = adafactor_update(g, state, params, lr=0.05)
+        assert float(loss(params)) < 5e-2
+
+    def test_schedule(self):
+        lr0 = float(warmup_cosine(jnp.asarray(0), peak_lr=1.0,
+                                  warmup_steps=10, total_steps=100))
+        lr10 = float(warmup_cosine(jnp.asarray(10), peak_lr=1.0,
+                                   warmup_steps=10, total_steps=100))
+        lr100 = float(warmup_cosine(jnp.asarray(100), peak_lr=1.0,
+                                    warmup_steps=10, total_steps=100))
+        assert lr0 == 0.0 and abs(lr10 - 1.0) < 1e-6 and lr100 < 0.11
+
+
+class TestCompression:
+    def test_int8_roundtrip_error_feedback(self):
+        rng = np.random.default_rng(0)
+        g = jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32))
+        res = jnp.zeros_like(g)
+        # accumulated reconstruction over steps tracks the true sum
+        total_true, total_rec = jnp.zeros_like(g), jnp.zeros_like(g)
+        for step in range(20):
+            gi = g * (1 + 0.1 * step)
+            q, scale, res = compress.compress_with_feedback(gi, res)
+            total_true += gi
+            total_rec += compress.dequantize_int8(q, scale)
+        # error feedback keeps the *cumulative* error bounded by one step's
+        # quantization error, not O(steps)
+        err = float(jnp.max(jnp.abs(total_true - total_rec)))
+        one_step = float(jnp.max(jnp.abs(g))) * 3 / 127
+        assert err < 3 * one_step
+
+    def test_wire_bytes(self):
+        g = {"w": jnp.zeros((1000, 10), jnp.float32)}
+        un, comp = compress.compression_wire_bytes(g)
+        assert un == 40000 and comp < 11000
+
+
+class TestData:
+    def test_restart_exact(self):
+        cfg = get_config("tinyllama-1.1b", reduced=True)
+        p1 = make_pipeline(cfg, 4, 32, seed=3)
+        p2 = make_pipeline(cfg, 4, 32, seed=3)
+        b1 = p1.batch_at(17)
+        b2 = p2.batch_at(17)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+    def test_labels_are_next_tokens(self):
+        cfg = get_config("tinyllama-1.1b", reduced=True)
+        b = make_pipeline(cfg, 2, 16, seed=0).batch_at(0)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+    def test_zipf_skew(self):
+        """§1.2: natural-language-like skew — most-frequent token dominates."""
+        corpus = SyntheticCorpus(vocab_size=1000, seed=0, order_weight=0.0)
+        toks = corpus.tokens(20000, 0)
+        counts = np.bincount(toks, minlength=1000)
+        assert counts.max() > 20 * np.median(counts[counts > 0])
+
+    def test_global_shuffle_paper_path(self):
+        perm = global_shuffle_indices(500, seed=1, paper_shuffle=True)
+        ref = global_shuffle_indices(500, seed=1, paper_shuffle=False)
+        np.testing.assert_array_equal(np.sort(perm), np.arange(500))
+        np.testing.assert_array_equal(perm, ref)   # same permutation law
+
+
+class TestFaultTolerance:
+    def test_checkpoint_restart_bit_exact(self, tmp_path):
+        """Train 6 steps; 'crash'; resume from step-4 checkpoint; the
+        continued run reproduces the uninterrupted run exactly."""
+        cfg = get_config("qwen1.5-0.5b", reduced=True)
+        tc = lambda d: TrainConfig(arch=cfg, global_batch=4, seq_len=16,
+                                   steps=6, ckpt_dir=str(d), ckpt_every=4,
+                                   log_every=1, warmup_steps=2, seed=5)
+        d1 = tmp_path / "uninterrupted"
+        t1 = Trainer(tc(d1))
+        r1 = t1.train()
+
+        d2 = tmp_path / "crashy"
+        t2 = Trainer(tc(d2))
+        t2.train(steps=5)              # runs past the step-4 checkpoint
+        # simulated crash: fresh trainer process resumes from disk
+        t3 = Trainer(tc(d2))
+        assert t3.maybe_resume()
+        assert t3.step == 4
+        r3 = t3.train()
+        assert abs(r1["final_loss"] - r3["final_loss"]) < 1e-5
+
+    def test_checkpoint_atomicity(self, tmp_path):
+        tree = {"w": jnp.arange(10.0)}
+        path = ckpt.save(str(tmp_path), 3, tree)
+        assert ckpt.latest_step(str(tmp_path)) == 3
+        restored, meta = ckpt.restore(str(tmp_path), 3, tree)
+        np.testing.assert_array_equal(restored["w"], tree["w"])
+        # a second save supersedes atomically
+        ckpt.save(str(tmp_path), 7, {"w": jnp.ones(10)})
+        assert ckpt.latest_step(str(tmp_path)) == 7
+
+    def test_async_saver(self, tmp_path):
+        saver = ckpt.AsyncSaver()
+        saver.save_async(str(tmp_path), 1, {"w": jnp.zeros(4)})
+        saver.wait()
+        assert ckpt.latest_step(str(tmp_path)) == 1
+
+
+class TestTrainerLoss:
+    def test_loss_decreases(self):
+        cfg = get_config("tinyllama-1.1b", reduced=True)
+        t = Trainer(TrainConfig(arch=cfg, global_batch=8, seq_len=32,
+                                steps=30, log_every=1, warmup_steps=5,
+                                peak_lr=1e-3, seed=0))
+        r = t.train()
+        first = r["history"][0][1]
+        last = r["history"][-1][1]
+        assert last < first, (first, last)
+
+
+class TestServing:
+    def test_continuous_batching_drains_fifo(self):
+        cfg = get_config("tinyllama-1.1b", reduced=True)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        eng = ServeEngine(cfg, params, ServeConfig(max_batch=2, max_len=64))
+        rng = np.random.default_rng(0)
+        reqs = [Request(uid=i,
+                        prompt=rng.integers(0, cfg.vocab_size, 5
+                                            ).astype(np.int32),
+                        max_new_tokens=4) for i in range(5)]
+        for r in reqs:
+            eng.submit(r)
+        done = eng.run_until_drained()
+        assert len(done) == 5
+        assert all(len(r.output) == 4 for r in done)
+        # Thm 4.2 discipline: never more than max_batch in flight
+        assert eng.cost.max_reducer_io <= 2
+
+    def test_engine_matches_offline_decode(self):
+        """Tokens generated by the engine == plain greedy decode."""
+        cfg = get_config("tinyllama-1.1b", reduced=True)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        prompt = np.asarray([5, 9, 2, 7], np.int32)
+
+        # offline: prefill + greedy loop on batch of 1
+        state = model.init_decode_state(1, 64)
+        tok = None
+        for t in range(len(prompt)):
+            logits, state = model.decode_step(
+                params, jnp.asarray([prompt[t]]), state)
+        offline = []
+        cur = int(jnp.argmax(logits[0]))
+        for _ in range(4):
+            offline.append(cur)
+            logits, state = model.decode_step(params, jnp.asarray([cur]),
+                                              state)
+            cur = int(jnp.argmax(logits[0]))
+
+        eng = ServeEngine(cfg, params, ServeConfig(max_batch=3, max_len=64))
+        eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=4))
+        done = eng.run_until_drained()
+        assert done[0].output == offline

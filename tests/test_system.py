@@ -1,0 +1,103 @@
+"""End-to-end system behaviour tests."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, SHAPES, get_shape, \
+    shape_applicable
+from repro.models import build_model
+from repro.train import Trainer, TrainConfig
+from repro.data import make_pipeline
+
+
+def test_all_archs_registered():
+    assert len(ARCH_IDS) == 10
+    for arch in ARCH_IDS:
+        full = get_config(arch)
+        red = get_config(arch, reduced=True)
+        assert full.family == red.family
+        assert full.n_params() > red.n_params()
+
+
+def test_assigned_shape_grid():
+    """40 cells; exactly the 8 full-attention long_500k cells skip."""
+    skips = []
+    runs = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for sh in SHAPES:
+            ok, why = shape_applicable(cfg, sh)
+            (runs if ok else skips).append((arch, sh.name))
+    assert len(runs) + len(skips) == 40
+    assert len(skips) == 8
+    assert all(s == "long_500k" for _, s in skips)
+    assert ("zamba2-1.2b", "long_500k") in runs
+    assert ("rwkv6-1.6b", "long_500k") in runs
+
+
+def test_exact_published_configs():
+    """Spot-check the published architecture numbers (assignment table)."""
+    g = get_config("granite-8b")
+    assert (g.n_layers, g.d_model, g.n_heads, g.n_kv_heads, g.d_ff,
+            g.vocab_size) == (36, 4096, 32, 8, 14336, 49152)
+    k = get_config("kimi-k2-1t-a32b")
+    assert (k.n_layers, k.d_model, k.n_experts, k.top_k,
+            k.vocab_size) == (61, 7168, 384, 8, 163840)
+    assert 0.9e12 < k.n_params() < 1.2e12          # the 1T headline
+    assert 25e9 < k.n_active_params() < 40e9       # the a32b headline
+    r = get_config("rwkv6-1.6b")
+    assert (r.n_layers, r.d_model, r.d_ff, r.vocab_size) == (24, 2048, 7168,
+                                                             65536)
+    w = get_config("whisper-base")
+    assert (w.enc_layers, w.n_layers, w.d_model, w.vocab_size) == (6, 6, 512,
+                                                                   51865)
+
+
+def test_train_then_serve_roundtrip(tmp_path):
+    """Train a tiny model, checkpoint it, serve from the checkpoint."""
+    from repro.train import checkpoint as ckpt
+    from repro.serve import ServeEngine, Request, ServeConfig
+    cfg = get_config("tinyllama-1.1b", reduced=True)
+    tc = TrainConfig(arch=cfg, global_batch=8, seq_len=32, steps=10,
+                     ckpt_dir=str(tmp_path), ckpt_every=10, log_every=5,
+                     warmup_steps=2)
+    t = Trainer(tc)
+    t.train()
+    step = ckpt.latest_step(str(tmp_path))
+    assert step == 10
+    restored, _ = ckpt.restore(str(tmp_path), step,
+                               {"params": t.params, "opt_state": t.opt_state})
+    eng = ServeEngine(cfg, restored["params"],
+                      ServeConfig(max_batch=2, max_len=48))
+    eng.submit(Request(uid=0, prompt=np.asarray([1, 2, 3], np.int32),
+                       max_new_tokens=5))
+    done = eng.run_until_drained()
+    assert len(done) == 1 and len(done[0].output) == 5
+
+
+def test_pipeline_determinism_across_instances():
+    cfg = get_config("olmo-1b", reduced=True)
+    a = make_pipeline(cfg, 4, 16, seed=9)
+    b = make_pipeline(cfg, 4, 16, seed=9)
+    for s in (0, 3, 11):
+        np.testing.assert_array_equal(a.batch_at(s)["tokens"],
+                                      b.batch_at(s)["tokens"])
+
+
+def test_moe_capacity_discipline():
+    """Over-capacity tokens are dropped (bounded-admission), never crash,
+    and the drop fraction falls as capacity grows (Thm 4.2 discipline)."""
+    import dataclasses
+    from repro.models.moe import init_moe, apply_moe
+    cfg = get_config("kimi-k2-1t-a32b", reduced=True)
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(2, 64, cfg.d_model)).astype(np.float32))
+    drops = []
+    for cf in (0.5, 1.0, 4.0):
+        out = apply_moe(p, dataclasses.replace(cfg, capacity_factor=cf), x)
+        drops.append(float(out.dropped_frac))
+        assert bool(jnp.all(jnp.isfinite(out.y)))
+    assert drops[0] >= drops[1] >= drops[2]
+    assert drops[2] < 0.05
