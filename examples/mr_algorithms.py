@@ -17,7 +17,9 @@ from repro.core import (MRCost, log_M, tree_height, shuffle,
                         tree_prefix_sum, prefix_cost_bound, random_indexing,
                         funnel_write, funnel_read, PRAMProgram, simulate_crcw,
                         multisearch, sample_sort, brute_force_sort,
-                        BSPProgram, run_bsp, make_queues, enqueue, dequeue)
+                        BSPProgram, run_bsp, make_queues, enqueue, dequeue,
+                        ReferenceEngine, LocalEngine, ShardedEngine,
+                        sample_sort_mr, multisearch_mr)
 
 rng = np.random.default_rng(0)
 M = 32
@@ -112,3 +114,19 @@ c = MRCost()
 bf = brute_force_sort(x[:500], M, cost=c)
 print(f"[Lem 4.3] brute-force sort n=500: comm={c.communication} "
       f"(O(N^2 log_M N) — why it is only used on the sqrt(N) pivots)")
+
+# --- The unified engine API: one round program, three backends -------------
+print("\nunified MREngine API (Thm 2.1 as an interface):")
+key = jax.random.PRNGKey(1)
+xs = x[:4096]
+want = np.sort(np.asarray(xs))
+for engine in (ReferenceEngine(), LocalEngine(), ShardedEngine()):
+    res = sample_sort_mr(xs, M, engine=engine, key=key)
+    ok = bool((np.asarray(res.values) == want).all())
+    print(f"  sample_sort_mr on {engine.name:9s}: rounds="
+          f"{int(res.stats.rounds)} comm={int(res.stats.communication)} "
+          f"dropped={int(res.stats.dropped)} correct={ok}")
+qq, pv = x[:2000], jnp.sort(x[2000:2128])
+bk = multisearch_mr(qq, pv, M, engine=LocalEngine())
+print(f"  multisearch_mr on local: rounds={int(bk.stats.rounds)} correct="
+      f"{bool((np.asarray(bk.buckets) == np.searchsorted(np.asarray(pv), np.asarray(qq), side='left')).all())}")

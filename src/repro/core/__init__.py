@@ -1,31 +1,46 @@
 """Executable implementation of Goodrich-Sitchinava-Zhang, "Sorting,
 Searching, and Simulation in the MapReduce Framework" (2011), plus the
-TPU-native counterparts of each primitive.  See DESIGN.md."""
+TPU-native counterparts of each primitive.  See DESIGN.md.
 
-from .costmodel import MRCost, HardwareModel, log_M, tree_height
-from .mrmodel import Mailbox, make_mailbox, shuffle, run_round, run_rounds
+The unified engine API (repro.core.engine) is the entry point: algorithms
+are round programs over Mailbox states, executed by one of three
+interchangeable backends (ReferenceEngine / LocalEngine / ShardedEngine)."""
+
+from .costmodel import (MRCost, CostAccum, RoundStats, HardwareModel,
+                        log_M, tree_height)
+from .mrmodel import (Mailbox, ShuffleStats, make_mailbox, shuffle,
+                      run_round, run_rounds)
+from .engine import (MREngine, RoundProgram, ReferenceEngine, LocalEngine,
+                     ShardedEngine, get_engine, default_engine)
 from .prefix import (tree_prefix_sum, prefix_sum_opt, random_indexing,
                      prefix_cost_bound, max_leaf_occupancy)
 from .funnel import (funnel_write, funnel_read, scatter_combine_opt,
-                     PRAMProgram, simulate_crcw)
-from .multisearch import (multisearch, multisearch_opt,
-                          brute_force_multisearch, MultisearchResult)
-from .sortmr import brute_force_sort, sample_sort, sort_opt
+                     FunnelResult, PRAMProgram, simulate_crcw)
+from .multisearch import (multisearch, multisearch_mr, multisearch_opt,
+                          brute_force_multisearch, MultisearchResult,
+                          EngineSearchResult)
+from .sortmr import (brute_force_sort, sample_sort, sample_sort_mr, sort_opt,
+                     EngineSortResult)
 from .bsp import BSPProgram, run_bsp
 from .queues import QueueState, make_queues, enqueue, dequeue, run_queued
 from .applications import (convex_hull_mr, convex_hull_oracle,
                            linear_program_2d)
 
 __all__ = [
-    "MRCost", "HardwareModel", "log_M", "tree_height",
-    "Mailbox", "make_mailbox", "shuffle", "run_round", "run_rounds",
+    "MRCost", "CostAccum", "RoundStats", "HardwareModel",
+    "log_M", "tree_height",
+    "Mailbox", "ShuffleStats", "make_mailbox", "shuffle",
+    "run_round", "run_rounds",
+    "MREngine", "RoundProgram", "ReferenceEngine", "LocalEngine",
+    "ShardedEngine", "get_engine", "default_engine",
     "tree_prefix_sum", "prefix_sum_opt", "random_indexing",
     "prefix_cost_bound", "max_leaf_occupancy",
-    "funnel_write", "funnel_read", "scatter_combine_opt",
+    "funnel_write", "funnel_read", "scatter_combine_opt", "FunnelResult",
     "PRAMProgram", "simulate_crcw",
-    "multisearch", "multisearch_opt", "brute_force_multisearch",
-    "MultisearchResult",
-    "brute_force_sort", "sample_sort", "sort_opt",
+    "multisearch", "multisearch_mr", "multisearch_opt",
+    "brute_force_multisearch", "MultisearchResult", "EngineSearchResult",
+    "brute_force_sort", "sample_sort", "sample_sort_mr", "sort_opt",
+    "EngineSortResult",
     "BSPProgram", "run_bsp",
     "QueueState", "make_queues", "enqueue", "dequeue", "run_queued",
     "convex_hull_mr", "convex_hull_oracle", "linear_program_2d",

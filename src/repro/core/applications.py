@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from .costmodel import MRCost, log_M
-from .sortmr import sample_sort
+from .sortmr import sample_sort, sample_sort_mr
 from .funnel import funnel_write
 
 
@@ -59,11 +59,14 @@ def _monotone_chain(pts: np.ndarray) -> np.ndarray:
 
 def convex_hull_mr(points: jnp.ndarray, M: int,
                    key: Optional[jax.Array] = None,
-                   cost: Optional[MRCost] = None) -> np.ndarray:
+                   cost: Optional[MRCost] = None,
+                   engine=None) -> np.ndarray:
     """2-D convex hull, counter-clockwise, via sample-sort + tree merge.
 
     points: (n, 2) float array.  Returns hull vertices (h, 2) CCW starting
-    from the lexicographically smallest point.
+    from the lexicographically smallest point.  With ``engine=`` the §4.3
+    sort stage runs as engine rounds (:func:`repro.core.sortmr.
+    sample_sort_mr`) instead of the host-recursive faithful path.
     """
     pts = np.asarray(points, np.float64)
     n = pts.shape[0]
@@ -73,8 +76,16 @@ def convex_hull_mr(points: jnp.ndarray, M: int,
     # perturbation — sample_sort sorts scalars, so sort x and use stable
     # tie-handling by sorting packed keys.
     order_key = pts[:, 0] + 1e-9 * (pts[:, 1] / (1 + np.abs(pts[:, 1])))
-    sorted_vals = np.asarray(sample_sort(jnp.asarray(order_key, jnp.float32),
-                                         M, key=key, cost=cost))
+    if engine is not None:
+        res = sample_sort_mr(jnp.asarray(order_key, jnp.float32), M,
+                             engine=engine, key=key)
+        engine.require_no_drops(res.stats, what="convex-hull sort stage")
+        sorted_vals = np.asarray(res.values)
+        if cost is not None:
+            cost.absorb(res.stats)
+    else:
+        sorted_vals = np.asarray(sample_sort(
+            jnp.asarray(order_key, jnp.float32), M, key=key, cost=cost))
     ranks = np.searchsorted(sorted_vals, order_key.astype(np.float32))
     # resolve duplicate packed keys deterministically
     order = np.argsort(ranks, kind="stable")

@@ -18,8 +18,8 @@ from typing import Any, Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .costmodel import MRCost
-from .mrmodel import Mailbox, shuffle
+from .costmodel import CostAccum, MRCost
+from .mrmodel import Mailbox
 
 
 class BSPProgram(NamedTuple):
@@ -34,8 +34,17 @@ class BSPProgram(NamedTuple):
 
 def run_bsp(prog: BSPProgram, proc_state: Any, n_supersteps: int, M: int,
             n_procs: int, msg_template: Any,
-            cost: Optional[MRCost] = None) -> Any:
-    """Theorem 3.1 driver: R supersteps -> R rounds, C = O(R * N)."""
+            cost: Optional[MRCost] = None, engine=None) -> Any:
+    """Theorem 3.1 driver: R supersteps -> R rounds, C = O(R * N).
+
+    Supersteps execute on an :class:`~repro.core.engine.MREngine` (default
+    LocalEngine) — the message exchange is the engine's Shuffle step, and
+    the same program runs on the reference or sharded backend by passing
+    ``engine=``.  Costs accumulate functionally; the mutable ``cost``
+    adapter absorbs them once at the end."""
+    if engine is None:
+        from .engine import default_engine
+        engine = default_engine()
     proc_ids = jnp.arange(n_procs, dtype=jnp.int32)
     inbox = Mailbox(
         payload=jax.tree_util.tree_map(
@@ -44,15 +53,22 @@ def run_bsp(prog: BSPProgram, proc_state: Any, n_supersteps: int, M: int,
     )
     state_items = sum(int(x.shape[0]) if x.ndim else 1
                       for x in jax.tree_util.tree_leaves(proc_state))
+    accum = CostAccum.zero()
     for t in range(n_supersteps):
         proc_state, dests, msgs = prog.superstep(
             t, proc_ids, proc_state, inbox.payload, inbox.valid)
-        inbox, stats = shuffle(dests, msgs, n_procs, M)
+        inbox, stats = engine.shuffle(dests, msgs, n_procs, M)
+        # Strict-model validity is enforced per superstep: running on after
+        # a drop would feed later supersteps a silently truncated inbox.
         if int(stats.dropped):
             raise RuntimeError(
-                f"superstep {t}: processor exceeded message bound M={M}")
-        if cost is not None:
-            # kept state counts as send-to-self (paper's "keep" primitive)
-            cost.round(items_sent=int(stats.items_sent) + state_items,
-                       max_io=int(jnp.maximum(stats.max_sent, stats.max_received)))
+                f"superstep {t}: processor exceeded message bound M={M} "
+                f"({int(stats.dropped)} messages dropped)")
+        # kept state counts as send-to-self (paper's "keep" primitive)
+        accum = accum.add_round(
+            items_sent=jnp.asarray(stats.items_sent) + state_items,
+            max_io=jnp.maximum(jnp.asarray(stats.max_sent, jnp.int32),
+                               jnp.asarray(stats.max_received, jnp.int32)))
+    if cost is not None:
+        cost.absorb(accum)
     return proc_state

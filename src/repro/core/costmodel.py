@@ -17,7 +17,98 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+
+
+class RoundStats(NamedTuple):
+    """Per-round shuffle observables (Theorem 2.1's send/keep/receive bounds).
+
+    Fields are scalars — jnp arrays on the jit-able backends, numpy scalars on
+    the reference backend — so a round program can thread them through
+    ``lax.scan`` without host synchronization.
+    """
+
+    items_sent: jnp.ndarray      # sum_v |B_v(r)|  (includes keeps)
+    max_sent: jnp.ndarray        # max items sent by any node
+    max_received: jnp.ndarray    # max items received by any node
+    dropped: jnp.ndarray         # items lost to capacity overflow (0 = valid)
+
+
+class CostAccum(NamedTuple):
+    """Functional accumulator of the paper's complexity measures.
+
+    The value-typed counterpart of :class:`MRCost`: every field is a scalar
+    array, updates return new values, and the whole tuple is a pytree — so it
+    can be carried through ``jax.jit`` / ``lax.scan`` round loops without the
+    host round-trips the mutable side channel forced.  ``communication`` and
+    ``internal_time`` are float32 (x64 is disabled; int32 would overflow on
+    the quadratic brute-force stages), the rest int32.
+    """
+
+    rounds: jnp.ndarray
+    communication: jnp.ndarray
+    internal_time: jnp.ndarray
+    max_reducer_io: jnp.ndarray
+    dropped: jnp.ndarray
+
+    @staticmethod
+    def zero() -> "CostAccum":
+        return CostAccum(rounds=jnp.int32(0),
+                         communication=jnp.float32(0),
+                         internal_time=jnp.float32(0),
+                         max_reducer_io=jnp.int32(0),
+                         dropped=jnp.int32(0))
+
+    def add_round(self, items_sent, max_io, dropped=0) -> "CostAccum":
+        """Record one map-shuffle-reduce round (pure update)."""
+        max_io = jnp.asarray(max_io, jnp.int32)
+        return CostAccum(
+            rounds=(self.rounds + 1).astype(jnp.int32),
+            communication=(self.communication
+                           + jnp.asarray(items_sent, jnp.float32)),
+            internal_time=(self.internal_time
+                           + jnp.asarray(max_io, jnp.float32)),
+            max_reducer_io=jnp.maximum(self.max_reducer_io, max_io),
+            dropped=(self.dropped + jnp.asarray(dropped, jnp.int32)),
+        )
+
+    def add_round_stats(self, stats: RoundStats) -> "CostAccum":
+        """Record one round from the shuffle's measured :class:`RoundStats`."""
+        return self.add_round(
+            items_sent=stats.items_sent,
+            max_io=jnp.maximum(jnp.asarray(stats.max_sent, jnp.int32),
+                               jnp.asarray(stats.max_received, jnp.int32)),
+            dropped=stats.dropped)
+
+    def merge_parallel(self, other: "CostAccum") -> "CostAccum":
+        """Costs incurred in parallel: rounds/time take the max, comm adds."""
+        return CostAccum(
+            rounds=jnp.maximum(self.rounds, other.rounds),
+            communication=self.communication + other.communication,
+            internal_time=jnp.maximum(self.internal_time, other.internal_time),
+            max_reducer_io=jnp.maximum(self.max_reducer_io,
+                                       other.max_reducer_io),
+            dropped=self.dropped + other.dropped,
+        )
+
+    def merge_sequential(self, other: "CostAccum") -> "CostAccum":
+        return CostAccum(
+            rounds=(self.rounds + other.rounds).astype(jnp.int32),
+            communication=self.communication + other.communication,
+            internal_time=self.internal_time + other.internal_time,
+            max_reducer_io=jnp.maximum(self.max_reducer_io,
+                                       other.max_reducer_io),
+            dropped=self.dropped + other.dropped,
+        )
+
+    def to_mrcost(self) -> "MRCost":
+        """Host-side reporting adapter (the one synchronization point)."""
+        return MRCost(rounds=int(self.rounds),
+                      communication=int(self.communication),
+                      internal_time=int(self.internal_time),
+                      max_reducer_io=int(self.max_reducer_io))
 
 
 @dataclasses.dataclass
@@ -50,6 +141,18 @@ class MRCost:
         self.communication += other.communication
         self.internal_time += other.internal_time
         self.max_reducer_io = max(self.max_reducer_io, other.max_reducer_io)
+
+    def absorb(self, accum: CostAccum) -> None:
+        """Fold a functional :class:`CostAccum` into this reporting object.
+
+        This is the single host-synchronization point for algorithms whose
+        round loops run device-side: they accumulate a CostAccum functionally
+        and absorb it here once, at the end."""
+        self.merge_sequential(accum.to_mrcost())
+
+    @classmethod
+    def from_accum(cls, accum: CostAccum) -> "MRCost":
+        return accum.to_mrcost()
 
     def check_io_bound(self, M: int) -> None:
         if self.max_reducer_io > M:

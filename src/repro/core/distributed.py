@@ -31,6 +31,27 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+try:                                    # jax >= 0.5 exports it at top level
+    shard_map = jax.shard_map
+except AttributeError:                  # 0.4.x: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map_exp
+
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma=None, check_rep=None, auto=None):
+        """Compat wrapper translating the modern jax.shard_map signature
+        (axis_names / check_vma) onto jax.experimental.shard_map
+        (auto / check_rep)."""
+        kwargs = {}
+        if auto is None and axis_names is not None:
+            auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if auto:
+            kwargs["auto"] = frozenset(auto)
+        check = check_vma if check_vma is not None else check_rep
+        if check is not None:
+            kwargs["check_rep"] = check
+        return _shard_map_exp(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kwargs)
+
 
 # ---------------------------------------------------------------------------
 # Shuffle (Theorem 2.1) — keyed all_to_all routing

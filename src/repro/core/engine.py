@@ -1,0 +1,366 @@
+"""Unified MREngine API: one round-program abstraction, pluggable backends.
+
+The paper's Theorem 2.1 defines a single round-based computation model that
+every algorithm in §3-§4 compiles into: each round, node v applies a
+sequential function f to its state A_v(r), emitting (destination, item)
+pairs; the shuffle routes items to form A_v(r+1).  This module is that model
+*as an API*: an algorithm is a :class:`RoundProgram` — a round function plus
+a round count and capacity — and an :class:`MREngine` executes it.  Three
+interchangeable backends (DESIGN.md §2):
+
+  ================== ========================== ===========================
+  backend            substrate                  role
+  ================== ========================== ===========================
+  ReferenceEngine    numpy, per-item host loop  semantics oracle for tests
+  LocalEngine        jnp, dense mailboxes       jit/lax.scan round loops
+  ShardedEngine      shard_map + all_to_all     same program over a mesh axis
+  ================== ========================== ===========================
+
+All three implement identical shuffle semantics — stable source-order FIFO
+delivery into per-node slots 0..capacity-1, items ranked past ``capacity``
+dropped and counted — so a round program yields bit-identical mailboxes and
+stats on every backend (``ShardedEngine`` included, at any axis size: the
+first all_to_all hop is lossless and sources are contiguous per shard, so
+global FIFO order is preserved).
+
+Cost accounting is functional: engines return :class:`RoundStats` per round
+and fold them into a :class:`CostAccum` value.  Both are pytrees of scalars,
+so a ``LocalEngine`` round loop jits and scans with zero host syncs; the
+mutable :class:`MRCost` survives only as a host-side reporting adapter
+(``MRCost.absorb``).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .costmodel import CostAccum, MRCost, RoundStats
+from .mrmodel import Mailbox, Payload, RoundFn, make_mailbox
+from .mrmodel import shuffle as _dense_shuffle
+
+
+class RoundProgram(NamedTuple):
+    """A Theorem 2.1 computation: R applications of one round function.
+
+    ``fn`` follows the :data:`repro.core.mrmodel.RoundFn` contract
+    ``f(round_idx, node_ids, mailbox) -> (dests, payload)`` with dests of
+    shape (V, M_out); -1 entries mean "no item", ``dests[v, j] = v`` is the
+    paper's "keep".  Under ``LocalEngine`` scan execution ``round_idx`` may
+    be a traced int32 — branch on it with ``jnp.where``, not Python ``if``.
+    """
+
+    fn: RoundFn
+    n_rounds: int
+    capacity: Optional[int] = None
+
+
+class MREngine:
+    """Interface over the Theorem 2.1 round semantics.
+
+    Subclasses provide :meth:`shuffle`; ``run_round`` / ``run_rounds`` /
+    ``run_program`` drive complete computations and account costs
+    functionally.
+    """
+
+    name = "abstract"
+
+    # -- backend layout hooks ------------------------------------------------
+    def aligned_nodes(self, n_nodes: int) -> int:
+        """Round a node count up to this backend's layout granularity."""
+        return max(1, int(n_nodes))
+
+    def node_ids(self, n_nodes: int) -> jnp.ndarray:
+        return jnp.arange(n_nodes, dtype=jnp.int32)
+
+    # -- the Shuffle step ----------------------------------------------------
+    def shuffle(self, dests, payload: Payload, n_nodes: int,
+                capacity: int) -> Tuple[Mailbox, RoundStats]:
+        """Deliver item j to node ``dests[j]`` (< 0 = no item; entries must
+        lie in [-1, n_nodes)).  FIFO by flattened source order."""
+        raise NotImplementedError
+
+    # -- round drivers -------------------------------------------------------
+    def run_round(self, f: RoundFn, box: Mailbox, round_idx,
+                  capacity: Optional[int] = None
+                  ) -> Tuple[Mailbox, RoundStats]:
+        """One round: apply f at every node, then shuffle."""
+        cap = capacity if capacity is not None else box.capacity
+        dests, payload = f(round_idx, self.node_ids(box.n_nodes), box)
+        return self.shuffle(dests, payload, box.n_nodes, cap)
+
+    def run_rounds(self, f: RoundFn, box: Mailbox, n_rounds: int,
+                   capacity: Optional[int] = None,
+                   accum: Optional[CostAccum] = None
+                   ) -> Tuple[Mailbox, CostAccum]:
+        """Drive R rounds, returning the final mailbox and accumulated cost."""
+        acc = accum if accum is not None else CostAccum.zero()
+        for r in range(n_rounds):
+            box, stats = self.run_round(f, box, r, capacity)
+            acc = acc.add_round_stats(stats)
+        return box, acc
+
+    def run_program(self, prog: RoundProgram, box: Mailbox,
+                    accum: Optional[CostAccum] = None
+                    ) -> Tuple[Mailbox, CostAccum]:
+        return self.run_rounds(prog.fn, box, prog.n_rounds,
+                               capacity=prog.capacity, accum=accum)
+
+    # -- host-side validity check -------------------------------------------
+    def require_no_drops(self, accum: CostAccum, what: str = "program") -> None:
+        """Host boundary: raise if any round overflowed mailbox capacity
+        (the w.h.p. failure event of the paper's randomized algorithms)."""
+        dropped = int(accum.dropped)
+        if dropped:
+            raise RuntimeError(
+                f"{self.name} engine: {dropped} items exceeded mailbox "
+                f"capacity while running {what}; raise the capacity or use "
+                f"repro.core.queues for the Theorem 4.2 discipline")
+
+
+# ---------------------------------------------------------------------------
+# ReferenceEngine — numpy oracle
+# ---------------------------------------------------------------------------
+
+class ReferenceEngine(MREngine):
+    """Per-item host-loop shuffle: the executable spec the array backends are
+    tested against.  Slow on purpose; run it on small inputs."""
+
+    name = "reference"
+
+    def node_ids(self, n_nodes: int) -> np.ndarray:
+        return np.arange(n_nodes, dtype=np.int32)
+
+    def shuffle(self, dests, payload: Payload, n_nodes: int,
+                capacity: int) -> Tuple[Mailbox, RoundStats]:
+        dests = np.asarray(dests)
+        flat_dest = dests.reshape(-1)
+        n = flat_dest.shape[0]
+        leaves, treedef = jax.tree_util.tree_flatten(payload)
+        flat_leaves = [np.asarray(l).reshape((n,) + np.asarray(l).shape[dests.ndim:])
+                       for l in leaves]
+        out_leaves = [np.zeros((n_nodes, capacity) + fl.shape[1:], fl.dtype)
+                      for fl in flat_leaves]
+        valid = np.zeros((n_nodes, capacity), bool)
+        recv_counts = np.zeros((n_nodes,), np.int64)
+        dropped = 0
+        for j in range(n):                       # FIFO: flattened source order
+            d = int(flat_dest[j])
+            if d < 0:
+                continue
+            r = int(recv_counts[d])
+            recv_counts[d] += 1
+            if r >= capacity:
+                dropped += 1
+                continue
+            for fl, ol in zip(flat_leaves, out_leaves):
+                ol[d, r] = fl[j]
+            valid[d, r] = True
+        if dests.ndim >= 2:
+            sent_per_node = np.sum(flat_dest.reshape(dests.shape[0], -1) >= 0,
+                                   axis=1)
+            max_sent = np.int32(sent_per_node.max(initial=0))
+        else:
+            max_sent = np.int32(1)
+        stats = RoundStats(
+            items_sent=np.int32(np.sum(flat_dest >= 0)),
+            max_sent=max_sent,
+            max_received=np.int32(recv_counts.max(initial=0)),
+            dropped=np.int32(dropped),
+        )
+        box = Mailbox(payload=jax.tree_util.tree_unflatten(treedef, out_leaves),
+                      valid=valid)
+        return box, stats
+
+
+# ---------------------------------------------------------------------------
+# LocalEngine — dense jnp mailboxes, scan-able round loops
+# ---------------------------------------------------------------------------
+
+class LocalEngine(MREngine):
+    """Dense single-process backend: :func:`repro.core.mrmodel.shuffle` on
+    jnp arrays.  ``run_rounds`` rolls the loop into a ``lax.scan`` (round_idx
+    arrives traced), so whole round programs jit-compile with no host syncs;
+    pass ``use_scan=False`` for round functions that need a static Python
+    round index."""
+
+    name = "local"
+
+    def __init__(self, use_scan: bool = True):
+        self.use_scan = use_scan
+
+    def shuffle(self, dests, payload: Payload, n_nodes: int,
+                capacity: int) -> Tuple[Mailbox, RoundStats]:
+        return _dense_shuffle(jnp.asarray(dests), payload, n_nodes, capacity)
+
+    def run_rounds(self, f: RoundFn, box: Mailbox, n_rounds: int,
+                   capacity: Optional[int] = None,
+                   accum: Optional[CostAccum] = None
+                   ) -> Tuple[Mailbox, CostAccum]:
+        acc = accum if accum is not None else CostAccum.zero()
+        if not self.use_scan or n_rounds <= 1:
+            return super().run_rounds(f, box, n_rounds, capacity, acc)
+        cap = capacity if capacity is not None else box.capacity
+        start = 0
+        if cap != box.capacity:
+            # first round reshapes the mailbox to (V, cap); scan the rest
+            box, stats = self.run_round(f, box, 0, cap)
+            acc = acc.add_round_stats(stats)
+            start = 1
+
+        def step(carry, r):
+            b, a = carry
+            b2, stats = self.run_round(f, b, r, cap)
+            return (b2, a.add_round_stats(stats)), None
+
+        if n_rounds - start > 0:
+            (box, acc), _ = lax.scan(
+                step, (box, acc),
+                jnp.arange(start, n_rounds, dtype=jnp.int32))
+        return box, acc
+
+
+# ---------------------------------------------------------------------------
+# ShardedEngine — the same semantics over a mesh axis
+# ---------------------------------------------------------------------------
+
+class ShardedEngine(MREngine):
+    """Distributed backend: nodes are partitioned contiguously across a mesh
+    axis (shard s owns nodes [s*V/n, (s+1)*V/n)) and the Shuffle step runs as
+    a two-phase route inside ``shard_map``:
+
+      1. a lossless keyed ``all_to_all`` (:func:`repro.core.distributed.
+         shuffle_alltoall` with per-pair capacity = the shard's item count)
+         delivers every item to its owner shard in source-shard order;
+      2. the dense local shuffle places arrivals into the owner's (V_local,
+         capacity) mailbox slots.
+
+    Because sources are contiguous per shard and phase 1 preserves source
+    order, the composition implements exactly the global FIFO + overflow
+    semantics of :class:`LocalEngine` at any axis size; with axis size 1 it
+    degenerates to the local operation (how the CPU tests validate it).
+
+    Node counts and the leading dim of 1-D destination arrays must be
+    divisible by the axis size — grow V with :meth:`aligned_nodes`.
+    """
+
+    name = "sharded"
+
+    def __init__(self, axis_name: str = "nodes",
+                 mesh: Optional[jax.sharding.Mesh] = None):
+        if mesh is None:
+            mesh = jax.make_mesh((jax.device_count(),), (axis_name,))
+        if axis_name not in mesh.axis_names:
+            raise ValueError(f"axis {axis_name!r} not in mesh {mesh.axis_names}")
+        self.mesh = mesh
+        self.axis_name = axis_name
+        self.n_shards = mesh.shape[axis_name]
+        self._compiled = {}
+
+    def aligned_nodes(self, n_nodes: int) -> int:
+        return -(-max(1, int(n_nodes)) // self.n_shards) * self.n_shards
+
+    def _build(self, n_nodes: int, capacity: int, lead: int, treedef,
+               shapes_dtypes):
+        from .distributed import shard_map, shuffle_alltoall
+
+        axis = self.axis_name
+        n_shards = self.n_shards
+        local_v = n_nodes // n_shards
+
+        def body(dests, *leaves):
+            flat_dest = dests.reshape(-1).astype(jnp.int32)
+            n_local = flat_dest.shape[0]
+            flat_leaves = [l.reshape((n_local,) + l.shape[dests.ndim:])
+                           for l in leaves]
+            owner = jnp.where(flat_dest >= 0,
+                              jnp.clip(flat_dest, 0, n_nodes - 1) // local_v,
+                              -1)
+            # Phase 1: lossless hop to the owner shard (per-pair capacity =
+            # all local items, so overflow can only happen at phase 2 — the
+            # same event LocalEngine counts).
+            routed = shuffle_alltoall(owner, (flat_dest, flat_leaves), axis,
+                                      capacity=n_local)
+            recv_dest, recv_leaves = routed.payload
+            recv_valid = routed.valid.reshape(-1)
+            shard = lax.axis_index(axis)
+            local_dest = jnp.where(recv_valid,
+                                   recv_dest.reshape(-1) - shard * local_v,
+                                   -1)
+            recv_flat = [rl.reshape((-1,) + rl.shape[2:]) for rl in recv_leaves]
+            box, st = _dense_shuffle(local_dest, recv_flat, local_v, capacity)
+            # Global stats: identical on every shard after the collectives.
+            items_sent = lax.psum(jnp.sum(flat_dest >= 0), axis)
+            if lead > 1:
+                sent_per_node = jnp.sum(
+                    (flat_dest >= 0).reshape(dests.shape[0], -1), axis=1)
+                max_sent = lax.pmax(jnp.max(sent_per_node), axis)
+            else:
+                max_sent = jnp.array(1, jnp.int32)
+            stats = RoundStats(
+                items_sent=items_sent.astype(jnp.int32),
+                max_sent=jnp.asarray(max_sent, jnp.int32),
+                max_received=lax.pmax(st.max_received, axis),
+                dropped=lax.psum(st.dropped, axis),
+            )
+            return box.payload, box.valid, stats
+
+        P = jax.sharding.PartitionSpec
+        n_leaves = len(shapes_dtypes)
+        in_specs = (P(axis),) + (P(axis),) * n_leaves
+        out_specs = ([P(axis)] * n_leaves, P(axis),
+                     RoundStats(P(), P(), P(), P()))
+        return jax.jit(shard_map(body, mesh=self.mesh, in_specs=in_specs,
+                                 out_specs=out_specs))
+
+    def shuffle(self, dests, payload: Payload, n_nodes: int,
+                capacity: int) -> Tuple[Mailbox, RoundStats]:
+        dests = jnp.asarray(dests)
+        if n_nodes % self.n_shards:
+            raise ValueError(
+                f"n_nodes={n_nodes} must be divisible by axis size "
+                f"{self.n_shards}; use aligned_nodes()")
+        leaves, treedef = jax.tree_util.tree_flatten(payload)
+        leaves = [jnp.asarray(l) for l in leaves]
+        if dests.shape[0] % self.n_shards:
+            if dests.ndim != 1:
+                raise ValueError(
+                    f"leading dim {dests.shape[0]} must be divisible by axis "
+                    f"size {self.n_shards} for per-node sends")
+            # 1-D entry shuffles: pad with "no item" — semantics unchanged.
+            pad = self.n_shards - dests.shape[0] % self.n_shards
+            dests = jnp.concatenate([dests, jnp.full((pad,), -1, dests.dtype)])
+            leaves = [jnp.concatenate(
+                [l, jnp.zeros((pad,) + l.shape[1:], l.dtype)]) for l in leaves]
+        key = (n_nodes, capacity, dests.shape, dests.ndim, treedef,
+               tuple((l.shape, str(l.dtype)) for l in leaves))
+        fn = self._compiled.get(key)
+        if fn is None:
+            fn = self._build(n_nodes, capacity, dests.ndim, treedef,
+                             [(l.shape, l.dtype) for l in leaves])
+            self._compiled[key] = fn
+        out_leaves, valid, stats = fn(dests, *leaves)
+        box = Mailbox(payload=jax.tree_util.tree_unflatten(treedef, out_leaves),
+                      valid=valid)
+        return box, stats
+
+
+@functools.lru_cache(maxsize=1)
+def default_engine() -> MREngine:
+    """The engine algorithms fall back to when none is passed (a shared
+    LocalEngine — cheap, jittable, single-process)."""
+    return LocalEngine()
+
+
+def get_engine(name: str, **kwargs) -> MREngine:
+    """Engine factory: 'reference' | 'local' | 'sharded'."""
+    engines = {"reference": ReferenceEngine, "local": LocalEngine,
+               "sharded": ShardedEngine}
+    if name not in engines:
+        raise ValueError(f"unknown engine {name!r}; pick from {sorted(engines)}")
+    return engines[name](**kwargs)

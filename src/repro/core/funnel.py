@@ -28,7 +28,7 @@ from typing import Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .costmodel import MRCost, tree_height
+from .costmodel import CostAccum, MRCost, tree_height
 
 Semigroup = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
 
@@ -51,7 +51,8 @@ def _combine_sorted_segments(new_seg: jnp.ndarray, values: jnp.ndarray,
 
 class FunnelResult(NamedTuple):
     memory: jnp.ndarray
-    max_fan_in: int          # max items any tree node combined in one round
+    max_fan_in: jnp.ndarray  # max items any tree node combined in one round
+    stats: CostAccum         # functional per-round accounting (jit-safe)
 
 
 def funnel_write(addrs: jnp.ndarray, values: jnp.ndarray, memory: jnp.ndarray,
@@ -64,6 +65,10 @@ def funnel_write(addrs: jnp.ndarray, values: jnp.ndarray, memory: jnp.ndarray,
     write); concurrent writes to a cell are combined with the commutative
     semigroup ``op`` through the cell's implicit d-ary funnel, then the root
     applies the combined update to ``memory`` (again with ``op``).
+
+    Accounting is functional (``result.stats`` is a :class:`CostAccum`), so
+    the whole funnel jit-compiles with no host syncs; the mutable ``cost``
+    adapter, if given, absorbs the accumulator once at the end.
     """
     P = addrs.shape[0]
     d = max(2, M // 2)
@@ -73,7 +78,8 @@ def funnel_write(addrs: jnp.ndarray, values: jnp.ndarray, memory: jnp.ndarray,
     cells = jnp.where(live, addrs, -1).astype(jnp.int32)
     group = jnp.arange(P, dtype=jnp.int32)   # leaf of proc i in every tree
     vals = values
-    max_fan = 1
+    max_fan = jnp.int32(1)
+    accum = CostAccum.zero()
     for _ in range(L):                        # L rounds up the funnel
         group = group // d
         # Items sharing (cell, group) meet at one tree node: sort and combine.
@@ -89,17 +95,17 @@ def funnel_write(addrs: jnp.ndarray, values: jnp.ndarray, memory: jnp.ndarray,
         # Fan-in accounting: size of the largest live segment this round.
         sizes = jnp.zeros((P,), jnp.int32).at[seg_ord].add(
             live_s.astype(jnp.int32))
-        round_fan = int(jnp.max(sizes))
-        max_fan = max(max_fan, round_fan)
+        round_fan = jnp.max(sizes)
+        max_fan = jnp.maximum(max_fan, round_fan)
         # Compact: one item per segment survives (at its ordinal position).
         tgt = jnp.where(is_last, seg_ord, P)
         cells = jnp.full((P,), -1, jnp.int32).at[tgt].set(cells_s, mode="drop")
         group = jnp.zeros((P,), jnp.int32).at[tgt].set(group_s, mode="drop")
         vals = jnp.zeros_like(vals).at[tgt].set(scanned, mode="drop")
         live = jnp.zeros((P,), bool).at[tgt].set(live_s, mode="drop")
-        if cost is not None:
-            cost.round(items_sent=int(jnp.sum(live)),
-                       max_io=min(max(round_fan, 1), M))
+        accum = accum.add_round(
+            items_sent=jnp.sum(live),
+            max_io=jnp.minimum(jnp.maximum(round_fan, 1), M))
 
     # Root round: each cell now has at most one live combined item.
     upd_addr = jnp.where(live, cells, memory.shape[0])
@@ -113,9 +119,10 @@ def funnel_write(addrs: jnp.ndarray, values: jnp.ndarray, memory: jnp.ndarray,
         base = base.at[upd_addr].set(jnp.where(live, vals, identity),
                                      mode="drop")
         memory = op(memory, base)
+    accum = accum.add_round(items_sent=jnp.sum(live), max_io=1)
     if cost is not None:
-        cost.round(items_sent=int(jnp.sum(live)), max_io=1)
-    return FunnelResult(memory=memory, max_fan_in=max_fan)
+        cost.absorb(accum)                    # one host sync, at the end
+    return FunnelResult(memory=memory, max_fan_in=max_fan, stats=accum)
 
 
 def funnel_read(addrs: jnp.ndarray, memory: jnp.ndarray, M: int,
@@ -132,22 +139,24 @@ def funnel_read(addrs: jnp.ndarray, memory: jnp.ndarray, M: int,
     d = max(2, M // 2)
     L = tree_height(max(P, 2), d)
     if cost is not None:
+        accum = CostAccum.zero()
         group = jnp.arange(P, dtype=jnp.int32)
-        live = int(P)
+        live = jnp.int32(P)
         fan_out_per_level = []
         for _ in range(L):
             group = group // d
             order = jnp.lexsort((group, addrs))
             a_s, g_s = addrs[order], group[order]
-            uniq = int(jnp.sum(jnp.concatenate([
+            uniq = jnp.sum(jnp.concatenate([
                 jnp.ones((1,), bool),
-                (a_s[1:] != a_s[:-1]) | (g_s[1:] != g_s[:-1])])))
-            cost.round(items_sent=live, max_io=min(d, M))   # requests up
-            fan_out_per_level.append(live)
+                (a_s[1:] != a_s[:-1]) | (g_s[1:] != g_s[:-1])])).astype(jnp.int32)
+            accum = accum.add_round(items_sent=live, max_io=min(d, M))
+            fan_out_per_level.append(live)                  # requests up
             live = uniq
         for width in reversed(fan_out_per_level):           # values down
-            cost.round(items_sent=width, max_io=min(d, M))
-        cost.round(items_sent=int(P), max_io=1)             # leaves -> procs
+            accum = accum.add_round(items_sent=width, max_io=min(d, M))
+        accum = accum.add_round(items_sent=P, max_io=1)     # leaves -> procs
+        cost.absorb(accum)                                  # one host sync
     return memory[addrs]
 
 

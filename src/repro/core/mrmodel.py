@@ -25,9 +25,13 @@ from typing import Any, Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .costmodel import MRCost
+from .costmodel import MRCost, RoundStats
 
 Payload = Any  # pytree of arrays with leading dims (V, M, ...)
+
+#: Back-compat alias: shuffle statistics are the per-round stats the
+#: engine API accounts (see repro.core.engine).
+ShuffleStats = RoundStats
 
 
 class Mailbox(NamedTuple):
@@ -54,13 +58,6 @@ def empty_like(box: Mailbox) -> Mailbox:
         payload=jax.tree_util.tree_map(jnp.zeros_like, box.payload),
         valid=jnp.zeros_like(box.valid),
     )
-
-
-class ShuffleStats(NamedTuple):
-    items_sent: jnp.ndarray      # scalar int32: sum_v |B_v(r)|  (includes keeps)
-    max_sent: jnp.ndarray        # max items sent by any node
-    max_received: jnp.ndarray    # max items received by any node
-    dropped: jnp.ndarray         # items lost to capacity overflow (0 in a valid run)
 
 
 def shuffle(dests: jnp.ndarray, payload: Payload, n_nodes: int,
@@ -126,13 +123,16 @@ RoundFn = Callable[[int, jnp.ndarray, Mailbox], Tuple[jnp.ndarray, Payload]]
 
 def run_round(f: RoundFn, box: Mailbox, round_idx: int,
               cost: Optional[MRCost] = None,
-              capacity: Optional[int] = None) -> Tuple[Mailbox, ShuffleStats]:
-    """Execute one round of the generic computation: apply f, then shuffle."""
-    n_nodes = box.n_nodes
-    cap = capacity if capacity is not None else box.capacity
-    node_ids = jnp.arange(n_nodes, dtype=jnp.int32)
-    dests, payload = f(round_idx, node_ids, box)
-    new_box, stats = shuffle(dests, payload, n_nodes, cap)
+              capacity: Optional[int] = None,
+              engine=None) -> Tuple[Mailbox, ShuffleStats]:
+    """Execute one round of the generic computation: apply f, then shuffle.
+
+    Back-compat wrapper over the engine API (repro.core.engine): delegates to
+    ``engine.run_round`` (default :class:`~repro.core.engine.LocalEngine`)
+    and reports into the mutable ``cost`` adapter if given."""
+    if engine is None:
+        engine = _default_engine()
+    new_box, stats = engine.run_round(f, box, round_idx, capacity=capacity)
     if cost is not None:
         cost.round(items_sent=int(stats.items_sent),
                    max_io=int(jnp.maximum(stats.max_sent, stats.max_received)))
@@ -141,15 +141,23 @@ def run_round(f: RoundFn, box: Mailbox, round_idx: int,
 
 def run_rounds(f: RoundFn, box: Mailbox, n_rounds: int,
                cost: Optional[MRCost] = None,
-               capacity: Optional[int] = None) -> Mailbox:
-    """Drive R rounds.  Host-level loop: the paper's algorithms have static
-    round structure, so the loop bound is a Python int and each round may jit
-    its own f."""
-    for r in range(n_rounds):
-        box, stats = run_round(f, box, r, cost=cost, capacity=capacity)
-        if int(stats.dropped) != 0:
-            raise RuntimeError(
-                f"round {r}: {int(stats.dropped)} items exceeded mailbox capacity "
-                f"M={capacity or box.capacity}; use repro.core.queues for the "
-                f"Theorem 4.2 bounded-I/O discipline")
+               capacity: Optional[int] = None,
+               engine=None) -> Mailbox:
+    """Drive R rounds through an engine and raise on capacity overflow.
+
+    Back-compat wrapper: ``engine.run_rounds`` returns (mailbox, CostAccum)
+    without host syncs; this host-level driver additionally enforces the
+    strict-model validity condition (no drops) and feeds ``cost``."""
+    if engine is None:
+        engine = _default_engine()
+    box, accum = engine.run_rounds(f, box, n_rounds, capacity=capacity)
+    engine.require_no_drops(accum, what=f"{n_rounds} rounds at capacity "
+                            f"M={capacity or box.capacity}")
+    if cost is not None:
+        cost.absorb(accum)
     return box
+
+
+def _default_engine():
+    from .engine import default_engine    # deferred: engine imports mrmodel
+    return default_engine()

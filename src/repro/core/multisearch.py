@@ -24,7 +24,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from .costmodel import MRCost, log_M, tree_height
+from .costmodel import CostAccum, MRCost, log_M, tree_height
 from .prefix import random_indexing
 
 
@@ -32,6 +32,13 @@ class MultisearchResult(NamedTuple):
     buckets: jnp.ndarray        # (n_queries,) index in [0, n_pivots]
     max_congestion: int         # max queries at any tree node in any round
     rounds: int
+
+
+class EngineSearchResult(NamedTuple):
+    """Output of the engine-driven multisearch."""
+
+    buckets: jnp.ndarray        # (n_queries,) index in [0, n_pivots]
+    stats: CostAccum
 
 
 def _tree_descend(queries: jnp.ndarray, padded_pivots: jnp.ndarray,
@@ -86,7 +93,8 @@ def multisearch(queries: jnp.ndarray, pivots: jnp.ndarray, M: int,
 
     node = jnp.zeros((n_q,), jnp.int32)            # all queries at the root
     level = jnp.zeros((n_q,), jnp.int32) - batch   # batch i enters at round i
-    max_cong = 0
+    max_cong = jnp.int32(0)
+    accum = CostAccum.zero()
     total_rounds = L + K - 1
     for r in range(total_rounds):
         active = (level >= 0) & (level < L)
@@ -101,19 +109,117 @@ def multisearch(queries: jnp.ndarray, pivots: jnp.ndarray, M: int,
         seg_id = jnp.cumsum(seg_start) - 1
         sizes = jnp.bincount(seg_id, weights=(sk >= 0).astype(jnp.int32),
                              length=n_q)
-        max_cong = max(max_cong, int(jnp.max(sizes)))
+        round_cong = jnp.max(sizes).astype(jnp.int32)
+        max_cong = jnp.maximum(max_cong, round_cong)
         level = level + 1
-        if cost is not None:
-            cost.round(items_sent=int(jnp.sum(active)) + m,
-                       max_io=min(max(int(jnp.max(sizes)), 1), M))
+        accum = accum.add_round(
+            items_sent=jnp.sum(active) + m,
+            max_io=jnp.minimum(jnp.maximum(round_cong, 1), M))
+    if cost is not None:
+        cost.absorb(accum)                          # one host sync, at the end
 
     leaf = node                                     # leaf index in padded tree
     buckets = jnp.minimum(leaf, m).astype(jnp.int32)
     # queries beyond the largest pivot belong to the past-the-end bucket m
     # (when m == f^L the tree has no padding leaf to express this)
     buckets = jnp.where(queries > padded[m - 1], m, buckets)
-    return MultisearchResult(buckets=buckets, max_congestion=max_cong,
+    return MultisearchResult(buckets=buckets, max_congestion=int(max_cong),
                              rounds=total_rounds)
+
+
+def multisearch_mr(queries: jnp.ndarray, pivots: jnp.ndarray, M: int, *,
+                   engine=None, key: Optional[jax.Array] = None,
+                   capacity: Optional[int] = None,
+                   pipelined: bool = True) -> EngineSearchResult:
+    """Theorem 4.1 as a round program on the unified engine API.
+
+    The search tree is laid out as mailbox nodes: K batch-source nodes
+    [0, K), then tree level l at offset T_l (root = node K, leaves at level
+    L).  Batch b waits at source node b and enters the root at round b; a
+    query at level l < L descends one level per round via the implicit f-ary
+    index arithmetic; leaves keep.  After K + L rounds every query sits at
+    the leaf naming its bucket.  One algorithm definition — identical
+    buckets, mailboxes, and stats on Reference/Local/Sharded backends; on
+    ``LocalEngine`` the loop is a single ``lax.scan`` and the whole function
+    jit-compiles.
+
+    ``capacity`` defaults to n_queries (lossless).  The interesting regime is
+    capacity ~ M: per-node congestion is w.h.p. <= M thanks to the random
+    batching, and ``stats.dropped`` reports the w.h.p. failure event instead
+    of crashing a reducer.
+    """
+    if engine is None:
+        from .engine import default_engine
+        engine = default_engine()
+    queries = jnp.asarray(queries)
+    pivots = jnp.asarray(pivots)
+    n_q, m = queries.shape[0], pivots.shape[0]
+    n = n_q + m
+    f_br = max(2, M // 2)
+    L = tree_height(max(m, 2), f_br)
+    pad = f_br ** L - m
+    big = (jnp.finfo(pivots.dtype).max
+           if jnp.issubdtype(pivots.dtype, jnp.floating)
+           else jnp.iinfo(pivots.dtype).max)
+    padded = jnp.concatenate([jnp.sort(pivots),
+                              jnp.full((pad,), big, pivots.dtype)])
+
+    K = max(1, log_M(n, max(2, M))) if pipelined else 1
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    if pipelined and n_q > 1:
+        idx = random_indexing(n_q, key, M)
+        batch = ((idx * K) // n_q).astype(jnp.int32)
+    else:
+        batch = jnp.zeros((n_q,), jnp.int32)
+
+    # Node layout: sources [0, K); tree level l occupies [T[l], T[l] + f^l).
+    T = [K + (f_br ** l - 1) // (f_br - 1) for l in range(L + 1)]
+    V = engine.aligned_nodes(T[L] + f_br ** L)
+    cap = int(capacity) if capacity is not None else max(1, n_q)
+
+    accum = CostAccum.zero()
+    # Entry round: query j is thrown into its batch's source node.
+    box, st = engine.shuffle(batch,
+                             (queries, jnp.arange(n_q, dtype=jnp.int32)),
+                             V, cap)
+    accum = accum.add_round_stats(st)
+
+    def step(r, ids, b):
+        q, qi = b.payload
+        ids2 = ids[:, None]
+        is_src = ids2 < K
+        # tree descent, selected by the (static) level of each node id
+        dest = jnp.broadcast_to(ids2, q.shape).astype(jnp.int32)   # keep
+        for l in range(L):
+            k_local = ids2 - T[l]
+            stride = f_br ** (L - l - 1)
+            child_base = k_local * f_br
+            j = jnp.arange(f_br)
+            bound_idx = (child_base[..., None] + j + 1) * stride - 1
+            bounds = padded[jnp.clip(bound_idx, 0, padded.shape[0] - 1)]
+            c = jnp.minimum(jnp.sum(q[..., None] > bounds, axis=-1), f_br - 1)
+            at_l = (ids2 >= T[l]) & (ids2 < T[l] + f_br ** l)
+            dest = jnp.where(at_l, T[l + 1] + child_base + c, dest)
+        # source b releases its batch into the root at round b
+        dest = jnp.where(is_src, jnp.where(ids2 == r, T[0], ids2), dest)
+        dest = jnp.where(b.valid, dest, -1)
+        return dest.astype(jnp.int32), (q, qi)
+
+    box, accum = engine.run_rounds(step, box, K + L, accum=accum)
+
+    # Leaves -> output: scatter each query's leaf index by its original id.
+    q, qi = box.payload
+    valid = jnp.asarray(box.valid)
+    ids2 = jnp.arange(valid.shape[0], dtype=jnp.int32)[:, None]
+    at_leaf = valid & (ids2 >= T[L])
+    out_idx = jnp.where(at_leaf, jnp.asarray(qi), n_q)
+    leaf_k = jnp.minimum(ids2 - T[L], m).astype(jnp.int32)
+    buckets = jnp.zeros((n_q,), jnp.int32).at[out_idx.reshape(-1)].set(
+        jnp.broadcast_to(leaf_k, valid.shape).reshape(-1), mode="drop")
+    buckets = jnp.where(queries > padded[m - 1], m, buckets)
+    accum = accum.add_round(items_sent=n_q, max_io=1)
+    return EngineSearchResult(buckets=buckets, stats=accum)
 
 
 def multisearch_opt(queries: jnp.ndarray, pivots: jnp.ndarray) -> jnp.ndarray:

@@ -19,7 +19,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .costmodel import MRCost, tree_height
+from .costmodel import CostAccum, MRCost, tree_height
 
 
 def _pad_to_tree(x: jnp.ndarray, d: int, height: int) -> jnp.ndarray:
@@ -46,9 +46,12 @@ def tree_prefix_sum(values: jnp.ndarray, M: int,
     L = tree_height(max(n, 2), d)
     leaves = _pad_to_tree(values, d, L)
 
+    # Functional accounting: the per-round quantities are static (they depend
+    # only on n, M), so the accumulator is built value-style and absorbed
+    # into the mutable reporting adapter once at the end.
+    accum = CostAccum.zero()
     # Round 0: input node i sends a_i to leaf (L-1, i); leaves keep items after.
-    if cost is not None:
-        cost.round(items_sent=n, max_io=1)
+    accum = accum.add_round(items_sent=n, max_io=1)
 
     # --- Bottom-up phase.  levels[i] = subtree sums of the nodes at tree
     # level L-1-i; levels[0] = leaves (width d^L), levels[-1] = the root's
@@ -60,10 +63,9 @@ def tree_prefix_sum(values: jnp.ndarray, M: int,
         child = levels[-1]
         parent = jnp.sum(child.reshape(-1, d), axis=1)
         levels.append(parent)
-        if cost is not None:
-            # only non-empty nodes communicate (the tree is implicit)
-            cost.round(items_sent=occupied + n, max_io=d)
-            occupied = -(-occupied // d)
+        # only non-empty nodes communicate (the tree is implicit)
+        accum = accum.add_round(items_sent=occupied + n, max_io=d)
+        occupied = -(-occupied // d)
 
     # --- Top-down phase.  offsets[k] = sum of all leaves strictly left of
     # node k's subtree at the current level.  Each iteration is one MR round:
@@ -73,13 +75,13 @@ def tree_prefix_sum(values: jnp.ndarray, M: int,
         child_sums = levels[L - 1 - l].reshape(-1, d)
         excl = jnp.cumsum(child_sums, axis=1) - child_sums
         offsets = (offsets[:, None] + excl).reshape(-1)
-        if cost is not None:
-            occupied = min(offsets.shape[0], -(-n // d ** (L - 1 - l)) * d, 2 * n)
-            cost.round(items_sent=occupied + n, max_io=d)
+        occupied = min(offsets.shape[0], -(-n // d ** (L - 1 - l)) * d, 2 * n)
+        accum = accum.add_round(items_sent=occupied + n, max_io=d)
 
     # Final round: leaf k outputs a_k + s_{p(v)}.
+    accum = accum.add_round(items_sent=n, max_io=1)
     if cost is not None:
-        cost.round(items_sent=n, max_io=1)
+        cost.absorb(accum)
     return offsets[:n] + values if inclusive else offsets[:n]
 
 
@@ -121,10 +123,13 @@ def random_indexing(n: int, key: jax.Array, M: int,
     if cost is not None:
         d = max(2, M // 2)
         L = max(1, math.ceil(3 * math.log(max(n_hat, 2)) / math.log(d)))
-        occupancy = int(max_leaf_occupancy(slots))
-        cost.round(items_sent=n, max_io=occupancy)      # throw into leaves
+        occupancy = max_leaf_occupancy(slots)
+        accum = CostAccum.zero()
+        accum = accum.add_round(items_sent=n, max_io=occupancy)  # into leaves
         for _ in range(2 * L):                           # tree up + down
-            cost.round(items_sent=n, max_io=max(occupancy, d))
+            accum = accum.add_round(items_sent=n,
+                                    max_io=jnp.maximum(occupancy, d))
+        cost.absorb(accum)
     return idx
 
 

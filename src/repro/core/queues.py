@@ -28,7 +28,7 @@ from typing import Any, Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .costmodel import MRCost
+from .costmodel import CostAccum, MRCost
 
 
 class QueueState(NamedTuple):
@@ -97,13 +97,17 @@ def enqueue(q: QueueState, dests: jnp.ndarray, payload: Any,
                         weights=ok.astype(jnp.int32), length=n_nodes)
     new_size = q.size + recv.astype(jnp.int32)
     if cost is not None:
-        n_sent = int(jnp.sum(valid))
+        n_sent = jnp.sum(valid)
         # Theorem 4.2: three strict rounds (counts, linking, delivery); the
         # count/link rounds move O(#senders) control items, delivery moves the
         # payload.  Per-helper-node I/O stays <= M by construction.
-        cost.round(items_sent=min(n_sent, n_nodes * 2), max_io=min(n_sent, cap))
-        cost.round(items_sent=min(n_sent, n_nodes * 2), max_io=min(n_sent, cap))
-        cost.round(items_sent=n_sent, max_io=int(jnp.max(recv)) if n_sent else 0)
+        ctl = jnp.minimum(n_sent, n_nodes * 2)
+        accum = (CostAccum.zero()
+                 .add_round(items_sent=ctl, max_io=jnp.minimum(n_sent, cap))
+                 .add_round(items_sent=ctl, max_io=jnp.minimum(n_sent, cap))
+                 .add_round(items_sent=n_sent,
+                            max_io=jnp.max(recv).astype(jnp.int32)))
+        cost.absorb(accum)                    # one host sync per enqueue
     return QueueState(buf=new_buf, head=q.head, size=new_size), overflow
 
 

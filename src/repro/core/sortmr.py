@@ -24,13 +24,13 @@ redistribution (see repro.core.distributed.sharded_sample_sort).
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .costmodel import MRCost, log_M
+from .costmodel import CostAccum, MRCost, log_M
 from .multisearch import brute_force_multisearch, multisearch
 
 
@@ -127,6 +127,116 @@ def sample_sort(x: jnp.ndarray, M: int, key: Optional[jax.Array] = None,
             par.merge_parallel(c)
         cost.merge_sequential(par)
     return jnp.asarray(out)
+
+
+class EngineSortResult(NamedTuple):
+    """Output of the engine-driven sample sort."""
+
+    values: jnp.ndarray          # (n,) ascending — valid iff stats.dropped == 0
+    stats: CostAccum
+
+
+def sample_sort_mr(x: jnp.ndarray, M: int, *, engine=None,
+                   key: Optional[jax.Array] = None,
+                   n_nodes: Optional[int] = None,
+                   levels: int = 1, oversample: int = 8,
+                   slack: float = 3.0) -> EngineSortResult:
+    """§4.3 sample sort as a round program on the unified engine API.
+
+    The seed's host-recursive ``sample_sort`` re-enters Python at every
+    bucket; this version runs the whole computation as engine rounds over a
+    static mailbox layout, so on :class:`~repro.core.engine.LocalEngine` it
+    is ``jax.jit``-compilable end to end and on ``ShardedEngine`` the same
+    definition scales over a mesh axis.  The recursion is flattened into a
+    static radix schedule of ``levels`` bucket-refinement rounds (DESIGN.md
+    §3): with V reducers and branching B = V^(1/levels), round d routes every
+    item to the leader of its B^(levels-1-d)-wide bucket group, so items
+    converge to their final bucket in ``levels`` shuffles — the engine-round
+    image of the paper's recursive partitioning.  Then one reducer-local sort
+    round (the "keep" primitive) orders each bucket.
+
+    Splitters are the V-1 sample quantiles of a Theta(V * oversample) random
+    sample — the paper's pivot stage, with the brute-force pivot sort
+    realized by the dense in-memory sort it degenerates to when the sample
+    fits one reducer (§4.3 / Lemma 4.3), accounted as its O(log_M) rounds.
+
+    Returns values plus the functional :class:`CostAccum`; the result is
+    valid iff ``stats.dropped == 0`` (the paper's w.h.p. event — raise
+    ``slack`` or ``oversample`` if it fires).  Pure: safe under jit.
+    """
+    if engine is None:
+        from .engine import default_engine
+        engine = default_engine()
+    if key is None:
+        key = jax.random.PRNGKey(7)
+    x = jnp.asarray(x)
+    n = x.shape[0]
+    if n <= 1:
+        return EngineSortResult(values=x, stats=CostAccum.zero())
+    levels = max(1, int(levels))
+    V = n_nodes if n_nodes is not None else engine.aligned_nodes(
+        max(1, -(-n // max(2, M))))
+    B = max(2, math.ceil(V ** (1.0 / levels))) if V > 1 else 1
+
+    # Pivot stage: V-1 quantile splitters from a sorted random sample.
+    s = int(min(n, max(2, V * oversample)))
+    sample = jnp.sort(x[jax.random.permutation(key, n)[:s]])
+    splitters = sample[(jnp.arange(1, V) * s) // V]
+
+    def bucket_of(v):
+        b = jnp.searchsorted(splitters, v, side="left")
+        return jnp.clip(b, 0, V - 1).astype(jnp.int32)
+
+    accum = CostAccum.zero()
+    # account the pivot sort: O(log_M s) rounds moving the s samples
+    for _ in range(max(1, log_M(max(s, 2), max(2, M)))):
+        accum = accum.add_round(items_sent=s, max_io=min(s, max(2, M)))
+
+    def group_cap(d):
+        groups = min(V, B ** (d + 1))
+        return max(1, int(math.ceil(slack * n / groups)))
+
+    def level_dest(vals, valid, d):
+        width = B ** (levels - 1 - d)
+        dest = (bucket_of(vals) // width) * width
+        return jnp.where(valid, dest, -1)
+
+    # Level 0 routes straight from the input collection (the entry shuffle).
+    box, st = engine.shuffle(level_dest(x, jnp.ones_like(x, bool), 0), x,
+                             V, group_cap(0))
+    accum = accum.add_round_stats(st)
+    for d in range(1, levels):
+        def refine(r, ids, b, _d=d):
+            return level_dest(b.payload, b.valid, _d), b.payload
+        box, st = engine.run_round(refine, box, d, capacity=group_cap(d))
+        accum = accum.add_round_stats(st)
+
+    # Reducer-local sort round: sort within the mailbox, keep at self.
+    big = (jnp.finfo(x.dtype).max if jnp.issubdtype(x.dtype, jnp.floating)
+           else jnp.iinfo(x.dtype).max)
+
+    def local_sort(r, ids, b):
+        svals = jnp.sort(jnp.where(b.valid, b.payload, big), axis=1)
+        count = jnp.sum(b.valid, axis=1, keepdims=True)
+        slot = jnp.arange(svals.shape[1], dtype=jnp.int32)[None, :]
+        dest = jnp.where(slot < count, ids[:, None], -1)
+        return dest, svals
+
+    box, st = engine.run_round(local_sort, box, levels)
+    accum = accum.add_round_stats(st)
+
+    # Output assembly: bucket-major compaction (valid slots are a FIFO
+    # prefix per node, so position = bucket offset + slot).
+    valid = jnp.asarray(box.valid)
+    payload = jnp.asarray(box.payload)
+    counts = jnp.sum(valid, axis=1)
+    offsets = jnp.cumsum(counts) - counts
+    slot = jnp.arange(valid.shape[1], dtype=jnp.int32)[None, :]
+    pos = jnp.where(valid, offsets[:, None] + slot, n)
+    out = jnp.zeros((n,), x.dtype).at[pos.reshape(-1)].set(
+        payload.reshape(-1), mode="drop")
+    accum = accum.add_round(items_sent=n, max_io=1)   # leaves -> output
+    return EngineSortResult(values=out, stats=accum)
 
 
 def sort_opt(x: jnp.ndarray) -> jnp.ndarray:

@@ -163,8 +163,7 @@ def _moe_shuffle(p: Params, cfg: ArchConfig, x: jnp.ndarray) -> MoEOut:
     if mesh is None or "model" not in mesh.axis_names:
         return _moe_einsum(p, cfg, x)
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
-    from ..core.distributed import shuffle_alltoall
+    from ..core.distributed import shard_map, shuffle_alltoall
 
     b, s, d = x.shape
     e, k = cfg.n_experts, cfg.top_k

@@ -110,6 +110,19 @@ def shard(x: jnp.ndarray, *axes) -> jnp.ndarray:
                              "manual_axes", ()) or ())
     except Exception:
         manual = set()
+    if not manual:
+        # jax 0.4.x: no abstract-mesh API; an axis is manual (bound by an
+        # enclosing shard_map/pmap) iff it resolves to an axis frame.  This
+        # XLA generation also miscompiles sharding constraints on the auto
+        # axes of a partial-manual region (IsManualSubgroup check failure),
+        # so inside one we skip constraints and let GSPMD propagate the
+        # operands' auto-axis shardings.
+        for a in mesh.axis_names:
+            try:
+                jax.core.axis_frame(a)
+                return x
+            except Exception:
+                pass
     resolved = []
     for dim, axis in zip(x.shape, axes):
         r = _resolve(axis)

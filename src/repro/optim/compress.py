@@ -20,12 +20,15 @@ from jax import lax
 
 
 class EFState(NamedTuple):
-    residual: Any              # pytree like grads
+    residual: Any              # pytree like grads (+ leading pod dim if stacked)
 
 
-def ef_init(grads_shape: Any) -> EFState:
+def ef_init(grads_shape: Any, n_pod: int = 0) -> EFState:
+    """n_pod > 0 builds per-pod residuals (leading dim) for the stacked
+    formulation — each pod carries its own quantization error."""
+    lead = (n_pod,) if n_pod else ()
     return EFState(residual=jax.tree_util.tree_map(
-        lambda g: jnp.zeros(g.shape, jnp.float32), grads_shape))
+        lambda g: jnp.zeros(lead + g.shape, jnp.float32), grads_shape))
 
 
 def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -69,6 +72,33 @@ def tree_compressed_psum(grads: Any, axis_name: str, ef: EFState):
     reduced, residuals = [], []
     for g, r in zip(flat_g, flat_r):
         m, nr = compressed_psum(g, axis_name, r)
+        reduced.append(m.astype(g.dtype))
+        residuals.append(nr)
+    return (tdef.unflatten(reduced),
+            EFState(residual=tdef.unflatten(residuals)))
+
+
+def stacked_compressed_mean(g: jnp.ndarray, residual: jnp.ndarray):
+    """GSPMD counterpart of :func:`compressed_psum`: ``g`` carries an
+    explicit leading pod dimension instead of living inside a manual
+    shard_map region (whose partial-manual mode the 0.4.x XLA generation
+    miscompiles).  Same math: per-pod error-feedback int8 quantization, then
+    the mean of the dequantized per-pod gradients — the sum over the
+    pod-stacked dim lowers to the cross-pod reduction when that dim is
+    placed on the 'pod' mesh axis."""
+    q, scale, new_res = jax.vmap(compress_with_feedback)(g, residual)
+    total = jnp.sum(jax.vmap(dequantize_int8)(q, scale), axis=0)
+    return total / g.shape[0], new_res
+
+
+def tree_stacked_compressed_mean(grads: Any, ef: EFState):
+    """Tree version of :func:`stacked_compressed_mean`; grads leaves have a
+    leading pod dim matching ``ef_init(..., n_pod=)``."""
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_r = tdef.flatten_up_to(ef.residual)
+    reduced, residuals = [], []
+    for g, r in zip(flat_g, flat_r):
+        m, nr = stacked_compressed_mean(g, r)
         reduced.append(m.astype(g.dtype))
         residuals.append(nr)
     return (tdef.unflatten(reduced),

@@ -30,7 +30,7 @@ def test_shuffle_alltoall_roundtrip():
     out = run_with_devices("""
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
-    from repro.core.distributed import shuffle_alltoall
+    from repro.core.distributed import shard_map, shuffle_alltoall
     mesh = jax.make_mesh((8,), ("x",))
     n_local = 16
     def body(dests, vals):
@@ -39,7 +39,7 @@ def test_shuffle_alltoall_roundtrip():
     rng = np.random.default_rng(0)
     dests = jnp.asarray(rng.integers(0, 8, (8, n_local)).astype(np.int32))
     vals = jnp.arange(8 * n_local, dtype=jnp.float32).reshape(8, n_local)
-    f = jax.jit(jax.shard_map(body, mesh=mesh,
+    f = jax.jit(shard_map(body, mesh=mesh,
                 in_specs=(P("x", None), P("x", None)),
                 out_specs=(P("x", None), P("x", None), P("x"))))
     payload, valid, dropped = f(dests, vals)
@@ -64,7 +64,7 @@ def test_funnel_allreduce_matches_psum():
     out = run_with_devices("""
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
-    from repro.core.distributed import funnel_allreduce
+    from repro.core.distributed import funnel_allreduce, shard_map
     mesh = jax.make_mesh((2, 4), ("pod", "data"))
     x = jnp.arange(2 * 4 * 16, dtype=jnp.float32).reshape(8, 16)
     def fun(x):
@@ -72,9 +72,9 @@ def test_funnel_allreduce_matches_psum():
     def ref(x):
         return jax.lax.psum(jax.lax.psum(x, "data"), "pod")
     spec = P(("pod", "data"), None)
-    f1 = jax.jit(jax.shard_map(fun, mesh=mesh, in_specs=(spec,),
+    f1 = jax.jit(shard_map(fun, mesh=mesh, in_specs=(spec,),
                                out_specs=spec))
-    f2 = jax.jit(jax.shard_map(ref, mesh=mesh, in_specs=(spec,),
+    f2 = jax.jit(shard_map(ref, mesh=mesh, in_specs=(spec,),
                                out_specs=spec))
     np.testing.assert_allclose(np.asarray(f1(x)), np.asarray(f2(x)),
                                rtol=1e-6)
@@ -89,7 +89,7 @@ def test_softmax_merge_flash_decode():
     out = run_with_devices("""
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
-    from repro.core.distributed import AttnPartial, softmax_merge_axis
+    from repro.core.distributed import AttnPartial, shard_map, softmax_merge_axis
     mesh = jax.make_mesh((8,), ("kv",))
     rng = np.random.default_rng(0)
     T, D = 64, 16
@@ -102,7 +102,7 @@ def test_softmax_merge_flash_decode():
         p = jnp.exp(s - m)
         return softmax_merge_axis(
             AttnPartial(m=m, l=jnp.sum(p), o=p @ v_shard), "kv")
-    f = jax.jit(jax.shard_map(local, mesh=mesh,
+    f = jax.jit(shard_map(local, mesh=mesh,
                 in_specs=(P("kv", None), P("kv", None)), out_specs=P(None)))
     got = f(k, v)
     w = jax.nn.softmax(k @ q)
@@ -117,14 +117,14 @@ def test_sharded_sample_sort():
     out = run_with_devices("""
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
-    from repro.core.distributed import sharded_sample_sort
+    from repro.core.distributed import shard_map, sharded_sample_sort
     mesh = jax.make_mesh((8,), ("x",))
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(8 * 64,)).astype(np.float32))
     def body(xs):
         o = sharded_sample_sort(xs, "x")
         return o.values, o.valid, o.dropped[None]
-    f = jax.jit(jax.shard_map(body, mesh=mesh,
+    f = jax.jit(shard_map(body, mesh=mesh,
         in_specs=(P("x"),), out_specs=(P("x"), P("x"), P("x"))))
     out_values, out_valid, out_dropped = f(x)
     class O: pass

@@ -246,18 +246,25 @@ class TestSorting:
         got = brute_force_sort(x, 16)
         np.testing.assert_array_equal(np.asarray(got), np.sort(np.asarray(x)))
 
-    @pytest.mark.parametrize("n,M", [(100, 16), (1000, 32), (5000, 64)])
+    @pytest.mark.parametrize("n,M", [
+        (100, 16), (500, 32),
+        pytest.param(5000, 64, marks=pytest.mark.slow),
+    ])
     def test_sample_sort(self, n, M):
         x = jnp.asarray(RNG.normal(size=n).astype(np.float32))
         c = MRCost()
         got = sample_sort(x, M, key=jax.random.PRNGKey(1), cost=c)
         np.testing.assert_array_equal(np.asarray(got), np.sort(np.asarray(x)))
 
-    def test_sample_sort_communication_scaling(self):
+    @pytest.mark.parametrize("sizes", [
+        (300, 1200),
+        pytest.param((500, 2000, 8000), marks=pytest.mark.slow),
+    ])
+    def test_sample_sort_communication_scaling(self, sizes):
         """§4.3: C = O(N log_M N) w.h.p. — check measured C against the bound
         with an explicit constant."""
         M = 32
-        for n in (500, 2000, 8000):
+        for n in sizes:
             x = jnp.asarray(RNG.normal(size=n).astype(np.float32))
             c = MRCost()
             sample_sort(x, M, key=jax.random.PRNGKey(2), cost=c)
@@ -266,7 +273,7 @@ class TestSorting:
             assert c.communication <= bound, (n, c.communication, bound)
 
     def test_sample_sort_duplicates(self):
-        x = jnp.asarray(RNG.integers(0, 3, 500).astype(np.int32)
+        x = jnp.asarray(RNG.integers(0, 3, 300).astype(np.int32)
                         ).astype(jnp.float32)
         got = sample_sort(x, 16, key=jax.random.PRNGKey(3))
         np.testing.assert_array_equal(np.asarray(got), np.sort(np.asarray(x)))

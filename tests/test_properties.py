@@ -1,12 +1,19 @@
 """Property-based tests (hypothesis) on the system's invariants."""
 import numpy as np
+import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis dep "
+    "(pip install -e .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (MRCost, shuffle, tree_prefix_sum, random_indexing,
                         funnel_write, multisearch, sample_sort,
-                        brute_force_sort, make_queues, enqueue, dequeue)
+                        brute_force_sort, make_queues, enqueue, dequeue,
+                        convex_hull_mr)
+from repro.core.applications import convex_hull_oracle
 from repro.kernels import ops, ref
 
 SET = dict(max_examples=20, deadline=None)
@@ -77,6 +84,7 @@ def test_multisearch_matches_searchsorted(nq, m, M, seed):
     np.testing.assert_array_equal(np.asarray(res.buckets), want)
 
 
+@pytest.mark.slow
 @settings(max_examples=10, deadline=None)
 @given(n=st.integers(1, 500), M=st.integers(4, 64), seed=st.integers(0, 99),
        dup=st.booleans())
@@ -89,6 +97,36 @@ def test_sample_sort_sorts(n, M, seed, dup):
         x = jnp.asarray(rng.normal(size=n).astype(np.float32))
     got = sample_sort(x, M, key=jax.random.PRNGKey(seed))
     np.testing.assert_array_equal(np.asarray(got), np.sort(np.asarray(x)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(2, 400), M=st.sampled_from([8, 32]),
+       seed=st.integers(0, 99))
+def test_engine_sample_sort_sorts(n, M, seed):
+    """The engine-driven sort agrees with np.sort for arbitrary sizes
+    (distinct keys w.h.p.; stats.dropped reports the failure event)."""
+    from repro.core import LocalEngine, sample_sort_mr
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    res = sample_sort_mr(x, M, engine=LocalEngine(),
+                         key=jax.random.PRNGKey(seed), slack=4.0)
+    assert int(res.stats.dropped) == 0
+    np.testing.assert_array_equal(np.asarray(res.values),
+                                  np.sort(np.asarray(x)))
+
+
+@pytest.mark.slow
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(3, 150), seed=st.integers(0, 99),
+       M=st.sampled_from([8, 16, 64]))
+def test_property_hull_invariants(n, seed, M):
+    """Moved from test_applications.py: hull == oracle for arbitrary inputs
+    (exercises the full sample-sort + merge stack, hence slow)."""
+    rng = np.random.default_rng(seed)
+    pts = rng.normal(size=(n, 2))
+    hull = convex_hull_mr(jnp.asarray(pts), M)
+    want = convex_hull_oracle(pts)
+    np.testing.assert_allclose(hull, want, rtol=1e-6)
 
 
 @settings(max_examples=10, deadline=None)
