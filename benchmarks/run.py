@@ -192,19 +192,43 @@ def bench_moe_dispatch(quick):
 
 
 def bench_geometry(quick):
-    from repro.core import MRCost, convex_hull_mr, convex_hull_oracle, \
-        linear_program_2d
-    import numpy as np, jax.numpy as jnp
+    from repro.core import (LocalEngine, convex_hull_2d_mr,
+                            convex_hull_3d_mr, hull3d_round_bound,
+                            hull_round_bound, linear_program_mr,
+                            lp_round_bound)
     rng = np.random.default_rng(0)
+    engine = LocalEngine()
     n, M = (4000, 64) if not quick else (500, 32)
-    pts = rng.normal(size=(n, 2))
-    c = MRCost()
-    convex_hull_mr(jnp.asarray(pts), M, cost=c)
-    us = _timeit(lambda: convex_hull_mr(jnp.asarray(pts), M), n=1)
-    print(f"convex_hull_s1.4,{us:.0f},rounds={c.rounds}|n={n}|M={M}")
-    A = rng.normal(size=(24, 2)); b = rng.uniform(1, 2, 24)
-    us = _timeit(lambda: linear_program_2d([1.0, -0.5], A, b), n=2)
-    print(f"lp2d_funnel_s1.4,{us:.0f},Min-CRCW funnel over C(24,2) vertices")
+    pts = jnp.asarray(rng.normal(size=(n, 2)).astype(np.float32))
+    key = jax.random.PRNGKey(0)
+    fn = jax.jit(lambda p, k: convex_hull_2d_mr(p, M, engine=engine, key=k))
+    res = jax.block_until_ready(fn(pts, key))          # compile + rounds
+    us = _timeit(lambda: jax.block_until_ready(fn(pts, key).points), n=3)
+    print(f"hull2d_engine_s1.4,{us:.0f},rounds={int(res.stats.rounds)}"
+          f"|bound={hull_round_bound(n, M)}|h={int(res.count)}"
+          f"|dropped={int(res.stats.dropped)}|n={n}|M={M}")
+
+    n3 = 24 if not quick else 14
+    pts3 = jnp.asarray(rng.normal(size=(n3, 3)).astype(np.float32))
+    fn3 = jax.jit(lambda p: convex_hull_3d_mr(p, M, engine=engine))
+    res3 = jax.block_until_ready(fn3(pts3))
+    us = _timeit(lambda: jax.block_until_ready(fn3(pts3).mask), n=2)
+    print(f"hull3d_crcw_thm3.2,{us:.0f},rounds={int(res3.stats.rounds)}"
+          f"|bound={hull3d_round_bound(n3, M)}"
+          f"|verts={int(np.sum(np.asarray(res3.mask)))}|n={n3}")
+
+    nc, d = (24, 3) if not quick else (16, 3)
+    A = jnp.asarray(rng.normal(size=(nc, d)).astype(np.float32))
+    b = jnp.asarray(rng.uniform(1, 2, nc).astype(np.float32))
+    cvec = jnp.asarray(np.array([1.0, -0.5, 0.25], np.float32))
+    fnl = jax.jit(lambda c_, A_, b_: linear_program_mr(c_, A_, b_, M,
+                                                       engine=engine))
+    resl = jax.block_until_ready(fnl(cvec, A, b))
+    us = _timeit(lambda: jax.block_until_ready(fnl(cvec, A, b).objective),
+                 n=3)
+    print(f"lp_ddim_funnel_s1.4,{us:.0f},rounds={int(resl.stats.rounds)}"
+          f"|bound={lp_round_bound(nc, d, M)}|d={d}"
+          f"|Min-CRCW over C({nc},{d}) bases")
 
 
 def bench_cost_model(quick):

@@ -130,3 +130,42 @@ qq, pv = x[:2000], jnp.sort(x[2000:2128])
 bk = multisearch_mr(qq, pv, M, engine=LocalEngine())
 print(f"  multisearch_mr on local: rounds={int(bk.stats.rounds)} correct="
       f"{bool((np.asarray(bk.buckets) == np.searchsorted(np.asarray(pv), np.asarray(qq), side='left')).all())}")
+
+# --- §1.4 applications: engine-native computational geometry ---------------
+from repro.core import (convex_hull_2d_mr, convex_hull_3d, convex_hull_oracle,
+                        convex_hull_3d_oracle, hull_round_bound,
+                        hull3d_round_bound, linear_program_nd,
+                        linear_program_oracle, lp_round_bound)
+
+print("\nengine-native geometry (repro.core.geometry, §1.4):")
+pts2 = jnp.asarray(rng.normal(size=(3000, 2)).astype(np.float32))
+want_full = convex_hull_oracle(np.asarray(pts2))
+want_small = convex_hull_oracle(np.asarray(pts2[:400]))
+for engine in (ReferenceEngine(), LocalEngine(), ShardedEngine()):
+    # the reference backend shuffles per item on the host — keep it small
+    small = engine.name == "reference"
+    sub, want = (pts2[:400], want_small) if small else (pts2, want_full)
+    res = convex_hull_2d_mr(sub, M, engine=engine, key=jax.random.PRNGKey(2))
+    ok = np.allclose(np.asarray(res.points)[:int(res.count)], want,
+                     atol=1e-5)
+    print(f"  2-D hull on {engine.name:9s}: n={sub.shape[0]} rounds="
+          f"{int(res.stats.rounds)} (O(log_M N) bound "
+          f"{hull_round_bound(sub.shape[0], M)}) h={int(res.count)} "
+          f"dropped={int(res.stats.dropped)} correct={ok}")
+
+pts3 = rng.normal(size=(20, 3)).astype(np.float32)
+c = MRCost()
+verts = convex_hull_3d(pts3, M, engine=LocalEngine(), cost=c)
+print(f"  3-D hull via Thm 3.2 CRCW (P=C(20,3) facet procs, Max-funnels): "
+      f"rounds={c.rounds} (O(T log_M P) bound {hull3d_round_bound(20, M)}) "
+      f"verts={len(verts)} correct="
+      f"{np.array_equal(verts, convex_hull_3d_oracle(pts3))}")
+
+A4 = rng.normal(size=(12, 4)); b4 = rng.uniform(1, 2, 12)
+c4 = rng.normal(size=4)
+c = MRCost()
+x4, obj4 = linear_program_nd(c4, A4, b4, M, engine=LocalEngine(), cost=c)
+_, want4 = linear_program_oracle(c4, A4, b4)
+print(f"  d=4 LP by Min-CRCW over C(12,4) bases: rounds={c.rounds} "
+      f"(O(log_M P) bound {lp_round_bound(12, 4, M)}) obj={obj4:.4f} "
+      f"correct={abs(obj4 - want4) < 1e-3}")

@@ -14,17 +14,24 @@ from .engine import (MREngine, RoundProgram, ReferenceEngine, LocalEngine,
                      ShardedEngine, get_engine, default_engine)
 from .prefix import (tree_prefix_sum, prefix_sum_opt, random_indexing,
                      prefix_cost_bound, max_leaf_occupancy)
-from .funnel import (funnel_write, funnel_read, scatter_combine_opt,
-                     FunnelResult, PRAMProgram, simulate_crcw)
+from .funnel import (funnel_write, funnel_read, funnel_read_accum,
+                     scatter_combine_opt, FunnelResult, PRAMProgram,
+                     simulate_crcw)
 from .multisearch import (multisearch, multisearch_mr, multisearch_opt,
                           brute_force_multisearch, MultisearchResult,
                           EngineSearchResult)
 from .sortmr import (brute_force_sort, sample_sort, sample_sort_mr, sort_opt,
-                     EngineSortResult)
+                     quantile_splitters, EngineSortResult)
 from .bsp import BSPProgram, run_bsp
 from .queues import QueueState, make_queues, enqueue, dequeue, run_queued
-from .applications import (convex_hull_mr, convex_hull_oracle,
-                           linear_program_2d)
+from .geometry import (EngineHullResult, Hull3DResult, LPResult,
+                       convex_hull_2d, convex_hull_2d_mr, convex_hull_3d,
+                       convex_hull_3d_mr, convex_hull_3d_oracle,
+                       hull3d_round_bound, hull_round_bound,
+                       linear_program_mr, linear_program_nd,
+                       linear_program_oracle, lp_round_bound)
+from .geometry.oracles import convex_hull_oracle
+from .applications import convex_hull_mr, linear_program_2d
 
 __all__ = [
     "MRCost", "CostAccum", "RoundStats", "HardwareModel",
@@ -35,13 +42,20 @@ __all__ = [
     "ShardedEngine", "get_engine", "default_engine",
     "tree_prefix_sum", "prefix_sum_opt", "random_indexing",
     "prefix_cost_bound", "max_leaf_occupancy",
-    "funnel_write", "funnel_read", "scatter_combine_opt", "FunnelResult",
+    "funnel_write", "funnel_read", "funnel_read_accum",
+    "scatter_combine_opt", "FunnelResult",
     "PRAMProgram", "simulate_crcw",
     "multisearch", "multisearch_mr", "multisearch_opt",
     "brute_force_multisearch", "MultisearchResult", "EngineSearchResult",
     "brute_force_sort", "sample_sort", "sample_sort_mr", "sort_opt",
-    "EngineSortResult",
+    "quantile_splitters", "EngineSortResult",
     "BSPProgram", "run_bsp",
     "QueueState", "make_queues", "enqueue", "dequeue", "run_queued",
+    "EngineHullResult", "Hull3DResult", "LPResult",
+    "convex_hull_2d", "convex_hull_2d_mr", "convex_hull_3d",
+    "convex_hull_3d_mr", "convex_hull_3d_oracle",
+    "hull_round_bound", "hull3d_round_bound",
+    "linear_program_mr", "linear_program_nd", "linear_program_oracle",
+    "lp_round_bound",
     "convex_hull_mr", "convex_hull_oracle", "linear_program_2d",
 ]

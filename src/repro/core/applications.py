@@ -1,168 +1,70 @@
-"""Parallel computational geometry on the MapReduce toolkit (paper §1.4).
+"""DEPRECATED shim — the geometry applications moved to
+:mod:`repro.core.geometry`.
 
-The paper applies its simulations to convex hulls and fixed-dimensional
-linear programming.  Here both are built *from the paper's own primitives*:
+The seed implemented the §1.4 applications with host-Python reducers
+(``_monotone_chain`` ran as list-of-tuples stack loops) and a 2-variable-only
+LP.  The engine-native subsystem replaces them:
 
-``convex_hull_mr`` — 2-D convex hull in O(log_M N) rounds:
-  1. sort points by x with the §4.3 sample sort;
-  2. partition into runs of <= M points = one reducer each; each computes
-     its local hull (Andrew monotone chain — the sequential reducer f);
-  3. merge hulls pairwise up a binary tree: each round one reducer receives
-     two adjacent partial hulls (disjoint x-ranges, each <= M vertices
-     w.h.p. for points in general position) and merges them.  Height
-     O(log N / log 1) -> with d-ary grouping O(log_M N) rounds.
+  =============================  =======================================
+  old name (this module)         replacement (repro.core.geometry)
+  =============================  =======================================
+  ``convex_hull_mr``             ``convex_hull_2d`` / ``convex_hull_2d_mr``
+  ``convex_hull_oracle``         ``oracles.convex_hull_oracle``
+  ``linear_program_2d``          ``linear_program_nd`` / ``linear_program_mr``
+  =============================  =======================================
 
-``linear_program_2d`` — fixed-dimensional LP (minimize c.x s.t. Ax <= b)
-  by the Max-CRCW reduction: candidate vertices from constraint pairs are
-  evaluated in parallel and the best feasible one wins via the
-  invisible-funnel Min-combine (Thm 3.2) — the MapReduce analogue of the
-  Alon-Megiddo style constant-time RAM algorithms the paper cites.
+The wrappers below keep the seed's call signatures and return conventions
+(trimmed float64 hull CCW from the lex-min; ``(x, obj)`` or ``(None, None)``
+for the LP) but execute on the engine path — so the legacy API now also
+jits, shards, and handles the degenerate inputs the old reducers mishandled.
+Every call emits a :class:`DeprecationWarning`.
 
-Both carry MRCost accounting and are validated against numpy oracles.
+Precision note: the engine path computes in float32 (x64 is disabled on
+this substrate; DESIGN.md §2), where the seed's host reducers used float64.
+Hull *vertex classification* can therefore differ on adversarially
+near-degenerate inputs (coordinates whose collinearity is decided below
+float32 resolution); the float64 sequential ground truth remains available
+as :func:`repro.core.geometry.oracles.convex_hull_oracle`.
 """
 from __future__ import annotations
 
-import math
+import warnings
 from typing import Optional, Tuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .costmodel import MRCost, log_M
-from .sortmr import sample_sort, sample_sort_mr
-from .funnel import funnel_write
+from .costmodel import MRCost
+from .geometry import convex_hull_2d, linear_program_nd
+from .geometry.oracles import convex_hull_oracle as _hull_oracle
 
 
-def _cross(o, a, b):
-    return ((a[0] - o[0]) * (b[1] - o[1])
-            - (a[1] - o[1]) * (b[0] - o[0]))
-
-
-def _monotone_chain(pts: np.ndarray) -> np.ndarray:
-    """Sequential hull of x-sorted points (the reducer-local f)."""
-    pts = [tuple(p) for p in pts]
-    if len(pts) <= 2:
-        return np.asarray(pts)
-    lower = []
-    for p in pts:
-        while len(lower) >= 2 and _cross(lower[-2], lower[-1], p) <= 0:
-            lower.pop()
-        lower.append(p)
-    upper = []
-    for p in reversed(pts):
-        while len(upper) >= 2 and _cross(upper[-2], upper[-1], p) <= 0:
-            upper.pop()
-        upper.append(p)
-    return np.asarray(lower[:-1] + upper[:-1])
+def _warn(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.core.applications.{old} is deprecated; use "
+        f"repro.core.geometry.{new}", DeprecationWarning, stacklevel=3)
 
 
 def convex_hull_mr(points: jnp.ndarray, M: int,
                    key: Optional[jax.Array] = None,
                    cost: Optional[MRCost] = None,
                    engine=None) -> np.ndarray:
-    """2-D convex hull, counter-clockwise, via sample-sort + tree merge.
-
-    points: (n, 2) float array.  Returns hull vertices (h, 2) CCW starting
-    from the lexicographically smallest point.  With ``engine=`` the §4.3
-    sort stage runs as engine rounds (:func:`repro.core.sortmr.
-    sample_sort_mr`) instead of the host-recursive faithful path.
-    """
-    pts = np.asarray(points, np.float64)
-    n = pts.shape[0]
-    if n <= 2:
-        return pts
-    # 1. sort by (x, y): encode as a single sortable key via lexicographic
-    # perturbation — sample_sort sorts scalars, so sort x and use stable
-    # tie-handling by sorting packed keys.
-    order_key = pts[:, 0] + 1e-9 * (pts[:, 1] / (1 + np.abs(pts[:, 1])))
-    if engine is not None:
-        res = sample_sort_mr(jnp.asarray(order_key, jnp.float32), M,
-                             engine=engine, key=key)
-        engine.require_no_drops(res.stats, what="convex-hull sort stage")
-        sorted_vals = np.asarray(res.values)
-        if cost is not None:
-            cost.absorb(res.stats)
-    else:
-        sorted_vals = np.asarray(sample_sort(
-            jnp.asarray(order_key, jnp.float32), M, key=key, cost=cost))
-    ranks = np.searchsorted(sorted_vals, order_key.astype(np.float32))
-    # resolve duplicate packed keys deterministically
-    order = np.argsort(ranks, kind="stable")
-    spts = pts[np.lexsort((pts[:, 1], pts[:, 0]))]   # oracle-grade tiebreak
-    del order
-    # 2. reducer-local hulls on <= M-point runs
-    groups = [spts[i:i + M] for i in range(0, n, M)]
-    hulls = [_monotone_chain(g) for g in groups]
-    if cost is not None:
-        cost.round(items_sent=n, max_io=min(M, n))
-    # 3. pairwise tree merge: adjacent (disjoint x-range) hulls merge at one
-    # reducer per pair; O(log #groups) rounds.
-    while len(hulls) > 1:
-        nxt = []
-        io = 0
-        for i in range(0, len(hulls), 2):
-            if i + 1 < len(hulls):
-                both = np.concatenate([hulls[i], hulls[i + 1]])
-                both = both[np.lexsort((both[:, 1], both[:, 0]))]
-                nxt.append(_monotone_chain(both))
-                io = max(io, both.shape[0])
-            else:
-                nxt.append(hulls[i])
-        if cost is not None:
-            cost.round(items_sent=sum(h.shape[0] for h in hulls),
-                       max_io=max(io, 1))
-        hulls = nxt
-    hull = hulls[0]
-    # normalize: CCW from lexicographic minimum
-    start = np.lexsort((hull[:, 1], hull[:, 0]))[0]
-    return np.roll(hull, -start, axis=0)
+    """Deprecated: see :func:`repro.core.geometry.convex_hull_2d`."""
+    _warn("convex_hull_mr", "convex_hull_2d")
+    return convex_hull_2d(points, M, engine=engine, key=key, cost=cost)
 
 
 def convex_hull_oracle(points: np.ndarray) -> np.ndarray:
-    pts = np.asarray(points, np.float64)
-    spts = pts[np.lexsort((pts[:, 1], pts[:, 0]))]
-    hull = _monotone_chain(spts)
-    start = np.lexsort((hull[:, 1], hull[:, 0]))[0]
-    return np.roll(hull, -start, axis=0)
+    """Deprecated: see :func:`repro.core.geometry.oracles.convex_hull_oracle`."""
+    _warn("convex_hull_oracle", "oracles.convex_hull_oracle")
+    return _hull_oracle(points)
 
 
 def linear_program_2d(c: jnp.ndarray, A: jnp.ndarray, b: jnp.ndarray,
                       M: int = 64,
                       cost: Optional[MRCost] = None
                       ) -> Tuple[Optional[np.ndarray], Optional[float]]:
-    """min c.x  s.t.  A x <= b  (2 variables, n constraints).
-
-    Parallel structure: every constraint pair (i, j) is a PRAM processor
-    computing its intersection vertex; feasibility is a parallel test; the
-    best feasible objective wins through a Min-semigroup funnel write
-    (Thm 3.2) into a single cell.  O(n^2) work — the paper's point is
-    round-efficiency, not work-efficiency, for fixed dimension.
-
-    Returns (x_opt, objective) or (None, None) if infeasible/unbounded
-    among vertices.
-    """
-    c = jnp.asarray(c, jnp.float32)
-    A = jnp.asarray(A, jnp.float32)
-    bv = jnp.asarray(b, jnp.float32)
-    n = A.shape[0]
-    ii, jj = jnp.triu_indices(n, k=1)
-    A1, A2 = A[ii], A[jj]                       # (p, 2)
-    b1, b2 = bv[ii], bv[jj]
-    det = A1[:, 0] * A2[:, 1] - A1[:, 1] * A2[:, 0]
-    ok = jnp.abs(det) > 1e-9
-    safe_det = jnp.where(ok, det, 1.0)
-    x = (b1 * A2[:, 1] - A1[:, 1] * b2) / safe_det
-    y = (A1[:, 0] * b2 - b1 * A2[:, 0]) / safe_det
-    pts = jnp.stack([x, y], axis=1)             # candidate vertices
-    feas = ok & jnp.all(A @ pts.T <= bv[:, None] + 1e-5, axis=0)
-    obj = jnp.where(feas, pts @ c, jnp.inf)
-    # Min-CRCW: all processors write their objective to cell 0
-    addrs = jnp.where(feas, 0, -1).astype(jnp.int32)
-    mem = funnel_write(addrs, obj, jnp.full((1,), jnp.inf, jnp.float32),
-                       jnp.minimum, M, cost=cost).memory
-    best = float(mem[0])
-    if not math.isfinite(best):
-        return None, None
-    k = int(jnp.argmin(obj))
-    return np.asarray(pts[k]), best
+    """Deprecated: see :func:`repro.core.geometry.linear_program_nd`."""
+    _warn("linear_program_2d", "linear_program_nd")
+    return linear_program_nd(c, A, b, M, cost=cost)

@@ -111,6 +111,24 @@ class MREngine:
         return self.run_rounds(prog.fn, box, prog.n_rounds,
                                capacity=prog.capacity, accum=accum)
 
+    def run_stages(self, stages, box: Mailbox,
+                   accum: Optional[CostAccum] = None
+                   ) -> Tuple[Mailbox, CostAccum]:
+        """Drive a heterogeneous round schedule: ``stages`` is a sequence of
+        ``(round_fn, capacity)`` pairs, each executed as one round.
+
+        This is the staged counterpart of :meth:`run_program` for
+        computations whose mailbox capacity changes per round (e.g. the
+        d-ary hull merge tree, where each level concentrates up to ``a``
+        partial results at one node).  Capacities are Python ints, so the
+        schedule is static and the whole driver stays jit-compatible on
+        array backends."""
+        acc = accum if accum is not None else CostAccum.zero()
+        for r, (fn, cap) in enumerate(stages):
+            box, stats = self.run_round(fn, box, r, capacity=cap)
+            acc = acc.add_round_stats(stats)
+        return box, acc
+
     # -- host-side validity check -------------------------------------------
     def require_no_drops(self, accum: CostAccum, what: str = "program") -> None:
         """Host boundary: raise if any round overflowed mailbox capacity

@@ -55,10 +55,75 @@ class FunnelResult(NamedTuple):
     stats: CostAccum         # functional per-round accounting (jit-safe)
 
 
+def _combine_mailbox_slots(payload: jnp.ndarray, valid: jnp.ndarray,
+                           op: Semigroup):
+    """Fold the slots of every mailbox row with ``op`` in FIFO (slot) order.
+
+    Returns (combined (V,), any_valid (V,)).  Rows with no valid slot keep
+    slot 0's (garbage) value, masked by ``any_valid``.  The static unroll is
+    over the mailbox capacity — at most d = M/2 slots for funnel nodes."""
+    acc = payload[:, 0]
+    has = valid[:, 0]
+    for s in range(1, payload.shape[1]):
+        cur, ok = payload[:, s], valid[:, s]
+        acc = jnp.where(ok & has, op(acc, cur), jnp.where(ok, cur, acc))
+        has = has | ok
+    return acc, has
+
+
+def _funnel_write_engine(addrs, values, memory, op, M, engine, identity):
+    """Theorem 3.2 write funnel with every tree level run as an engine round.
+
+    Level l routes the item of (cell c, group g) to node ``g'' * N + c`` with
+    g'' = g // d — so items sharing a parent funnel node meet in one mailbox
+    (capacity d, never overflowed) and are combined slot-FIFO, which equals
+    the dense path's leaf-order combine.  After L levels one item per live
+    cell remains, positionally indexed by cell; the root round applies it to
+    ``memory``.  Runs identically (bit-for-bit mailboxes and stats) on
+    Reference/Local/Sharded backends."""
+    P = addrs.shape[0]
+    N = memory.shape[0]
+    d = max(2, M // 2)
+    L = tree_height(max(P, 2), d)
+
+    live = addrs >= 0
+    cells = jnp.where(live, addrs, 0).astype(jnp.int32)
+    vals = values
+    accum = CostAccum.zero()
+    max_fan = jnp.int32(1)
+    n_groups = P                         # groups at the current level (static)
+    for level in range(L):
+        idx = jnp.arange(vals.shape[0], dtype=jnp.int32)
+        # Leaf items carry their group explicitly; from the second level on
+        # an item's position is (group * N + cell), so group/cell are
+        # positional.
+        group = idx if level == 0 else idx // N
+        parent = group // d
+        n_groups = max(1, -(-n_groups // d))
+        dests = jnp.where(live, parent * N + cells, -1)
+        V = engine.aligned_nodes(n_groups * N)
+        box, st = engine.shuffle(dests, vals, V, d)
+        accum = accum.add_round_stats(st)
+        max_fan = jnp.maximum(max_fan, jnp.asarray(st.max_received, jnp.int32))
+        comb, has = _combine_mailbox_slots(box.payload, box.valid, op)
+        vals = comb[:n_groups * N]
+        live = has[:n_groups * N]
+        cells = jnp.arange(n_groups * N, dtype=jnp.int32) % N
+    # One item per cell remains, at position cell (n_groups == 1).
+    if identity is None:
+        merged = op(memory, vals)
+        memory = jnp.where(live, merged, memory)
+    else:
+        memory = op(memory, jnp.where(live, vals, identity))
+    accum = accum.add_round(items_sent=jnp.sum(live), max_io=1)
+    return FunnelResult(memory=memory, max_fan_in=max_fan, stats=accum)
+
+
 def funnel_write(addrs: jnp.ndarray, values: jnp.ndarray, memory: jnp.ndarray,
                  op: Semigroup, M: int,
                  cost: Optional[MRCost] = None,
-                 identity: Optional[jnp.ndarray] = None) -> FunnelResult:
+                 identity: Optional[jnp.ndarray] = None,
+                 engine=None) -> FunnelResult:
     """Bottom-up write phase of Theorem 3.2.
 
     Processor i writes ``values[i]`` to cell ``addrs[i]`` (addr < 0 = no
@@ -69,7 +134,18 @@ def funnel_write(addrs: jnp.ndarray, values: jnp.ndarray, memory: jnp.ndarray,
     Accounting is functional (``result.stats`` is a :class:`CostAccum`), so
     the whole funnel jit-compiles with no host syncs; the mutable ``cost``
     adapter, if given, absorbs the accumulator once at the end.
+
+    With ``engine=`` the funnel levels execute as rounds of that
+    :class:`~repro.core.engine.MREngine` (same tree, same combine order), so
+    the write phase runs — and is stats-accounted — on any of the three
+    backends; ``engine=None`` keeps the dense segmented-scan realization.
     """
+    if engine is not None:
+        res = _funnel_write_engine(addrs, values, memory, op, M, engine,
+                                   identity)
+        if cost is not None:
+            cost.absorb(res.stats)
+        return res
     P = addrs.shape[0]
     d = max(2, M // 2)
     L = tree_height(max(P, 2), d)
@@ -125,38 +201,47 @@ def funnel_write(addrs: jnp.ndarray, values: jnp.ndarray, memory: jnp.ndarray,
     return FunnelResult(memory=memory, max_fan_in=max_fan, stats=accum)
 
 
-def funnel_read(addrs: jnp.ndarray, memory: jnp.ndarray, M: int,
-                cost: Optional[MRCost] = None) -> jnp.ndarray:
-    """Read phase of Theorem 3.2: processor i reads cell ``addrs[i]``.
+def funnel_read_accum(addrs: jnp.ndarray, memory: jnp.ndarray, M: int
+                      ) -> Tuple[jnp.ndarray, CostAccum]:
+    """Read phase of Theorem 3.2, with functional accounting (jit-safe).
 
     Bottom-up: duplicate requests for the same cell collapse at each funnel
     level (so a cell read by all P processors costs O(log_M P) rounds, not
     O(P) fan-in).  Top-down: the value retraces the funnel to every requester.
     The dense result equals ``memory[addrs]``; rounds/communication are
-    accounted per the sparse funnel.
+    accounted per the sparse funnel and returned as a :class:`CostAccum`.
     """
     P = addrs.shape[0]
     d = max(2, M // 2)
     L = tree_height(max(P, 2), d)
+    accum = CostAccum.zero()
+    group = jnp.arange(P, dtype=jnp.int32)
+    live = jnp.int32(P)
+    fan_out_per_level = []
+    for _ in range(L):
+        group = group // d
+        order = jnp.lexsort((group, addrs))
+        a_s, g_s = addrs[order], group[order]
+        uniq = jnp.sum(jnp.concatenate([
+            jnp.ones((1,), bool),
+            (a_s[1:] != a_s[:-1]) | (g_s[1:] != g_s[:-1])])).astype(jnp.int32)
+        accum = accum.add_round(items_sent=live, max_io=min(d, M))
+        fan_out_per_level.append(live)                      # requests up
+        live = uniq
+    for width in reversed(fan_out_per_level):               # values down
+        accum = accum.add_round(items_sent=width, max_io=min(d, M))
+    accum = accum.add_round(items_sent=P, max_io=1)         # leaves -> procs
+    return memory[addrs], accum
+
+
+def funnel_read(addrs: jnp.ndarray, memory: jnp.ndarray, M: int,
+                cost: Optional[MRCost] = None) -> jnp.ndarray:
+    """Host-adapter form of :func:`funnel_read_accum` (skips the accounting
+    computation entirely when no ``cost`` is attached)."""
     if cost is not None:
-        accum = CostAccum.zero()
-        group = jnp.arange(P, dtype=jnp.int32)
-        live = jnp.int32(P)
-        fan_out_per_level = []
-        for _ in range(L):
-            group = group // d
-            order = jnp.lexsort((group, addrs))
-            a_s, g_s = addrs[order], group[order]
-            uniq = jnp.sum(jnp.concatenate([
-                jnp.ones((1,), bool),
-                (a_s[1:] != a_s[:-1]) | (g_s[1:] != g_s[:-1])])).astype(jnp.int32)
-            accum = accum.add_round(items_sent=live, max_io=min(d, M))
-            fan_out_per_level.append(live)                  # requests up
-            live = uniq
-        for width in reversed(fan_out_per_level):           # values down
-            accum = accum.add_round(items_sent=width, max_io=min(d, M))
-        accum = accum.add_round(items_sent=P, max_io=1)     # leaves -> procs
+        vals, accum = funnel_read_accum(addrs, memory, M)
         cost.absorb(accum)                                  # one host sync
+        return vals
     return memory[addrs]
 
 
@@ -195,14 +280,34 @@ class PRAMProgram(NamedTuple):
 def simulate_crcw(prog: PRAMProgram, proc_state, memory: jnp.ndarray,
                   n_steps: int, M: int, op: Semigroup,
                   cost: Optional[MRCost] = None,
-                  identity: Optional[jnp.ndarray] = None):
+                  identity: Optional[jnp.ndarray] = None,
+                  engine=None, with_accum: bool = False):
     """Theorem 3.2 driver: T PRAM steps -> O(T log_M P) MR rounds.
 
-    Returns (final_proc_state, final_memory)."""
+    Returns (final_proc_state, final_memory), or with ``with_accum=True``
+    (final_proc_state, final_memory, CostAccum) — the functional form that
+    jit-compiles (pass ``cost=None`` under jit; the mutable adapter is a
+    host-side sync).  With ``engine=`` the write funnels execute as rounds of
+    that MREngine backend (see :func:`funnel_write`); read accounting is the
+    backend-independent sparse-funnel formula either way."""
+    # Read accounting costs L lexsorts over P per step — only compute it
+    # when someone will consume it (funnel_read's adapter does the same).
+    need_accum = with_accum or cost is not None
+    accum = CostAccum.zero()
     for t in range(n_steps):
         addrs = prog.read_addr(proc_state, t)
-        vals = funnel_read(addrs, memory, M, cost=cost)
+        if need_accum:
+            vals, racc = funnel_read_accum(addrs, memory, M)
+            accum = accum.merge_sequential(racc)
+        else:
+            vals = memory[addrs]
         proc_state, w_addr, w_val = prog.compute(proc_state, vals, t)
-        memory = funnel_write(w_addr, w_val, memory, op, M,
-                              cost=cost, identity=identity).memory
+        res = funnel_write(w_addr, w_val, memory, op, M,
+                           identity=identity, engine=engine)
+        memory = res.memory
+        accum = accum.merge_sequential(res.stats)
+    if cost is not None:
+        cost.absorb(accum)                                  # one host sync
+    if with_accum:
+        return proc_state, memory, accum
     return proc_state, memory

@@ -1,0 +1,123 @@
+"""Vectorized, jittable monotone chain — the reducer-local f of the 2-D hull.
+
+The seed's ``_monotone_chain`` was a host-Python stack loop, which meant the
+hull's reduce step re-entered Python at every node and could never jit or
+shard.  Here the same Andrew monotone chain runs as a fixed-size
+``lax.scan`` over a padded run: the stack is a static (cap, 2) array, pops
+are a bounded ``lax.while_loop`` on the stack pointer, and the whole reducer
+``vmap``s over the mailbox's node axis.  Degenerate inputs are handled
+in-array: invalid slots sort to the end, duplicate points are masked out by
+sorted adjacency, and runs of 0/1/2 distinct points fall out of the same
+code path (see ``hull_of_runs``).
+
+Orientation convention (shared with the oracle): pops on cross <= 0, so
+collinear points are excluded; output is the strict hull in CCW order
+starting at the lexicographic minimum (lower chain left-to-right, then upper
+chain right-to-left, endpoints not repeated).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+#: Sentinel coordinate for invalid slots: finite (no NaN poisoning in masked
+#: lanes) yet larger than any real coordinate, so invalid slots lexsort last.
+BIG = jnp.float32(1e30)
+
+
+def _half_chain(pts: jnp.ndarray, ok: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One chain pass (lower hull of the traversal order) over a padded run.
+
+    ``pts``: (cap, 2) points in traversal order; ``ok``: (cap,) mask of live
+    slots (need not be a prefix — dead slots are skipped, their garbage
+    coordinates never pollute the stack).  Returns (stack (cap, 2), top):
+    ``stack[:top]`` is the chain.
+    """
+
+    def step(carry, inp):
+        stack, top = carry
+        p, live = inp
+
+        def still_turning(t):
+            a = stack[t - 2]
+            b = stack[t - 1]
+            cr = ((b[0] - a[0]) * (p[1] - a[1])
+                  - (b[1] - a[1]) * (p[0] - a[0]))
+            return (t >= 2) & (cr <= 0.0)
+
+        t2 = lax.while_loop(still_turning, lambda t: t - 1, top)
+        pushed = stack.at[t2].set(p)
+        # Dead slot: discard both the pops and the push.
+        stack = jnp.where(live, pushed, stack)
+        top = jnp.where(live, t2 + 1, top)
+        return (stack, top), None
+
+    init = (jnp.zeros_like(pts), jnp.int32(0))
+    (stack, top), _ = lax.scan(step, init, (pts, ok))
+    return stack, top
+
+
+def _hull_one_run(spts: jnp.ndarray, ok: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full hull of one lex-sorted, deduplicated, padded run.
+
+    Returns (hull (cap, 2) CCW from the lex-min with zero padding, h count).
+    """
+    cap = spts.shape[0]
+    cnt = jnp.sum(ok).astype(jnp.int32)
+    lo_stack, lo_top = _half_chain(spts, ok)
+    up_stack, up_top = _half_chain(spts[::-1], ok[::-1])
+    # lower[:-1] ++ upper[:-1]; 0/1-point runs short-circuit to cnt itself
+    # (for cnt == 1 the upper stack holds exactly that point at slot 0).
+    h = jnp.where(cnt >= 2, lo_top + up_top - 2, cnt)
+    i = jnp.arange(cap, dtype=jnp.int32)
+    n_lower = jnp.maximum(lo_top - 1, 0)
+    lower = lo_stack[jnp.clip(i, 0, cap - 1)]
+    upper = up_stack[jnp.clip(i - n_lower, 0, cap - 1)]
+    hull = jnp.where((i < n_lower)[:, None], lower, upper)
+    hull = jnp.where((i < h)[:, None], hull, 0.0)
+    return hull, h
+
+
+def sort_dedup_runs(pts: jnp.ndarray, valid: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Lex-sort each node's run by (x, y) and mask out duplicate points.
+
+    ``pts``: (V, cap, 2); ``valid``: (V, cap).  Returns (sorted pts with
+    invalid slots at BIG, ok mask of live distinct slots).  Two stable
+    argsorts (y then x) realize the lexicographic order batched over nodes.
+    """
+    x = jnp.where(valid, pts[..., 0], BIG)
+    y = jnp.where(valid, pts[..., 1], BIG)
+    o1 = jnp.argsort(y, axis=-1, stable=True)
+    o2 = jnp.argsort(jnp.take_along_axis(x, o1, axis=-1), axis=-1, stable=True)
+    order = jnp.take_along_axis(o1, o2, axis=-1)
+    spts = jnp.take_along_axis(pts, order[..., None], axis=-2)
+    sval = jnp.take_along_axis(valid, order, axis=-1)
+    spts = jnp.where(sval[..., None], spts, BIG)
+    dup = jnp.concatenate([
+        jnp.zeros_like(sval[..., :1]),
+        jnp.all(spts[..., 1:, :] == spts[..., :-1, :], axis=-1)
+        & sval[..., 1:] & sval[..., :-1]], axis=-1)
+    return spts, sval & ~dup
+
+
+@jax.jit
+def hull_of_runs(pts: jnp.ndarray, valid: jnp.ndarray
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Reducer-local hulls of every mailbox node at once.
+
+    ``pts``: (V, cap, 2) mailbox payload; ``valid``: (V, cap).  Returns
+    (hulls (V, cap, 2) CCW from each run's lex-min, counts (V,)).  Pure jnp
+    (sort + scan + while_loop under vmap): identical results on every
+    engine backend, and jit/shard-compatible.  Jitted at definition — the
+    scan-of-while-loops is pathological to dispatch eagerly, and the cache
+    keys on the mailbox shape, so each merge level compiles once per run
+    geometry (inside an outer jit this inlines as a call).
+    """
+    spts, ok = sort_dedup_runs(pts, valid)
+    return jax.vmap(_hull_one_run)(spts, ok)

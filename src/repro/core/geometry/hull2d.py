@@ -1,0 +1,153 @@
+"""2-D convex hull as a pure engine round program (paper §1.4 + §4.3).
+
+Round structure (all shapes static, end-to-end jittable on LocalEngine and
+runnable unchanged on Reference/Sharded):
+
+  0. pivot stage — x-quantile splitters from a random sample (the §4.3
+     pivot construction, shared with ``sample_sort_mr`` via
+     :func:`repro.core.sortmr.quantile_splitters`), accounted as its
+     O(log_M s) rounds;
+  1. entry shuffle — every point routed to the reducer owning its x-bucket
+     (disjoint x-ranges, <= M points each w.h.p.; overflow is the reported
+     ``stats.dropped`` event);
+  2. d-ary merge tree, one engine round per level: every active node
+     lex-sorts its padded run, reduces it with the vectorized monotone
+     chain (:mod:`.chain` — no host Python), and sends its partial hull to
+     the leader of its a-block; height ceil(log_a V) with a = max(2, M/2),
+     so O(log_M N) rounds total;
+  3. finalize round — the root re-sorts, chains, and keeps the hull at
+     itself in CCW order (FIFO slots preserve it).
+
+Merge capacities grow as min(n, a^k * cap0) — the worst case when every
+point is extreme — so the tree itself can never drop; only the randomized
+bucket stage carries the w.h.p. failure event, exactly as in the paper.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..costmodel import CostAccum, MRCost, log_M, tree_height
+from ..sortmr import quantile_splitters
+from .chain import hull_of_runs
+
+
+class EngineHullResult(NamedTuple):
+    """Jit-friendly hull output: fixed-shape padded vertices + count."""
+
+    points: jnp.ndarray   # (cap, 2) float32; rows [count:] are zero padding
+    count: jnp.ndarray    # scalar int32 — number of hull vertices
+    stats: CostAccum      # valid iff stats.dropped == 0
+
+
+def convex_hull_2d_mr(points: jnp.ndarray, M: int, *, engine=None,
+                      key: Optional[jax.Array] = None,
+                      n_nodes: Optional[int] = None,
+                      slack: float = 3.0, oversample: int = 8
+                      ) -> EngineHullResult:
+    """2-D convex hull (CCW from the lexicographic minimum) as engine rounds.
+
+    ``points``: (n, 2).  Pure and jit-safe: returns padded vertices, their
+    count, and the functional round accounting; callers on the host boundary
+    use :func:`convex_hull_2d` for a trimmed array plus the no-drop check.
+    ``n_nodes`` overrides the reducer count (as in ``sample_sort_mr``) —
+    pass it when comparing backends whose ``aligned_nodes`` granularities
+    differ (a multi-shard ShardedEngine vs LocalEngine), so both run the
+    identical round schedule and stats.
+    """
+    if engine is None:
+        from ..engine import default_engine
+        engine = default_engine()
+    if key is None:
+        key = jax.random.PRNGKey(7)
+    pts = jnp.asarray(points, jnp.float32)
+    n = pts.shape[0]
+    if n == 0:
+        return EngineHullResult(points=jnp.zeros((0, 2), jnp.float32),
+                                count=jnp.int32(0), stats=CostAccum.zero())
+    M_eff = max(2, int(M))
+    V = (int(n_nodes) if n_nodes is not None
+         else engine.aligned_nodes(max(1, -(-n // M_eff))))
+    a = max(2, M_eff // 2)                       # merge-tree arity
+    n_levels = tree_height(V, a) if V > 1 else 0
+
+    accum = CostAccum.zero()
+    splitters, s = quantile_splitters(pts[:, 0], V, oversample, key)
+    for _ in range(max(1, log_M(max(s, 2), M_eff))):     # pivot-sort rounds
+        accum = accum.add_round(items_sent=s, max_io=min(s, M_eff))
+
+    bucket = jnp.clip(jnp.searchsorted(splitters, pts[:, 0], side="left"),
+                      0, V - 1).astype(jnp.int32)
+    cap0 = min(n, max(1, int(math.ceil(slack * n / V))))
+    box, st = engine.shuffle(bucket, pts, V, cap0)
+    accum = accum.add_round_stats(st)
+
+    def chain_and_send(block: int):
+        def fn(r, ids, b):
+            hulls, h = hull_of_runs(b.payload, b.valid)
+            leader = (ids // block) * block
+            slot = jnp.arange(hulls.shape[1], dtype=jnp.int32)
+            dests = jnp.where(slot[None, :] < h[:, None],
+                              leader[:, None], -1)
+            return dests, hulls
+        return fn
+
+    def finalize(r, ids, b):
+        hulls, h = hull_of_runs(b.payload, b.valid)
+        slot = jnp.arange(hulls.shape[1], dtype=jnp.int32)
+        dests = jnp.where(slot[None, :] < h[:, None], ids[:, None], -1)
+        return dests, hulls
+
+    cap = cap0
+    stages = []
+    for k in range(n_levels):
+        cap = min(n, a * cap)
+        stages.append((chain_and_send(a ** (k + 1)), cap))
+    stages.append((finalize, cap))
+    box, accum = engine.run_stages(stages, box, accum=accum)
+
+    count = jnp.sum(box.valid[0]).astype(jnp.int32)
+    return EngineHullResult(points=box.payload[0], count=count, stats=accum)
+
+
+def convex_hull_2d(points, M: int, *, engine=None,
+                   key: Optional[jax.Array] = None,
+                   cost: Optional[MRCost] = None,
+                   slack: float = 3.0) -> np.ndarray:
+    """Host wrapper: trimmed (h, 2) float64 hull, CCW from the lex-min.
+
+    Enforces the strict model (raises on mailbox overflow — raise ``slack``
+    if the randomized bucket stage fires) and feeds the ``cost`` adapter.
+    """
+    if engine is None:
+        from ..engine import default_engine
+        engine = default_engine()
+    res = convex_hull_2d_mr(points, M, engine=engine, key=key, slack=slack)
+    engine.require_no_drops(res.stats, what="2-D convex hull")
+    if cost is not None:
+        cost.absorb(res.stats)
+    h = int(res.count)
+    return np.asarray(res.points, np.float64)[:h]
+
+
+def hull_round_bound(n: int, M: int, oversample: int = 8,
+                     n_nodes: Optional[int] = None) -> int:
+    """Concrete ceiling for the engine hull's round count: pivot-sort rounds
+    + entry shuffle + merge-tree height + finalize (the paper's O(log_M N)).
+
+    The default reducer count matches ``convex_hull_2d_mr`` on backends
+    whose ``aligned_nodes`` is the identity (Reference/Local, and Sharded
+    at axis size 1).  A multi-shard ShardedEngine aligns V up, which can
+    add a merge level — pass the engine's aligned count as ``n_nodes``
+    (to both this bound and ``convex_hull_2d_mr``) when asserting there.
+    """
+    M_eff = max(2, int(M))
+    V = int(n_nodes) if n_nodes is not None else max(1, -(-n // M_eff))
+    s = min(n, max(2, V * oversample))
+    a = max(2, M_eff // 2)
+    return (max(1, log_M(max(s, 2), M_eff)) + 1
+            + (tree_height(V, a) if V > 1 else 0) + 1)

@@ -1,0 +1,107 @@
+"""3-D convex hull through the CRCW PRAM simulation (paper §1.4 via Thm 3.2).
+
+The paper's third headline application reduces 3-D hulls to a constant-step
+CRCW PRAM computation simulated in O(log_M P) MapReduce rounds per step.
+The parallel step realized here is the classical brute-force facet test:
+one PRAM processor per point triple (i, j, k) decides whether the plane
+through its triple supports the point set (all points on one closed side);
+supporting triples then mark their three vertices as hull vertices through
+a Max-CRCW concurrent write — three PRAM steps (one per triple vertex),
+each an invisible-funnel combine (Theorem 3.2), driven end to end by
+:func:`repro.core.funnel.simulate_crcw`.  With ``engine=`` every funnel
+level runs as an engine round, so the same program executes —
+bit-identically, stats included — on Reference/Local/Sharded backends.
+
+Work is O(n^3 · n): the paper's point for fixed dimension is round
+complexity, not work efficiency (exactly the framing of the 2-D LP
+reduction it cites).  Degenerate semantics (shared with the float64
+oracle): near-coplanar supports within the tolerance band are all reported,
+so a fully coplanar cloud marks every point; inputs with n < 4 mark every
+point extreme.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..costmodel import CostAccum, MRCost, tree_height
+from ..funnel import PRAMProgram, simulate_crcw
+from .util import combinations_array
+
+
+class Hull3DResult(NamedTuple):
+    """Jit-friendly 3-D hull output."""
+
+    mask: jnp.ndarray     # (n,) bool — point i is a vertex of the hull
+    stats: CostAccum
+
+
+def _facet_mask(pts: jnp.ndarray, tri: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """Which triples span a supporting plane of the whole set (vectorized)."""
+    A, B, C = pts[tri[:, 0]], pts[tri[:, 1]], pts[tri[:, 2]]
+    nrm = jnp.cross(B - A, C - A)                       # (P, 3)
+    nn = jnp.linalg.norm(nrm, axis=1, keepdims=True)
+    scale = jnp.maximum(jnp.max(jnp.abs(pts)), 1.0)
+    nondeg = nn[:, 0] > 1e-6 * scale * scale
+    unit = nrm / jnp.maximum(nn, 1e-30)
+    # signed distance of every point to every candidate plane: (P, n)
+    dist = jnp.einsum("pk,nk->pn", unit, pts) - jnp.sum(unit * A, axis=1,
+                                                        keepdims=True)
+    tol = eps * scale
+    return nondeg & (jnp.all(dist <= tol, axis=1)
+                     | jnp.all(dist >= -tol, axis=1))
+
+
+def convex_hull_3d_mr(points: jnp.ndarray, M: int, *, engine=None,
+                      eps: float = 1e-4) -> Hull3DResult:
+    """Mark the 3-D hull vertices of ``points`` (n, 3) via Theorem 3.2.
+
+    Pure and jit-safe (static n).  ``engine=`` routes the Max-CRCW write
+    funnels through that backend's rounds; ``engine=None`` uses the dense
+    funnel realization with identical results and accounting structure.
+    """
+    pts = jnp.asarray(points, jnp.float32)
+    n = int(pts.shape[0])
+    if n < 4:                      # degenerate: every point is extreme
+        return Hull3DResult(mask=jnp.ones((n,), bool), stats=CostAccum.zero())
+    tri = combinations_array(n, 3)                      # (P, 3) static
+    facet = _facet_mask(pts, tri, eps)
+
+    # One PRAM step per triple vertex: read the cell (funnel read collapses
+    # duplicates), then concurrently write 1.0 into it, combined by max.
+    prog = PRAMProgram(
+        read_addr=lambda state, t: state["tri"][:, t],
+        compute=lambda state, vals, t: (
+            state,
+            jnp.where(state["facet"], state["tri"][:, t], -1),
+            jnp.ones_like(vals)),
+    )
+    state = {"tri": tri, "facet": facet}
+    _, memory, accum = simulate_crcw(
+        prog, state, jnp.zeros((n,), jnp.float32), 3, M, jnp.maximum,
+        identity=jnp.float32(0), engine=engine, with_accum=True)
+    return Hull3DResult(mask=memory > 0.5, stats=accum)
+
+
+def convex_hull_3d(points, M: int, *, engine=None, eps: float = 1e-4,
+                   cost: Optional[MRCost] = None) -> np.ndarray:
+    """Host wrapper: sorted indices of the hull vertices of ``points``."""
+    res = convex_hull_3d_mr(points, M, engine=engine, eps=eps)
+    if engine is not None:
+        engine.require_no_drops(res.stats, what="3-D convex hull")
+    if cost is not None:
+        cost.absorb(res.stats)
+    return np.flatnonzero(np.asarray(res.mask))
+
+
+def hull3d_round_bound(n: int, M: int, n_steps: int = 3) -> int:
+    """Paper bound O(T log_M P) as a concrete ceiling for the Thm 3.2 3-D
+    hull: per PRAM step, <= 2L+1 read rounds + L+1 write rounds with
+    L = ceil(log_d P), d = max(2, M/2), P = C(n, 3)."""
+    if n < 4:
+        return 0
+    P = n * (n - 1) * (n - 2) // 6
+    L = tree_height(max(P, 2), max(2, M // 2))
+    return n_steps * (3 * L + 2)

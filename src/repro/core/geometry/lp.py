@@ -1,0 +1,90 @@
+"""Fixed-dimensional linear programming by Min-CRCW combine (paper §1.4).
+
+Generalizes the seed's 2-variable LP to any fixed dimension d: minimize
+c·x subject to Ax <= b with A (n, d).  Parallel structure — every d-subset
+of constraints is a PRAM processor holding one candidate basis; it solves
+its d x d system for the candidate vertex, tests feasibility against all n
+constraints, and the best feasible objective wins through a Min-semigroup
+invisible funnel into a single cell (Theorem 3.2) — the MapReduce analogue
+of the constant-time fixed-dimension RAM algorithms the paper cites.  Work
+is O(C(n, d) · n); rounds are O(log_M C(n, d)) = O(d log_M n).
+
+With ``engine=`` the Min funnel executes as rounds of that backend (see
+:func:`repro.core.funnel.funnel_write`), so the combine — and its stats —
+run identically on Reference/Local/Sharded.  min over floats is exact, so
+the optimum is bit-identical across backends and combine orders.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..costmodel import CostAccum, MRCost, tree_height
+from ..funnel import funnel_write
+from .util import combinations_array
+
+
+class LPResult(NamedTuple):
+    """Jit-friendly LP output."""
+
+    x: jnp.ndarray          # (d,) best candidate vertex (valid iff feasible)
+    objective: jnp.ndarray  # scalar float32; +inf when no feasible vertex
+    stats: CostAccum
+
+
+def linear_program_mr(c, A, b, M: int = 64, *, engine=None,
+                      feas_eps: float = 1e-5) -> LPResult:
+    """min c·x s.t. Ax <= b, d = A.shape[1] variables, n constraints.
+
+    Pure and jit-safe (static shapes from n, d).  Returns objective = +inf
+    when no candidate vertex is feasible (infeasible or unbounded over the
+    vertex set — the paper's reduction only inspects basic solutions).
+    """
+    c = jnp.asarray(c, jnp.float32)
+    A = jnp.asarray(A, jnp.float32)
+    bv = jnp.asarray(b, jnp.float32)
+    n, d = int(A.shape[0]), int(A.shape[1])
+    bases = combinations_array(n, d)                    # (Q, d) static
+    sub_A = A[bases]                                    # (Q, d, d)
+    sub_b = bv[bases]                                   # (Q, d)
+    det = jnp.linalg.det(sub_A)
+    ok = jnp.abs(det) > 1e-9
+    safe_A = jnp.where(ok[:, None, None], sub_A,
+                       jnp.eye(d, dtype=jnp.float32)[None])
+    xs = jnp.linalg.solve(safe_A, sub_b[..., None])[..., 0]    # (Q, d)
+    feas = ok & jnp.all(A @ xs.T <= bv[:, None] + feas_eps, axis=0)
+    obj = jnp.where(feas, xs @ c, jnp.inf)
+    # Min-CRCW: every live processor writes its objective to cell 0.
+    addrs = jnp.where(feas, 0, -1).astype(jnp.int32)
+    res = funnel_write(addrs, obj, jnp.full((1,), jnp.inf, jnp.float32),
+                       jnp.minimum, M, identity=jnp.float32(jnp.inf),
+                       engine=engine)
+    # Broadcast winner: the arg-min candidate (deterministic, exact for min).
+    k = jnp.argmin(obj)
+    return LPResult(x=xs[k], objective=res.memory[0], stats=res.stats)
+
+
+def linear_program_nd(c, A, b, M: int = 64, *, engine=None,
+                      cost: Optional[MRCost] = None
+                      ) -> Tuple[Optional[np.ndarray], Optional[float]]:
+    """Host wrapper with the seed's API: (x_opt, objective), or (None, None)
+    when no candidate vertex is feasible."""
+    res = linear_program_mr(c, A, b, M, engine=engine)
+    if engine is not None:
+        engine.require_no_drops(res.stats, what="fixed-dim LP")
+    if cost is not None:
+        cost.absorb(res.stats)
+    best = float(res.objective)
+    if not math.isfinite(best):
+        return None, None
+    return np.asarray(res.x, np.float64), best
+
+
+def lp_round_bound(n: int, d: int, M: int) -> int:
+    """Concrete ceiling for the LP's Min-funnel rounds: L + 1 with
+    L = ceil(log_f C(n, d)), f = max(2, M/2) — the paper's O(log_M P)."""
+    Q = math.comb(n, d)
+    return tree_height(max(Q, 2), max(2, M // 2)) + 1

@@ -1,0 +1,15 @@
+"""Small shared helpers for the geometry round programs."""
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def combinations_array(n: int, k: int) -> jnp.ndarray:
+    """All C(n, k) sorted k-subsets of range(n) as a static (C, k) int32
+    array — the PRAM processor index tables of the hull/LP reductions."""
+    return jnp.asarray(np.fromiter(
+        itertools.chain.from_iterable(itertools.combinations(range(n), k)),
+        np.int32).reshape(-1, k))

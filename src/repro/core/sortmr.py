@@ -136,6 +136,23 @@ class EngineSortResult(NamedTuple):
     stats: CostAccum
 
 
+def quantile_splitters(x: jnp.ndarray, n_buckets: int, oversample: int,
+                       key: jax.Array) -> Tuple[jnp.ndarray, int]:
+    """§4.3 pivot stage: the ``n_buckets - 1`` sample-quantile splitters of a
+    Theta(n_buckets * oversample) random sample of ``x``.
+
+    Returns (splitters ascending, sample size s).  Shared by the engine
+    sample sort and the geometry round programs (the 2-D hull buckets points
+    by x through the same splitter construction); ``s`` is what the caller
+    accounts as the pivot-sort stage (O(log_M s) rounds moving s samples).
+    Pure, jit-safe: shapes depend only on static (n, n_buckets, oversample).
+    """
+    n = x.shape[0]
+    s = int(min(n, max(2, n_buckets * oversample)))
+    sample = jnp.sort(x[jax.random.permutation(key, n)[:s]])
+    return sample[(jnp.arange(1, n_buckets) * s) // n_buckets], s
+
+
 def sample_sort_mr(x: jnp.ndarray, M: int, *, engine=None,
                    key: Optional[jax.Array] = None,
                    n_nodes: Optional[int] = None,
@@ -179,9 +196,7 @@ def sample_sort_mr(x: jnp.ndarray, M: int, *, engine=None,
     B = max(2, math.ceil(V ** (1.0 / levels))) if V > 1 else 1
 
     # Pivot stage: V-1 quantile splitters from a sorted random sample.
-    s = int(min(n, max(2, V * oversample)))
-    sample = jnp.sort(x[jax.random.permutation(key, n)[:s]])
-    splitters = sample[(jnp.arange(1, V) * s) // V]
+    splitters, s = quantile_splitters(x, V, oversample, key)
 
     def bucket_of(v):
         b = jnp.searchsorted(splitters, v, side="left")

@@ -1,0 +1,150 @@
+"""Cross-backend differential conformance suite.
+
+Seeded-numpy randomized round programs and algorithm instances (sort,
+multisearch, 2-D/3-D hull, fixed-dim LP) executed on ReferenceEngine,
+LocalEngine (scan and no-scan) and ShardedEngine (axis size 1 in-process;
+multi-shard parity lives in test_distributed.py), asserting
+
+- bit-identical mailboxes / outputs,
+- FIFO and overflow/drop parity (the w.h.p. failure event is *reported
+  identically*, never divergently), and
+- matching functional CostAccum round/communication/drop counts.
+
+No hypothesis — seeded ``parametrize`` only, sized to stay well inside the
+tier-1 budget (ReferenceEngine is a per-item host loop).
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (CostAccum, LocalEngine, ReferenceEngine,
+                        ShardedEngine, convex_hull_2d_mr, convex_hull_3d_mr,
+                        linear_program_mr, sample_sort_mr)
+
+
+def engines():
+    return [ReferenceEngine(), LocalEngine(), LocalEngine(use_scan=False),
+            ShardedEngine()]
+
+
+def assert_same_box(ref, got, ctx=""):
+    for la, lb in zip(jax.tree_util.tree_leaves(ref.payload),
+                      jax.tree_util.tree_leaves(got.payload)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=ctx)
+    np.testing.assert_array_equal(np.asarray(ref.valid), np.asarray(got.valid),
+                                  err_msg=ctx)
+
+
+def assert_same_accum(ref: CostAccum, got: CostAccum, ctx=""):
+    for name, fa, fb in zip(ref._fields, ref, got):
+        assert float(fa) == float(fb), f"{ctx}: CostAccum.{name} {fa} != {fb}"
+
+
+class TestRandomRoundProgramConformance:
+    """Randomized table-driven programs: arbitrary dests (including drops
+    and 'no item' holes) must shuffle identically everywhere."""
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_random_program_parity(self, seed):
+        rng = np.random.default_rng(seed)
+        V = int(rng.integers(4, 10))
+        cap = int(rng.integers(2, 5))
+        n_rounds = 3
+        entry_dests = rng.integers(-1, V, size=(V, cap)).astype(np.int32)
+        payload = rng.normal(size=(V, cap)).astype(np.float32)
+        tables = jnp.asarray(
+            rng.integers(-1, V, size=(n_rounds, V, cap)).astype(np.int32))
+
+        def fn(r, ids, box):
+            dests = jnp.where(box.valid, tables[r], -1)
+            return dests, box.payload
+
+        ref_box = ref_acc = None
+        for e in engines():
+            box, st = e.shuffle(entry_dests, payload, V, cap)
+            acc = CostAccum.zero().add_round_stats(st)
+            for r in range(n_rounds):
+                box, st = e.run_round(fn, box, r)
+                acc = acc.add_round_stats(st)
+            if ref_box is None:
+                ref_box, ref_acc = box, acc
+            else:
+                assert_same_box(ref_box, box, ctx=f"seed={seed} {e.name}")
+                assert_same_accum(ref_acc, acc, ctx=f"seed={seed} {e.name}")
+
+    def test_forced_overflow_fifo_parity(self):
+        """Funnel 3x the capacity into two nodes: every backend must keep
+        the same FIFO prefix and count the same drops."""
+        V, cap = 4, 3
+        dests = np.asarray([0, 1, 0, 0, 1, 0, 1, 0, 1, 0, 1, 0], np.int32)
+        payload = np.arange(12, dtype=np.float32)
+        ref_box = ref_st = None
+        for e in engines():
+            box, st = e.shuffle(dests, payload, V, cap)
+            assert int(st.dropped) == 6, e.name
+            if ref_box is None:
+                ref_box, ref_st = box, st
+            else:
+                assert_same_box(ref_box, box, ctx=e.name)
+                for fa, fb in zip(ref_st, st):
+                    assert int(fa) == int(fb), e.name
+
+
+class TestAlgorithmConformance:
+    @pytest.mark.parametrize("seed,n,M", [(0, 300, 16), (1, 500, 32)])
+    def test_sort_instances(self, seed, n, M):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=n).astype(np.float32))
+        key = jax.random.PRNGKey(seed)
+        results = [sample_sort_mr(x, M, engine=e, key=key) for e in engines()]
+        want = np.sort(np.asarray(x))
+        for res, e in zip(results, engines()):
+            assert int(res.stats.dropped) == 0, e.name
+            np.testing.assert_array_equal(np.asarray(res.values), want,
+                                          err_msg=e.name)
+            assert_same_accum(results[0].stats, res.stats, ctx=e.name)
+
+    @pytest.mark.parametrize("seed,n,M", [(3, 120, 8), (4, 250, 32)])
+    def test_hull2d_instances(self, seed, n, M):
+        rng = np.random.default_rng(seed)
+        pts = jnp.asarray(rng.normal(size=(n, 2)).astype(np.float32))
+        key = jax.random.PRNGKey(seed)
+        results = [convex_hull_2d_mr(pts, M, engine=e, key=key)
+                   for e in engines()]
+        ref = results[0]
+        assert int(ref.count) >= 3
+        for res, e in zip(results[1:], engines()[1:]):
+            np.testing.assert_array_equal(np.asarray(ref.points),
+                                          np.asarray(res.points),
+                                          err_msg=e.name)
+            assert int(ref.count) == int(res.count), e.name
+            assert_same_accum(ref.stats, res.stats, ctx=e.name)
+
+    @pytest.mark.parametrize("seed,n,M", [(5, 12, 16), (6, 10, 8)])
+    def test_hull3d_instances(self, seed, n, M):
+        rng = np.random.default_rng(seed)
+        pts = jnp.asarray(rng.normal(size=(n, 3)).astype(np.float32))
+        results = [convex_hull_3d_mr(pts, M, engine=e) for e in engines()]
+        ref = results[0]
+        for res, e in zip(results[1:], engines()[1:]):
+            np.testing.assert_array_equal(np.asarray(ref.mask),
+                                          np.asarray(res.mask),
+                                          err_msg=e.name)
+            assert_same_accum(ref.stats, res.stats, ctx=e.name)
+
+    @pytest.mark.parametrize("seed,n,d,M", [(7, 10, 2, 16), (8, 8, 3, 8)])
+    def test_lp_instances(self, seed, n, d, M):
+        rng = np.random.default_rng(seed)
+        A = rng.normal(size=(n, d)).astype(np.float32)
+        b = rng.uniform(1, 2, n).astype(np.float32)   # origin feasible
+        c = rng.normal(size=d).astype(np.float32)
+        results = [linear_program_mr(c, A, b, M, engine=e) for e in engines()]
+        ref = results[0]
+        assert np.isfinite(float(ref.objective))
+        for res, e in zip(results[1:], engines()[1:]):
+            assert float(ref.objective) == float(res.objective), e.name
+            np.testing.assert_array_equal(np.asarray(ref.x),
+                                          np.asarray(res.x), err_msg=e.name)
+            assert_same_accum(ref.stats, res.stats, ctx=e.name)

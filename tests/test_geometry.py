@@ -1,0 +1,198 @@
+"""The engine-native geometry subsystem (repro.core.geometry).
+
+Covers the acceptance surface of the subsystem: oracle agreement for
+2-D/3-D hulls and fixed-dim LP on the engine paths, degenerate inputs on
+*both* the oracle and engine paths (the seed's ``_monotone_chain`` bugs:
+all-collinear, duplicates, N <= 2), end-to-end jit on LocalEngine, and the
+deprecation shim for the legacy ``repro.core.applications`` API.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (LocalEngine, MRCost, ReferenceEngine,
+                        convex_hull_2d, convex_hull_2d_mr, convex_hull_3d,
+                        convex_hull_3d_mr, convex_hull_3d_oracle,
+                        convex_hull_oracle, linear_program_mr,
+                        linear_program_nd, linear_program_oracle)
+
+DEGENERATE_2D = {
+    "collinear": [[0, 0], [1, 1], [2, 2], [3, 3]],
+    "collinear-with-dups": [[0, 0], [1, 1], [2, 2], [3, 3], [0, 0], [3, 3]],
+    "all-identical": [[2, 2]] * 5,
+    "two-duplicates": [[1, 2], [1, 2]],
+    "single-point": [[3, 4]],
+    "two-distinct": [[1, 1], [0, 0]],
+    "square-with-interior": [[0, 0], [3, 0], [3, 3], [0, 3], [1, 1], [2, 2]],
+}
+
+
+class TestOracleDegenerates:
+    def test_collinear_returns_endpoints(self):
+        hull = convex_hull_oracle(np.array(DEGENERATE_2D["collinear"], float))
+        np.testing.assert_array_equal(hull, [[0, 0], [3, 3]])
+
+    def test_all_identical_returns_one_vertex(self):
+        hull = convex_hull_oracle(np.array(DEGENERATE_2D["all-identical"],
+                                           float))
+        np.testing.assert_array_equal(hull, [[2, 2]])
+
+    def test_two_duplicates(self):
+        hull = convex_hull_oracle(np.array(DEGENERATE_2D["two-duplicates"],
+                                           float))
+        np.testing.assert_array_equal(hull, [[1, 2]])
+
+    def test_empty(self):
+        assert convex_hull_oracle(np.zeros((0, 2))).shape == (0, 2)
+
+    def test_ccw_from_lex_min(self):
+        hull = convex_hull_oracle(
+            np.array(DEGENERATE_2D["square-with-interior"], float))
+        np.testing.assert_array_equal(
+            hull, [[0, 0], [3, 0], [3, 3], [0, 3]])
+
+
+class TestHull2DEngine:
+    @pytest.mark.parametrize("name", sorted(DEGENERATE_2D))
+    @pytest.mark.parametrize("engine_cls", [ReferenceEngine, LocalEngine])
+    def test_degenerate_inputs_match_oracle(self, name, engine_cls):
+        pts = np.array(DEGENERATE_2D[name], np.float64)
+        want = convex_hull_oracle(pts)
+        got = convex_hull_2d(pts, 4, engine=engine_cls())
+        np.testing.assert_allclose(got, want, atol=1e-6)
+
+    @pytest.mark.parametrize("n,M", [(60, 8), (300, 32)])
+    def test_random_matches_oracle(self, n, M):
+        rng = np.random.default_rng(n)
+        pts = rng.normal(size=(n, 2)).astype(np.float32)
+        got = convex_hull_2d(pts, M)
+        np.testing.assert_allclose(got, convex_hull_oracle(pts), atol=1e-6)
+
+    def test_jit_end_to_end(self):
+        """Acceptance: the whole hull round program compiles under jax.jit
+        (a host sync inside would raise a TracerError)."""
+        eng = LocalEngine()
+        rng = np.random.default_rng(9)
+        pts = jnp.asarray(rng.normal(size=(256, 2)).astype(np.float32))
+        fn = jax.jit(lambda p, k: convex_hull_2d_mr(p, 32, engine=eng, key=k))
+        res = fn(pts, jax.random.PRNGKey(0))
+        assert int(res.stats.dropped) == 0
+        h = int(res.count)
+        np.testing.assert_allclose(np.asarray(res.points)[:h],
+                                   convex_hull_oracle(np.asarray(pts)),
+                                   atol=1e-5)
+
+    def test_empty_input(self):
+        """Regression: the seed's API accepted n = 0; the engine path must
+        too (the oracle already returns an empty (0, 2) hull)."""
+        for engine_cls in (ReferenceEngine, LocalEngine):
+            got = convex_hull_2d(np.zeros((0, 2)), 8, engine=engine_cls())
+            assert got.shape == (0, 2)
+
+    def test_cost_adapter_and_no_drop_enforcement(self):
+        c = MRCost()
+        pts = np.random.default_rng(1).normal(size=(100, 2))
+        convex_hull_2d(pts, 16, cost=c)
+        assert c.rounds >= 3 and c.communication > 0
+
+
+class TestHull3DEngine:
+    def test_random_matches_oracle_all_paths(self):
+        rng = np.random.default_rng(12)
+        pts = rng.normal(size=(12, 3)).astype(np.float32)
+        want = convex_hull_3d_oracle(pts)
+        for engine in (None, ReferenceEngine(), LocalEngine()):
+            got = convex_hull_3d(pts, 16, engine=engine)
+            np.testing.assert_array_equal(got, want)
+
+    def test_extremes_in_interior_out(self):
+        rng = np.random.default_rng(3)
+        pts = rng.normal(size=(12, 3)).astype(np.float32)
+        pts = np.concatenate([pts, pts.mean(0, keepdims=True)])  # centroid
+        mask = np.zeros(13, bool)
+        mask[convex_hull_3d(pts, 16, engine=LocalEngine())] = True
+        for axis in range(3):
+            assert mask[int(np.argmax(pts[:, axis]))]
+            assert mask[int(np.argmin(pts[:, axis]))]
+        assert not mask[12]                 # the centroid is interior
+        assert mask.sum() >= 4
+
+    def test_degenerate_small_and_coplanar(self):
+        # n < 4: every point extreme (documented semantics, shared oracle)
+        np.testing.assert_array_equal(
+            convex_hull_3d(np.eye(3, 3), 8), [0, 1, 2])
+        # coplanar cloud: every supporting-plane member reported
+        rng = np.random.default_rng(0)
+        flat = np.concatenate([rng.normal(size=(6, 2)),
+                               np.zeros((6, 1))], axis=1)
+        got = convex_hull_3d(flat.astype(np.float32), 8,
+                             engine=LocalEngine())
+        np.testing.assert_array_equal(got,
+                                      convex_hull_3d_oracle(flat))
+
+    def test_jit(self):
+        eng = LocalEngine()
+        rng = np.random.default_rng(4)
+        pts = jnp.asarray(rng.normal(size=(12, 3)).astype(np.float32))
+        res = jax.jit(lambda p: convex_hull_3d_mr(p, 16, engine=eng))(pts)
+        np.testing.assert_array_equal(
+            np.flatnonzero(np.asarray(res.mask)),
+            convex_hull_3d_oracle(np.asarray(pts)))
+
+
+class TestFixedDimLP:
+    def test_box_3d(self):
+        # min x+y+z s.t. x,y,z >= [1,2,3], <= 5
+        A = np.vstack([-np.eye(3), np.eye(3)])
+        b = np.array([-1.0, -2.0, -3.0, 5.0, 5.0, 5.0])
+        x, obj = linear_program_nd([1.0, 1.0, 1.0], A, b, 16)
+        np.testing.assert_allclose(x, [1.0, 2.0, 3.0], atol=1e-4)
+        assert abs(obj - 6.0) < 1e-4
+
+    @pytest.mark.parametrize("n,d,seed", [(10, 2, 0), (8, 3, 1), (7, 4, 2)])
+    def test_random_matches_oracle(self, n, d, seed):
+        rng = np.random.default_rng(seed)
+        A = rng.normal(size=(n, d)).astype(np.float32)
+        b = rng.uniform(1, 2, n).astype(np.float32)   # origin feasible
+        c = rng.normal(size=d).astype(np.float32)
+        _, want = linear_program_oracle(c, A, b)
+        for engine in (None, LocalEngine()):
+            x, obj = linear_program_nd(c, A, b, 16, engine=engine)
+            assert x is not None
+            assert abs(obj - want) < 1e-3
+
+    def test_infeasible(self):
+        x, obj = linear_program_nd([1.0, 0.0], [[1, 0], [-1, 0]], [-1, -1], 8)
+        assert x is None and obj is None
+
+    def test_jit(self):
+        eng = LocalEngine()
+        rng = np.random.default_rng(5)
+        A = jnp.asarray(rng.normal(size=(9, 3)).astype(np.float32))
+        b = jnp.asarray(rng.uniform(1, 2, 9).astype(np.float32))
+        c = jnp.asarray(rng.normal(size=3).astype(np.float32))
+        res = jax.jit(lambda c_, A_, b_: linear_program_mr(
+            c_, A_, b_, 16, engine=eng))(c, A, b)
+        _, want = linear_program_oracle(np.asarray(c), np.asarray(A),
+                                        np.asarray(b))
+        assert abs(float(res.objective) - want) < 1e-3
+
+
+class TestDeprecationShim:
+    def test_legacy_api_warns_and_delegates(self):
+        from repro.core.applications import (convex_hull_mr,
+                                             convex_hull_oracle as legacy_or,
+                                             linear_program_2d)
+        pts = np.random.default_rng(0).normal(size=(40, 2))
+        with pytest.warns(DeprecationWarning):
+            got = convex_hull_mr(jnp.asarray(pts), 8)
+        np.testing.assert_allclose(got, convex_hull_oracle(pts), atol=1e-6)
+        with pytest.warns(DeprecationWarning):
+            np.testing.assert_allclose(legacy_or(pts),
+                                       convex_hull_oracle(pts))
+        with pytest.warns(DeprecationWarning):
+            x, obj = linear_program_2d([1.0, 1.0],
+                                       [[-1, 0], [0, -1], [1, 0], [0, 1]],
+                                       [-1, -2, 5, 5])
+        np.testing.assert_allclose(x, [1.0, 2.0], atol=1e-4)
