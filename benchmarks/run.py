@@ -142,6 +142,45 @@ def bench_queues(quick):
           f"{burst//M + 2}")
 
 
+def bench_shuffle(quick):
+    """Dense vs kernel-backed shuffle over an (N, fan-in) grid.
+
+    The engine hot loop (DESIGN.md §7): same FIFO/drop contract, two
+    implementations.  Fan-in = N / V (expected arrivals per node); capacity
+    is sized to 2x fan-in so the drop path stays exercised but rare.  Each
+    grid cell prints both timings plus a parity check — the speed claim is
+    measured, never asserted.  Off TPU the kernel path runs interpret mode,
+    so the dense/kernel ratio there tracks dispatch overhead, not Mosaic.
+    """
+    from repro.core.kshuffle import kernel_shuffle
+    from repro.core.mrmodel import shuffle as dense_shuffle
+    rng = np.random.default_rng(0)
+    grid_n = (1024, 4096, 16384) if not quick else (256, 1024, 4096)
+    grid_v = (16, 64, 256)
+    for n in grid_n:
+        for V in grid_v:
+            fan_in = n // V
+            cap = max(2 * fan_in, 2)
+            dests = jnp.asarray(rng.integers(0, V, n).astype(np.int32))
+            payload = jnp.asarray(rng.normal(size=n).astype(np.float32))
+            d_fn = jax.jit(lambda d, p, V=V, cap=cap: dense_shuffle(
+                d, p, V, cap))
+            k_fn = jax.jit(lambda d, p, V=V, cap=cap: kernel_shuffle(
+                d, p, V, cap))
+            box_d, st_d = jax.block_until_ready(d_fn(dests, payload))
+            box_k, st_k = jax.block_until_ready(k_fn(dests, payload))
+            parity = bool(jnp.array_equal(box_d.valid, box_k.valid)
+                          & jnp.array_equal(box_d.payload, box_k.payload)
+                          & (st_d.dropped == st_k.dropped))
+            us_d = _timeit(lambda: jax.block_until_ready(d_fn(dests, payload)))
+            us_k = _timeit(lambda: jax.block_until_ready(k_fn(dests, payload)))
+            print(f"shuffle_dense_N{n}_V{V},{us_d:.0f},"
+                  f"fan_in={fan_in}|cap={cap}|dropped={int(st_d.dropped)}")
+            print(f"shuffle_kernel_N{n}_V{V},{us_k:.0f},"
+                  f"dense_vs_kernel={us_d/us_k:.2f}x|parity={parity}"
+                  f"|backend={jax.default_backend()}")
+
+
 def bench_kernels(quick):
     from repro.kernels import ops, ref
     rng = np.random.default_rng(0)
@@ -245,8 +284,9 @@ def bench_cost_model(quick):
 
 
 BENCHES = [bench_prefix_sums, bench_random_indexing, bench_multisearch,
-           bench_sorting, bench_funnel, bench_queues, bench_kernels,
-           bench_moe_dispatch, bench_geometry, bench_cost_model]
+           bench_sorting, bench_funnel, bench_queues, bench_shuffle,
+           bench_kernels, bench_moe_dispatch, bench_geometry,
+           bench_cost_model]
 
 
 def main() -> None:

@@ -10,6 +10,10 @@ from .costmodel import (MRCost, CostAccum, RoundStats, HardwareModel,
                         log_M, tree_height)
 from .mrmodel import (Mailbox, ShuffleStats, make_mailbox, shuffle,
                       run_round, run_rounds)
+# NOTE: the Pallas-composed kernel_shuffle is deliberately NOT imported here:
+# repro.core.kshuffle pulls the whole repro.kernels stack, which dense-only
+# consumers shouldn't pay for at import.  Engines import it lazily when
+# constructed with shuffle_impl="kernel" (or via get_engine("pallas")).
 from .engine import (MREngine, RoundProgram, ReferenceEngine, LocalEngine,
                      ShardedEngine, get_engine, default_engine)
 from .prefix import (tree_prefix_sum, prefix_sum_opt, random_indexing,
@@ -31,7 +35,9 @@ from .geometry import (EngineHullResult, Hull3DResult, LPResult,
                        linear_program_mr, linear_program_nd,
                        linear_program_oracle, lp_round_bound)
 from .geometry.oracles import convex_hull_oracle
-from .applications import convex_hull_mr, linear_program_2d
+# NOTE: the deprecated repro.core.applications shim is intentionally NOT
+# re-exported here; import it explicitly (it warns) or use repro.core.geometry
+# — see the paper → code map in README.md.
 
 __all__ = [
     "MRCost", "CostAccum", "RoundStats", "HardwareModel",
@@ -57,5 +63,5 @@ __all__ = [
     "hull_round_bound", "hull3d_round_bound",
     "linear_program_mr", "linear_program_nd", "linear_program_oracle",
     "lp_round_bound",
-    "convex_hull_mr", "convex_hull_oracle", "linear_program_2d",
+    "convex_hull_oracle",
 ]

@@ -42,8 +42,10 @@ from .geometry.oracles import convex_hull_oracle as _hull_oracle
 
 def _warn(old: str, new: str) -> None:
     warnings.warn(
-        f"repro.core.applications.{old} is deprecated; use "
-        f"repro.core.geometry.{new}", DeprecationWarning, stacklevel=3)
+        f"repro.core.applications.{old} is deprecated and no longer "
+        f"re-exported from repro.core; use repro.core.geometry.{new} "
+        f"(see the paper → code map in README.md)",
+        DeprecationWarning, stacklevel=3)
 
 
 def convex_hull_mr(points: jnp.ndarray, M: int,

@@ -16,6 +16,34 @@ interchangeable backends (DESIGN.md §2):
   ShardedEngine      shard_map + all_to_all     same program over a mesh axis
   ================== ========================== ===========================
 
+Orthogonally to the backend, the Shuffle hot loop has two implementations
+(``shuffle_impl=``): the ``"dense"`` jnp argsort-scatter of
+:func:`repro.core.mrmodel.shuffle`, and the ``"kernel"`` Pallas composition
+of :func:`repro.core.kshuffle.kernel_shuffle` (bincount → prefix_scan →
+bitonic_sort; DESIGN.md §7).  ``get_engine("pallas")`` is the registered
+alias for a kernel-backed :class:`LocalEngine`; ``ShardedEngine`` accepts
+the same choice for its per-shard local scatter.  Both implementations are
+bit-identical — the kernel path is a performance substitution, never a
+semantic one.
+
+A complete round trip through the API::
+
+    >>> import numpy as np
+    >>> from repro.core.engine import get_engine
+    >>> eng = get_engine("local")
+    >>> box, stats = eng.shuffle(np.array([1, 0, 1, 1], np.int32),
+    ...                          np.arange(4.0, dtype=np.float32),
+    ...                          n_nodes=2, capacity=2)
+    >>> np.asarray(box.valid).tolist()     # node 1 overflows: slot-FIFO keeps
+    [[True, False], [True, True]]
+    >>> int(stats.dropped)                 # ...the first 2, drops the third
+    1
+    >>> kbox, kstats = get_engine("pallas").shuffle(
+    ...     np.array([1, 0, 1, 1], np.int32),
+    ...     np.arange(4.0, dtype=np.float32), n_nodes=2, capacity=2)
+    >>> bool(np.array_equal(np.asarray(box.payload), np.asarray(kbox.payload)))
+    True
+
 All three implement identical shuffle semantics — stable source-order FIFO
 delivery into per-node slots 0..capacity-1, items ranked past ``capacity``
 dropped and counted — so a round program yields bit-identical mailboxes and
@@ -63,9 +91,15 @@ class RoundProgram(NamedTuple):
 class MREngine:
     """Interface over the Theorem 2.1 round semantics.
 
-    Subclasses provide :meth:`shuffle`; ``run_round`` / ``run_rounds`` /
-    ``run_program`` drive complete computations and account costs
-    functionally.
+    Subclasses provide :meth:`shuffle` — the capacity-bounded Shuffle step
+    with the bit-identical contract of DESIGN.md §2 (flattened-source-order
+    FIFO into slots 0..capacity-1, overflow dropped and counted) —
+    while ``run_round`` / ``run_rounds`` / ``run_program`` /
+    ``run_stages`` drive complete computations on top of it and account
+    costs functionally (:class:`RoundStats` per round folded into a
+    :class:`CostAccum`).  Concrete backends: :class:`ReferenceEngine`
+    (numpy oracle), :class:`LocalEngine` (dense jnp; ``"pallas"`` alias =
+    kernel shuffle), :class:`ShardedEngine` (``shard_map``/``all_to_all``).
     """
 
     name = "abstract"
@@ -82,7 +116,10 @@ class MREngine:
     def shuffle(self, dests, payload: Payload, n_nodes: int,
                 capacity: int) -> Tuple[Mailbox, RoundStats]:
         """Deliver item j to node ``dests[j]`` (< 0 = no item; entries must
-        lie in [-1, n_nodes)).  FIFO by flattened source order."""
+        lie in [-1, n_nodes)).  FIFO by flattened source order; items ranked
+        past ``capacity`` at their destination are dropped and counted in
+        ``RoundStats.dropped`` — every backend must report the identical
+        mailbox, drop set, and stats (tests/test_conformance.py)."""
         raise NotImplementedError
 
     # -- round drivers -------------------------------------------------------
@@ -201,20 +238,40 @@ class ReferenceEngine(MREngine):
 # ---------------------------------------------------------------------------
 
 class LocalEngine(MREngine):
-    """Dense single-process backend: :func:`repro.core.mrmodel.shuffle` on
-    jnp arrays.  ``run_rounds`` rolls the loop into a ``lax.scan`` (round_idx
-    arrives traced), so whole round programs jit-compile with no host syncs;
-    pass ``use_scan=False`` for round functions that need a static Python
-    round index."""
+    """Dense single-process backend on jnp arrays.  ``run_rounds`` rolls the
+    loop into a ``lax.scan`` (round_idx arrives traced), so whole round
+    programs jit-compile with no host syncs; pass ``use_scan=False`` for
+    round functions that need a static Python round index.
+
+    ``shuffle_impl`` selects the Shuffle hot loop (bit-identical semantics,
+    pinned by the conformance suite):
+
+    - ``"dense"`` (default): :func:`repro.core.mrmodel.shuffle` — stable
+      jnp argsort by destination + rank-addressed scatter;
+    - ``"kernel"``: :func:`repro.core.kshuffle.kernel_shuffle` — the Pallas
+      composition bincount → prefix_scan → bitonic_sort (``interpret=True``
+      off TPU).  ``get_engine("pallas")`` constructs this variant.
+    """
 
     name = "local"
 
-    def __init__(self, use_scan: bool = True):
+    def __init__(self, use_scan: bool = True, shuffle_impl: str = "dense"):
+        if shuffle_impl not in ("dense", "kernel"):
+            raise ValueError(f"shuffle_impl must be 'dense' or 'kernel', "
+                             f"got {shuffle_impl!r}")
         self.use_scan = use_scan
+        self.shuffle_impl = shuffle_impl
+        if shuffle_impl == "kernel":
+            from .kshuffle import kernel_shuffle
+            self._shuffle_fn = kernel_shuffle
+            self.name = "pallas"
+        else:
+            self._shuffle_fn = _dense_shuffle
 
     def shuffle(self, dests, payload: Payload, n_nodes: int,
                 capacity: int) -> Tuple[Mailbox, RoundStats]:
-        return _dense_shuffle(jnp.asarray(dests), payload, n_nodes, capacity)
+        return self._shuffle_fn(jnp.asarray(dests), payload, n_nodes,
+                                capacity)
 
     def run_rounds(self, f: RoundFn, box: Mailbox, n_rounds: int,
                    capacity: Optional[int] = None,
@@ -265,19 +322,34 @@ class ShardedEngine(MREngine):
 
     Node counts and the leading dim of 1-D destination arrays must be
     divisible by the axis size — grow V with :meth:`aligned_nodes`.
+
+    ``shuffle_impl`` selects the phase-2 per-shard local scatter: ``"dense"``
+    (default, :func:`repro.core.mrmodel.shuffle`) or ``"kernel"`` (the Pallas
+    :func:`repro.core.kshuffle.kernel_shuffle`) — the same choice
+    :class:`LocalEngine` exposes, applied inside ``shard_map``.
     """
 
     name = "sharded"
 
     def __init__(self, axis_name: str = "nodes",
-                 mesh: Optional[jax.sharding.Mesh] = None):
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 shuffle_impl: str = "dense"):
         if mesh is None:
             mesh = jax.make_mesh((jax.device_count(),), (axis_name,))
         if axis_name not in mesh.axis_names:
             raise ValueError(f"axis {axis_name!r} not in mesh {mesh.axis_names}")
+        if shuffle_impl not in ("dense", "kernel"):
+            raise ValueError(f"shuffle_impl must be 'dense' or 'kernel', "
+                             f"got {shuffle_impl!r}")
         self.mesh = mesh
         self.axis_name = axis_name
         self.n_shards = mesh.shape[axis_name]
+        self.shuffle_impl = shuffle_impl
+        if shuffle_impl == "kernel":
+            from .kshuffle import kernel_shuffle
+            self._local_shuffle = kernel_shuffle
+        else:
+            self._local_shuffle = _dense_shuffle
         self._compiled = {}
 
     def aligned_nodes(self, n_nodes: int) -> int:
@@ -311,7 +383,8 @@ class ShardedEngine(MREngine):
                                    recv_dest.reshape(-1) - shard * local_v,
                                    -1)
             recv_flat = [rl.reshape((-1,) + rl.shape[2:]) for rl in recv_leaves]
-            box, st = _dense_shuffle(local_dest, recv_flat, local_v, capacity)
+            box, st = self._local_shuffle(local_dest, recv_flat, local_v,
+                                          capacity)
             # Global stats: identical on every shard after the collectives.
             items_sent = lax.psum(jnp.sum(flat_dest >= 0), axis)
             if lead > 1:
@@ -333,8 +406,14 @@ class ShardedEngine(MREngine):
         in_specs = (P(axis),) + (P(axis),) * n_leaves
         out_specs = ([P(axis)] * n_leaves, P(axis),
                      RoundStats(P(), P(), P(), P()))
+        kwargs = {}
+        if self.shuffle_impl == "kernel":
+            # jax 0.4.x has no replication rule for pallas_call; the body's
+            # outputs carry explicit per-shard specs, so skipping the check
+            # is sound.
+            kwargs["check_rep"] = False
         return jax.jit(shard_map(body, mesh=self.mesh, in_specs=in_specs,
-                                 out_specs=out_specs))
+                                 out_specs=out_specs, **kwargs))
 
     def shuffle(self, dests, payload: Payload, n_nodes: int,
                 capacity: int) -> Tuple[Mailbox, RoundStats]:
@@ -376,9 +455,27 @@ def default_engine() -> MREngine:
 
 
 def get_engine(name: str, **kwargs) -> MREngine:
-    """Engine factory: 'reference' | 'local' | 'sharded'."""
+    """Engine factory.  Registered names:
+
+    - ``"reference"`` — :class:`ReferenceEngine`, numpy per-item host loop
+      (the executable spec; slow on purpose);
+    - ``"local"`` — :class:`LocalEngine`, dense jnp shuffles, scan/jit round
+      loops (the default substrate);
+    - ``"pallas"`` — :class:`LocalEngine` with ``shuffle_impl="kernel"``:
+      the shuffle hot loop runs the Pallas kernel composition
+      (:func:`repro.core.kshuffle.kernel_shuffle`; ``interpret=True`` off
+      TPU), everything else identical to ``"local"``;
+    - ``"sharded"`` — :class:`ShardedEngine`, the same program over a mesh
+      axis via ``shard_map`` + ``all_to_all``.
+
+    >>> get_engine("local").name
+    'local'
+    >>> get_engine("pallas").shuffle_impl
+    'kernel'
+    """
     engines = {"reference": ReferenceEngine, "local": LocalEngine,
-               "sharded": ShardedEngine}
+               "sharded": ShardedEngine,
+               "pallas": functools.partial(LocalEngine, shuffle_impl="kernel")}
     if name not in engines:
         raise ValueError(f"unknown engine {name!r}; pick from {sorted(engines)}")
     return engines[name](**kwargs)

@@ -1,0 +1,120 @@
+"""Kernel-backed Shuffle step: counts → offsets → sort → slot, on Pallas.
+
+Every algorithm in the paper bottoms out in the same primitive — the
+capacity-bounded shuffle round.  Theorem 4.2's queue discipline makes the
+structure explicit as a two-phase "invisible funnel": first send the *counts*
+(how many items target each reducer), then route items to reserved slots.
+:func:`kernel_shuffle` is that dataflow composed from the Pallas kernels in
+:mod:`repro.kernels`:
+
+    dests ──► bincount ──────► counts        (per-node fan-in; Thm 4.2 R1)
+                   │
+                   └► prefix_scan(exclusive) ──► offsets   (slot reservation)
+    (dest, src) ──► bitonic_sort ──► arrival order         (stable routing)
+    rank = sorted position − offsets[dest]  ──► slot       (FIFO placement)
+
+The result is **bit-identical** to the dense :func:`repro.core.mrmodel.
+shuffle` — same mailbox payload/validity, same :class:`RoundStats` (including
+the drop count), same FIFO-within-source order — which the conformance suite
+(``tests/test_conformance.py``) and ``tests/test_kernel_shuffle.py`` pin.
+
+Off-TPU (the jax 0.4.37 CPU CI) the kernels run with ``interpret=True`` —
+the kernel bodies execute as traced jnp with the identical control flow the
+Mosaic lowering compiles, so the parity tests cover the TPU code path's
+semantics; only the timing differs.  Select this path per engine with
+``LocalEngine(shuffle_impl="kernel")`` / ``get_engine("pallas")``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as _kops
+from .costmodel import RoundStats
+from .mrmodel import Mailbox, Payload, materialize_mailbox
+
+_INT32_MAX = 2**31 - 1
+# bitonic_sort runs the whole row as one VMEM tile (~512K f32 elements per
+# tile, key row + value row).  Enforced in interpret mode too, so the CPU CI
+# fails the same sizes a real TPU would instead of masking them.
+_MAX_SORT_N = 1 << 18
+
+
+def _check_key_space(n: int, n_nodes: int) -> None:
+    # The stable sort runs on composite int32 keys dest * n + source; the
+    # invalid-item sentinel uses dest = n_nodes, so the largest key is
+    # n_nodes * n + (n - 1).  It must also stay below the int32 padding
+    # sentinel the bitonic network appends.
+    if n and n_nodes * n + (n - 1) >= _INT32_MAX:
+        raise ValueError(
+            f"kernel_shuffle: composite (dest, source) key space "
+            f"n_nodes*n={n_nodes}*{n} overflows int32; use the dense "
+            f"shuffle (LocalEngine(shuffle_impl='dense')) for this size")
+    if n > _MAX_SORT_N:
+        raise ValueError(
+            f"kernel_shuffle: n={n} items exceed the bitonic network's "
+            f"single-VMEM-tile budget ({_MAX_SORT_N}); use the dense "
+            f"shuffle (LocalEngine(shuffle_impl='dense')) for this size")
+
+
+def kernel_shuffle(dests: jnp.ndarray, payload: Payload, n_nodes: int,
+                   capacity: int) -> Tuple[Mailbox, RoundStats]:
+    """Pallas-composed Shuffle: deliver item j to node ``dests[j]``.
+
+    Contract identical to :func:`repro.core.mrmodel.shuffle` (the dense
+    oracle): ``dests`` any-shape int32 with entries in [-1, n_nodes), < 0 =
+    "no item"; ``payload`` leaves share ``dests``'s leading shape; items are
+    delivered FIFO in flattened source order into slots 0..capacity-1 and
+    items ranked past ``capacity`` at their destination are dropped and
+    counted.  Returns the same (Mailbox, RoundStats) bit-for-bit.
+
+    Composition (see module docstring): ``kernels.bincount`` computes the
+    per-node fan-in, ``kernels.prefix_scan`` turns counts into exclusive
+    slot offsets, and a ``kernels.bitonic_sort`` over unique composite
+    (dest, source) keys recovers each item's arrival rank at its
+    destination; a rank-addressed scatter then materializes the
+    (V, capacity) mailbox.
+    """
+    dests = jnp.asarray(dests)
+    flat_dest = dests.reshape(-1).astype(jnp.int32)
+    n = flat_dest.shape[0]
+    _check_key_space(n, n_nodes)
+    valid = flat_dest >= 0
+
+    # Phase 1 — counts: per-node fan-in (ids < 0 ignored by the kernel).
+    counts = _kops.bincount(flat_dest, n_nodes)
+    # Phase 2 — offsets: exclusive prefix of counts = each node's first
+    # arrival position in destination-sorted order; the appended total
+    # closes the table for the invalid-item sentinel group.
+    offsets = _kops.prefix_scan(counts[None, :], exclusive=True)[0]
+    first_pos = jnp.concatenate(
+        [offsets, jnp.sum(counts, keepdims=True)]).astype(jnp.int32)
+
+    # Phase 3 — stable route: sort unique composite (dest, source) keys so
+    # equal destinations keep source order (the FIFO contract).  stride = n
+    # makes keys collision-free; invalid items take dest = n_nodes and sort
+    # last, before the bitonic network's int32-max padding.
+    stride = max(n, 1)
+    src = jnp.arange(n, dtype=jnp.int32)
+    sort_key = jnp.where(valid, flat_dest, n_nodes) * stride + src
+    sorted_key, sorted_src = _kops.bitonic_sort(sort_key[None, :],
+                                                src[None, :])
+    sorted_dest = sorted_key[0] // stride
+    # Phase 4 — slot: arrival rank = sorted position − first position of
+    # the destination's segment; scatter ranks back to source order.
+    rank_sorted = src - first_pos[sorted_dest]
+    rank = jnp.zeros((n,), jnp.int32).at[sorted_src[0]].set(rank_sorted)
+
+    # Materialize through the tail shared with the dense shuffle; only the
+    # remaining stats come from the kernel-computed counts.
+    box, max_sent = materialize_mailbox(dests, payload, flat_dest, valid,
+                                        rank, n_nodes, capacity)
+    stats = RoundStats(
+        items_sent=jnp.sum(counts),
+        max_sent=max_sent,
+        max_received=jnp.max(counts).astype(jnp.int32),
+        dropped=jnp.sum(jnp.maximum(counts - capacity, 0)),
+    )
+    return box, stats

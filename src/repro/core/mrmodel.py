@@ -60,6 +60,39 @@ def empty_like(box: Mailbox) -> Mailbox:
     )
 
 
+def materialize_mailbox(dests: jnp.ndarray, payload: Payload,
+                        flat_dest: jnp.ndarray, valid: jnp.ndarray,
+                        rank: jnp.ndarray, n_nodes: int,
+                        capacity: int) -> Tuple[Mailbox, jnp.ndarray]:
+    """Shared placement tail of both shuffle implementations (dense and
+    :func:`repro.core.kshuffle.kernel_shuffle`): keep items whose arrival
+    ``rank`` fits ``capacity``, scatter payload + validity into the
+    (V, capacity) mailbox (``mode='drop'`` discards out-of-range writes),
+    and compute the per-source-node ``max_sent`` stat.  The DESIGN.md §7
+    bit-identity contract between the two implementations lives here —
+    they differ only in how ``rank`` (and the remaining stats) are
+    computed."""
+    n = flat_dest.shape[0]
+    in_range = valid & (rank < capacity)
+    dest_idx = jnp.where(in_range, flat_dest, -1)
+    slot_idx = jnp.where(in_range, rank, capacity)
+
+    def place(leaf: jnp.ndarray) -> jnp.ndarray:
+        flat = leaf.reshape((n,) + leaf.shape[dests.ndim:])
+        out = jnp.zeros((n_nodes, capacity) + flat.shape[1:], flat.dtype)
+        return out.at[dest_idx, slot_idx].set(flat, mode="drop")
+
+    new_payload = jax.tree_util.tree_map(place, payload)
+    new_valid = jnp.zeros((n_nodes, capacity), bool).at[dest_idx, slot_idx].set(
+        in_range, mode="drop")
+    if dests.ndim >= 2:
+        sent_per_node = jnp.sum(valid.reshape(dests.shape[0], -1), axis=1)
+        max_sent = jnp.max(sent_per_node)
+    else:
+        max_sent = jnp.array(1, jnp.int32)
+    return Mailbox(payload=new_payload, valid=new_valid), max_sent
+
+
 def shuffle(dests: jnp.ndarray, payload: Payload, n_nodes: int,
             capacity: int) -> Tuple[Mailbox, ShuffleStats]:
     """The Shuffle step: deliver item j to node ``dests[j]``.
@@ -69,6 +102,10 @@ def shuffle(dests: jnp.ndarray, payload: Payload, n_nodes: int,
     delivered in stable (source-order) FIFO order into per-node slots
     ``0..capacity-1``; items ranked past ``capacity`` at their destination are
     dropped and counted.
+
+    This is the dense jnp implementation (stable argsort + rank-addressed
+    scatter) and the semantics oracle for the Pallas-composed counterpart,
+    :func:`repro.core.kshuffle.kernel_shuffle` (DESIGN.md §7).
     """
     flat_dest = dests.reshape(-1)
     n = flat_dest.shape[0]
@@ -83,36 +120,18 @@ def shuffle(dests: jnp.ndarray, payload: Payload, n_nodes: int,
     # Scatter back to source order.
     rank = jnp.zeros((n,), jnp.int32).at[order].set(rank_sorted)
 
-    in_range = valid & (rank < capacity)
-    dropped = jnp.sum(valid & (rank >= capacity))
-    # mode='drop' discards writes with out-of-range indices.
-    dest_idx = jnp.where(in_range, flat_dest, -1)
-    slot_idx = jnp.where(in_range, rank, capacity)
-
-    def place(leaf: jnp.ndarray) -> jnp.ndarray:
-        flat = leaf.reshape((n,) + leaf.shape[dests.ndim:])
-        out = jnp.zeros((n_nodes, capacity) + flat.shape[1:], flat.dtype)
-        return out.at[dest_idx, slot_idx].set(flat, mode="drop")
-
-    new_payload = jax.tree_util.tree_map(place, payload)
-    new_valid = jnp.zeros((n_nodes, capacity), bool).at[dest_idx, slot_idx].set(
-        in_range, mode="drop")
-
+    box, max_sent = materialize_mailbox(dests, payload, flat_dest, valid,
+                                        rank, n_nodes, capacity)
     recv_counts = jnp.bincount(jnp.where(valid, flat_dest, 0),
                                weights=valid.astype(jnp.int32),
                                length=n_nodes)
-    if dests.ndim >= 2:
-        sent_per_node = jnp.sum(valid.reshape(dests.shape[0], -1), axis=1)
-        max_sent = jnp.max(sent_per_node)
-    else:
-        max_sent = jnp.array(1, jnp.int32)
     stats = ShuffleStats(
         items_sent=jnp.sum(valid),
         max_sent=max_sent,
         max_received=jnp.max(recv_counts).astype(jnp.int32),
-        dropped=dropped,
+        dropped=jnp.sum(valid & (rank >= capacity)),
     )
-    return Mailbox(payload=new_payload, valid=new_valid), stats
+    return box, stats
 
 
 # A round function f: (round_idx, node_ids, mailbox) -> (dests, payload).

@@ -1,3 +1,19 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel substrate — the compute hot-spots of the paper's primitives.
+
+Each kernel has a pure-jnp oracle in :mod:`repro.kernels.ref` that the tests
+sweep against; the public entry points below are the jit'd wrappers from
+:mod:`repro.kernels.ops`, which select ``interpret=True`` automatically off
+TPU (the kernel body then runs as traced jnp with identical control flow to
+the Mosaic lowering).  The engine-level consumer is
+:func:`repro.core.kshuffle.kernel_shuffle`, which composes ``bincount`` →
+``prefix_scan`` → ``bitonic_sort`` into the capacity-bounded shuffle round
+(DESIGN.md §7).
+"""
+from .ops import (bincount, bitonic_sort, flash_attention, prefix_scan,
+                  ssm_scan)
+from . import ops, ref
+
+__all__ = [
+    "bincount", "bitonic_sort", "flash_attention", "prefix_scan", "ssm_scan",
+    "ops", "ref",
+]

@@ -39,6 +39,8 @@ def bincount(ids: jnp.ndarray, n_buckets: int, *, block_t: int = 1024,
     if ids.ndim != 1:
         raise ValueError("bincount expects (n,)")
     n = ids.shape[0]
+    if n == 0:                       # empty input: nothing to count
+        return jnp.zeros((n_buckets,), jnp.int32)
     block_t = min(block_t, n)
     if n % block_t != 0:
         pad = block_t - n % block_t

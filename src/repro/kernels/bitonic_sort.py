@@ -65,6 +65,8 @@ def bitonic_sort(keys: jnp.ndarray, values: jnp.ndarray, *,
     if keys.shape != values.shape or keys.ndim != 2:
         raise ValueError("bitonic_sort expects matching (rows, n) arrays")
     rows, n = keys.shape
+    if n == 0:                       # empty rows are trivially sorted
+        return keys, values
     n_pad = 1
     while n_pad < n:
         n_pad *= 2

@@ -49,6 +49,8 @@ def prefix_scan(x: jnp.ndarray, *, block_n: int = 512, exclusive: bool = False,
     if x.ndim != 2:
         raise ValueError("prefix_scan expects (rows, n)")
     rows, n = x.shape
+    if n == 0:                       # empty scan axis: cumsum of nothing
+        return x
     block_n = min(block_n, n)
     if n % block_n != 0:
         pad = block_n - n % block_n

@@ -1,0 +1,149 @@
+"""kernel_shuffle (Pallas counts → offsets → sort → slot) vs the dense oracle.
+
+Bit-identity is the contract (DESIGN.md §7): same mailbox payload and
+validity, same RoundStats values *and dtypes*, same drop set, for every
+destination pattern the dense shuffle accepts — including overflow, all-
+invalid, empty, and multi-leaf pytree payloads with trailing dims.  On CPU
+the kernels run in interpret mode; the engine-level wiring
+(``LocalEngine(shuffle_impl="kernel")`` / ``get_engine("pallas")`` /
+``ShardedEngine(shuffle_impl="kernel")``) is exercised through scan and
+shard_map round loops.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import CostAccum, LocalEngine, ShardedEngine, get_engine
+from repro.core.kshuffle import kernel_shuffle
+from repro.core.mrmodel import shuffle as dense_shuffle
+
+
+def assert_identical(res_dense, res_kernel, ctx=""):
+    box_d, st_d = res_dense
+    box_k, st_k = res_kernel
+    for ld, lk in zip(jax.tree_util.tree_leaves(box_d.payload),
+                      jax.tree_util.tree_leaves(box_k.payload)):
+        np.testing.assert_array_equal(np.asarray(ld), np.asarray(lk),
+                                      err_msg=ctx)
+    np.testing.assert_array_equal(np.asarray(box_d.valid),
+                                  np.asarray(box_k.valid), err_msg=ctx)
+    for name, fd, fk in zip(st_d._fields, st_d, st_k):
+        assert int(fd) == int(fk), f"{ctx}: RoundStats.{name} {fd} != {fk}"
+        assert np.asarray(fd).dtype == np.asarray(fk).dtype, \
+            f"{ctx}: RoundStats.{name} dtype mismatch"
+
+
+class TestKernelShuffleParity:
+    @pytest.mark.parametrize("seed", range(4))
+    def test_random_1d(self, seed):
+        rng = np.random.default_rng(seed)
+        V = int(rng.integers(1, 24))
+        cap = int(rng.integers(1, 6))
+        n = int(rng.integers(0, 120))
+        dests = jnp.asarray(rng.integers(-1, V, n).astype(np.int32))
+        payload = {"x": jnp.asarray(rng.normal(size=n).astype(np.float32)),
+                   "y": jnp.asarray(rng.integers(0, 99, (n, 2))
+                                    .astype(np.int32))}
+        assert_identical(dense_shuffle(dests, payload, V, cap),
+                         kernel_shuffle(dests, payload, V, cap),
+                         ctx=f"seed={seed} V={V} cap={cap} n={n}")
+
+    @pytest.mark.parametrize("seed", range(2))
+    def test_random_2d_mailbox_sends(self, seed):
+        rng = np.random.default_rng(100 + seed)
+        V, cap = int(rng.integers(2, 10)), int(rng.integers(1, 5))
+        dests = jnp.asarray(rng.integers(-1, V, (V, cap)).astype(np.int32))
+        payload = jnp.asarray(rng.normal(size=(V, cap)).astype(np.float32))
+        assert_identical(dense_shuffle(dests, payload, V, cap),
+                         kernel_shuffle(dests, payload, V, cap),
+                         ctx=f"seed={seed}")
+
+    def test_forced_overflow_fifo(self):
+        """3x oversubscription: identical FIFO-kept prefix and drop count."""
+        V, cap = 4, 3
+        dests = jnp.asarray([0, 1, 0, 0, 1, 0, 1, 0, 1, 0, 1, 0],
+                            dtype=jnp.int32)
+        payload = jnp.arange(12, dtype=jnp.float32)
+        res_k = kernel_shuffle(dests, payload, V, cap)
+        assert int(res_k[1].dropped) == 6
+        assert_identical(dense_shuffle(dests, payload, V, cap), res_k)
+
+    def test_all_invalid_and_empty(self):
+        V, cap = 5, 2
+        for dests in (jnp.full((9,), -1, jnp.int32),
+                      jnp.zeros((0,), jnp.int32)):
+            payload = jnp.zeros(dests.shape, jnp.float32)
+            res_k = kernel_shuffle(dests, payload, V, cap)
+            assert int(res_k[1].items_sent) == 0
+            assert not bool(np.asarray(res_k[0].valid).any())
+            assert_identical(dense_shuffle(dests, payload, V, cap), res_k)
+
+    def test_more_nodes_than_items(self):
+        dests = jnp.asarray([7, 0, 7], jnp.int32)
+        payload = jnp.asarray([1.0, 2.0, 3.0], jnp.float32)
+        assert_identical(dense_shuffle(dests, payload, 64, 2),
+                         kernel_shuffle(dests, payload, 64, 2))
+
+    def test_key_space_guard(self):
+        n = 70000
+        with pytest.raises(ValueError, match="key space"):
+            kernel_shuffle(jnp.zeros((n,), jnp.int32),
+                           jnp.zeros((n,), jnp.float32), 2**16, 4)
+
+    def test_vmem_tile_guard(self):
+        """Sizes past the bitonic single-tile budget raise identically in
+        interpret and compiled mode (the CPU CI must not mask a TPU OOM)."""
+        n = (1 << 18) + 1
+        with pytest.raises(ValueError, match="VMEM"):
+            kernel_shuffle(jnp.zeros((n,), jnp.int32),
+                           jnp.zeros((n,), jnp.float32), 4, 4)
+
+
+class TestEngineWiring:
+    def test_get_engine_pallas_alias(self):
+        eng = get_engine("pallas")
+        assert isinstance(eng, LocalEngine)
+        assert eng.shuffle_impl == "kernel" and eng.name == "pallas"
+        with pytest.raises(ValueError, match="shuffle_impl"):
+            LocalEngine(shuffle_impl="fused")
+
+    def test_scan_round_loop_parity(self):
+        """Whole multi-round programs under lax.scan match the dense engine,
+        mailbox and CostAccum alike."""
+        rng = np.random.default_rng(7)
+        V, cap, R = 8, 3, 4
+        entry = jnp.asarray(rng.integers(-1, V, (V, cap)).astype(np.int32))
+        payload = jnp.asarray(rng.normal(size=(V, cap)).astype(np.float32))
+        tables = jnp.asarray(rng.integers(-1, V, (R, V, cap)).astype(np.int32))
+
+        def fn(r, ids, box):
+            return jnp.where(box.valid, tables[r], -1), box.payload
+
+        outs = []
+        for eng in (LocalEngine(), get_engine("pallas"),
+                    LocalEngine(use_scan=False, shuffle_impl="kernel")):
+            box, st = eng.shuffle(entry, payload, V, cap)
+            box, acc = eng.run_rounds(fn, box, R,
+                                      accum=CostAccum.zero()
+                                      .add_round_stats(st))
+            outs.append((box, acc))
+        for box, acc in outs[1:]:
+            np.testing.assert_array_equal(np.asarray(outs[0][0].payload),
+                                          np.asarray(box.payload))
+            np.testing.assert_array_equal(np.asarray(outs[0][0].valid),
+                                          np.asarray(box.valid))
+            for fa, fb in zip(outs[0][1], acc):
+                assert float(fa) == float(fb)
+
+    def test_sharded_kernel_scatter_parity(self):
+        """ShardedEngine(shuffle_impl='kernel'): the per-shard local scatter
+        runs the Pallas path inside shard_map (check_rep relaxed)."""
+        rng = np.random.default_rng(11)
+        V, cap = 8, 3
+        dests = jnp.asarray(rng.integers(-1, V, 40).astype(np.int32))
+        payload = jnp.asarray(rng.normal(size=40).astype(np.float32))
+        want = ShardedEngine().shuffle(dests, payload, V, cap)
+        got = ShardedEngine(shuffle_impl="kernel").shuffle(dests, payload,
+                                                           V, cap)
+        assert_identical(want, got)

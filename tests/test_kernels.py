@@ -5,8 +5,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops, ref
+# raw kernel entry points (explicit interpret flag), not the ops wrappers
+from repro.kernels.bincount import bincount as raw_bincount
+from repro.kernels.bitonic_sort import bitonic_sort as raw_bitonic_sort
+from repro.kernels.prefix_scan import prefix_scan as raw_prefix_scan
 
 RNG = np.random.default_rng(1234)
+
+# The shuffle-path kernels must agree with their oracles in interpret mode
+# (CPU CI) and compiled mode (Mosaic; only runnable on a TPU backend).
+COMPILED = pytest.param(
+    False, id="compiled",
+    marks=pytest.mark.skipif(jax.default_backend() != "tpu",
+                             reason="compiled Pallas needs a TPU backend"))
+INTERPRET_MODES = [pytest.param(True, id="interpret"), COMPILED]
 
 
 @pytest.mark.parametrize("rows,n,block_n", [
@@ -48,6 +60,65 @@ def test_bitonic_sort(rows, n, dtype):
     kr, vr = ref.bitonic_sort_ref(k, v)
     np.testing.assert_allclose(ks, kr, rtol=1e-6)
     np.testing.assert_allclose(vs, vr, rtol=1e-6)
+
+
+class TestAwkwardShapes:
+    """Oracle equivalence off the happy path: non-power-of-two and
+    non-block-multiple lengths, all-dropped ids, n_buckets > n, and empty
+    inputs — the shapes the kernel-backed shuffle feeds the kernels."""
+
+    @pytest.mark.parametrize("interpret", INTERPRET_MODES)
+    @pytest.mark.parametrize("n,n_buckets,block_t", [
+        (0, 8, 32),          # empty input
+        (13, 64, 8),         # n_buckets > n, non-block-multiple
+        (31, 5, 16),         # non-power-of-two, non-block-multiple
+        (6, 100, 1024),      # block_t > n
+    ])
+    def test_bincount_awkward(self, n, n_buckets, block_t, interpret):
+        ids = jnp.asarray(RNG.integers(-1, n_buckets, n).astype(np.int32))
+        got = raw_bincount(ids, n_buckets, block_t=block_t,
+                           interpret=interpret)
+        np.testing.assert_array_equal(got, ref.bincount_ref(ids, n_buckets))
+
+    @pytest.mark.parametrize("interpret", INTERPRET_MODES)
+    def test_bincount_all_dropped(self, interpret):
+        ids = jnp.full((40,), -1, jnp.int32)
+        got = raw_bincount(ids, 7, block_t=16, interpret=interpret)
+        np.testing.assert_array_equal(got, jnp.zeros((7,), jnp.int32))
+
+    @pytest.mark.parametrize("interpret", INTERPRET_MODES)
+    @pytest.mark.parametrize("rows,n,block_n", [
+        (2, 0, 8),           # empty scan axis
+        (1, 1, 8),           # single element
+        (3, 13, 8),          # non-block-multiple
+        (2, 700, 512),       # non-power-of-two tail block
+    ])
+    @pytest.mark.parametrize("exclusive", [False, True])
+    def test_prefix_scan_awkward(self, rows, n, block_n, exclusive,
+                                 interpret):
+        x = jnp.asarray(RNG.integers(-9, 9, (rows, n)).astype(np.int32))
+        got = raw_prefix_scan(x, block_n=block_n, exclusive=exclusive,
+                              interpret=interpret)
+        np.testing.assert_array_equal(got,
+                                      ref.prefix_scan_ref(x,
+                                                          exclusive=exclusive))
+
+    @pytest.mark.parametrize("interpret", INTERPRET_MODES)
+    @pytest.mark.parametrize("rows,n", [
+        (1, 0),              # empty row
+        (2, 1),              # single element
+        (1, 5),              # non-power-of-two (padding path)
+        (3, 33),             # just past a power of two
+    ])
+    def test_bitonic_sort_awkward(self, rows, n, interpret):
+        # unique int keys: the value permutation is then deterministic
+        base = RNG.permutation(max(rows * n, 1) * 4)[:rows * n]
+        k = jnp.asarray(base.reshape(rows, n).astype(np.int32))
+        v = jnp.asarray(RNG.normal(size=(rows, n)).astype(np.float32))
+        ks, vs = raw_bitonic_sort(k, v, interpret=interpret)
+        kr, vr = ref.bitonic_sort_ref(k, v)
+        np.testing.assert_array_equal(ks, kr)
+        np.testing.assert_array_equal(vs, vr)
 
 
 @pytest.mark.parametrize("b,hq,hkv,s,d,causal", [

@@ -12,8 +12,8 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 from repro.core import (MRCost, shuffle, tree_prefix_sum, random_indexing,
                         funnel_write, multisearch, sample_sort,
                         brute_force_sort, make_queues, enqueue, dequeue,
-                        convex_hull_mr)
-from repro.core.applications import convex_hull_oracle
+                        convex_hull_2d)
+from repro.core.geometry.oracles import convex_hull_oracle
 from repro.kernels import ops, ref
 
 SET = dict(max_examples=20, deadline=None)
@@ -124,7 +124,7 @@ def test_property_hull_invariants(n, seed, M):
     (exercises the full sample-sort + merge stack, hence slow)."""
     rng = np.random.default_rng(seed)
     pts = rng.normal(size=(n, 2))
-    hull = convex_hull_mr(jnp.asarray(pts), M)
+    hull = convex_hull_2d(jnp.asarray(pts), M)
     want = convex_hull_oracle(pts)
     np.testing.assert_allclose(hull, want, rtol=1e-6)
 

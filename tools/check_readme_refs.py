@@ -1,0 +1,32 @@
+#!/usr/bin/env python
+"""Docs link check: every repo path README.md names must exist.
+
+Scans README.md for backtick-quoted references that look like repo paths
+(src/..., tests/..., benchmarks/..., tools/..., *.md) — in particular the
+paper → code map table — and fails if any target is missing, so the table
+can never silently rot.  Run from anywhere: paths resolve relative to the
+repo root.  CI runs this in the docs job next to the engine doctests.
+"""
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+# Any backticked dir-prefixed path (src/..., tests/..., examples/..., ...)
+# or a top-level *.md file; new directories are covered automatically.
+PATH_RE = re.compile(r"`([\w.\-]+/[\w/.\-]*|[\w.\-]+\.md)`")
+
+
+def main() -> int:
+    readme = (ROOT / "README.md").read_text(encoding="utf-8")
+    refs = sorted(set(PATH_RE.findall(readme)))
+    missing = [r for r in refs if not (ROOT / r).exists()]
+    for r in missing:
+        print(f"README.md references missing path: {r}", file=sys.stderr)
+    print(f"check_readme_refs: {len(refs) - len(missing)}/{len(refs)} "
+          f"referenced paths exist")
+    return 1 if missing else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
