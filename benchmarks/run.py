@@ -28,17 +28,16 @@ def _timeit(fn, n=3, warmup=1):
 
 
 def bench_prefix_sums(quick):
-    from repro.core import MRCost, tree_prefix_sum, prefix_sum_opt, log_M
+    from repro.core import LocalEngine, prefix_plan, prefix_sum_opt, log_M
     n, M = (20000, 64) if not quick else (2000, 32)
     x = jnp.ones(n, jnp.int32)
-    c = MRCost()
-    tree_prefix_sum(x, M, cost=c)
-    us_faithful = _timeit(lambda: jax.block_until_ready(
-        tree_prefix_sum(x, M)))
+    exe = LocalEngine().compile(prefix_plan(n, M, dtype=jnp.int32))
+    res = exe(x)
+    us_faithful = _timeit(lambda: jax.block_until_ready(exe(x).values))
     us_opt = _timeit(lambda: jax.block_until_ready(prefix_sum_opt(x)))
     print(f"prefix_tree_lemma2.2,{us_faithful:.0f},"
-          f"rounds={c.rounds}|bound=O(log_M N)={2*log_M(n, M)+1}"
-          f"|comm={c.communication}")
+          f"rounds={int(res.stats.rounds)}|bound=O(log_M N)={2*log_M(n, M)+1}"
+          f"|comm={int(res.stats.communication)}")
     print(f"prefix_opt_cumsum,{us_opt:.0f},speedup={us_faithful/us_opt:.1f}x")
 
 
@@ -71,34 +70,39 @@ def bench_multisearch(quick):
 
 
 def bench_sorting(quick):
-    from repro.core import MRCost, sample_sort, sort_opt, log_M
+    import warnings
+    from repro.core import sort_opt, log_M
     rng = np.random.default_rng(0)
     n, M = (20000, 64) if not quick else (2000, 32)
     x = jnp.asarray(rng.normal(size=n).astype(np.float32))
-    c = MRCost()
-    sample_sort(x, M, cost=c)
-    us = _timeit(lambda: jax.block_until_ready(sample_sort(x, M)), n=1)
-    us_opt = _timeit(lambda: jax.block_until_ready(sort_opt(x)))
-    print(f"sample_sort_s4.3,{us:.0f},"
-          f"rounds={c.rounds}|comm={c.communication}"
-          f"|bound~N*log_M N={n*log_M(n, M)}")
-    print(f"sort_opt_laxsort,{us_opt:.0f},speedup={us/us_opt:.1f}x")
 
-    # The tentpole claim, against the host-recursive baseline just measured:
-    # the engine-driven sample sort (jitted LocalEngine round program, zero
-    # host syncs) on the same input.
-    from repro.core import LocalEngine, sample_sort_mr
+    # The §4.3 sort through the plan API (the one sorter left: the legacy
+    # host-recursive sample_sort now delegates here too).
+    from repro.core import LocalEngine, sort_plan
     key = jax.random.PRNGKey(0)
     engine = LocalEngine()
-    fn = jax.jit(lambda v, k: sample_sort_mr(v, M, engine=engine, key=k).values)
-    out = jax.block_until_ready(fn(x, key))         # compile + correctness
+    exe = engine.compile(sort_plan(n, M))
+    res = exe(x, key=key)
+    out = jax.block_until_ready(res.values)         # compile + correctness
     assert bool(jnp.all(jnp.diff(out) >= 0))
-    res = sample_sort_mr(x, M, engine=engine, key=key)
-    us_eng = _timeit(lambda: jax.block_until_ready(fn(x, key)), n=3)
+    us_eng = _timeit(lambda: jax.block_until_ready(exe(x, key=key).values),
+                     n=3)
+    us_opt = _timeit(lambda: jax.block_until_ready(sort_opt(x)))
     print(f"engine_sample_sort_local,{us_eng:.0f},"
           f"rounds={int(res.stats.rounds)}|comm={int(res.stats.communication)}"
           f"|dropped={int(res.stats.dropped)}"
-          f"|vs_host_recursive={us/us_eng:.0f}x")
+          f"|comm_bound~N*log_M N={n*log_M(n, M)}")
+    print(f"sort_opt_laxsort,{us_opt:.0f},speedup={us_eng/us_opt:.1f}x")
+
+    # The deprecated wrapper surface costs only its per-call plan build +
+    # cache lookup on top of the compiled executable.
+    from repro.core import sample_sort_mr
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        us_wrap = _timeit(lambda: jax.block_until_ready(
+            sample_sort_mr(x, M, engine=engine, key=key).values), n=3)
+    print(f"sample_sort_mr_wrapper,{us_wrap:.0f},"
+          f"overhead_vs_executable={us_wrap/us_eng:.2f}x")
 
 
 def bench_funnel(quick):
@@ -231,25 +235,24 @@ def bench_moe_dispatch(quick):
 
 
 def bench_geometry(quick):
-    from repro.core import (LocalEngine, convex_hull_2d_mr,
-                            convex_hull_3d_mr, hull3d_round_bound,
-                            hull_round_bound, linear_program_mr,
+    from repro.core import (LocalEngine, hull2d_plan, hull3d_plan,
+                            hull3d_round_bound, hull_round_bound, lp_plan,
                             lp_round_bound)
     rng = np.random.default_rng(0)
     engine = LocalEngine()
     n, M = (4000, 64) if not quick else (500, 32)
     pts = jnp.asarray(rng.normal(size=(n, 2)).astype(np.float32))
     key = jax.random.PRNGKey(0)
-    fn = jax.jit(lambda p, k: convex_hull_2d_mr(p, M, engine=engine, key=k))
-    res = jax.block_until_ready(fn(pts, key))          # compile + rounds
-    us = _timeit(lambda: jax.block_until_ready(fn(pts, key).points), n=3)
+    fn = engine.compile(hull2d_plan(n, M))
+    res = jax.block_until_ready(fn(pts, key=key))      # compile + rounds
+    us = _timeit(lambda: jax.block_until_ready(fn(pts, key=key).points), n=3)
     print(f"hull2d_engine_s1.4,{us:.0f},rounds={int(res.stats.rounds)}"
           f"|bound={hull_round_bound(n, M)}|h={int(res.count)}"
           f"|dropped={int(res.stats.dropped)}|n={n}|M={M}")
 
     n3 = 24 if not quick else 14
     pts3 = jnp.asarray(rng.normal(size=(n3, 3)).astype(np.float32))
-    fn3 = jax.jit(lambda p: convex_hull_3d_mr(p, M, engine=engine))
+    fn3 = engine.compile(hull3d_plan(n3, M))
     res3 = jax.block_until_ready(fn3(pts3))
     us = _timeit(lambda: jax.block_until_ready(fn3(pts3).mask), n=2)
     print(f"hull3d_crcw_thm3.2,{us:.0f},rounds={int(res3.stats.rounds)}"
@@ -260,8 +263,7 @@ def bench_geometry(quick):
     A = jnp.asarray(rng.normal(size=(nc, d)).astype(np.float32))
     b = jnp.asarray(rng.uniform(1, 2, nc).astype(np.float32))
     cvec = jnp.asarray(np.array([1.0, -0.5, 0.25], np.float32))
-    fnl = jax.jit(lambda c_, A_, b_: linear_program_mr(c_, A_, b_, M,
-                                                       engine=engine))
+    fnl = engine.compile(lp_plan(nc, d, M))
     resl = jax.block_until_ready(fnl(cvec, A, b))
     us = _timeit(lambda: jax.block_until_ready(fnl(cvec, A, b).objective),
                  n=3)
@@ -271,22 +273,84 @@ def bench_geometry(quick):
 
 
 def bench_cost_model(quick):
-    from repro.core import MRCost, sample_sort, HardwareModel
+    from repro.core import MRCost, LocalEngine, sort_plan, HardwareModel
     n, M = 4096, 64
     x = jnp.asarray(np.random.default_rng(0).normal(size=n
                                                     ).astype(np.float32))
+    res = LocalEngine().compile(sort_plan(n, M))(x)
     c = MRCost()
-    sample_sort(x, M, cost=c)
+    c.absorb(res.stats)
     hw = HardwareModel(chips=256)
     t = hw.shuffle_time(c)
     print(f"cost_model_T,{t*1e6:.1f},T=t+R*L+C/B on 256 chips"
           f"|R={c.rounds}|C={c.communication}")
 
 
+def bench_plan(quick):
+    """Batched-throughput bench for the plan/compile/execute split.
+
+    One compiled sort Executable serves B independent queries either
+    sequentially (B single jitted calls) or through ``Executable.batch(B)``
+    (the whole round program vmapped into one device program).  Each B row
+    carries an in-bench parity check — batched output must be bit-identical
+    to the sequential loop — and the machine-readable results land in
+    BENCH_plan.json (queries/sec vs B) for the CI artifact.
+    """
+    import json
+    import warnings
+    from repro.core import LocalEngine, sample_sort_mr, sort_plan
+    n, M = 128, 64            # dispatch-bound per query: the serving regime
+    batch_sizes = (1, 8, 64) if not quick else (1, 8, 32)
+    engine = LocalEngine()
+    exe = engine.compile(sort_plan(n, M))
+    key = jax.random.PRNGKey(0)
+    rng = np.random.default_rng(0)
+    rows = []
+    for B in batch_sizes:
+        xs = jnp.asarray(rng.normal(size=(B, n)).astype(np.float32))
+        keys = jax.random.split(key, B)
+        batched = exe.batch(B)
+        out = batched(xs, keys=keys)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            singles = [sample_sort_mr(xs[i], M, engine=engine, key=keys[i])
+                       for i in range(B)]
+            parity = all(
+                np.array_equal(np.asarray(out.values[i]),
+                               np.asarray(singles[i].values))
+                for i in range(B))
+            assert parity, f"batch({B}) diverged from the sequential loop"
+
+            # Sequential baseline: B legacy sample_sort_mr calls (each a
+            # cached-compile + one jitted dispatch), measured as a loop.
+            def seq():
+                for i in range(B):
+                    jax.block_until_ready(sample_sort_mr(
+                        xs[i], M, engine=engine, key=keys[i]).values)
+            us_seq = _timeit(seq, n=3)
+        jax.block_until_ready(batched(xs, keys=keys).values)
+        us_batch = _timeit(lambda: jax.block_until_ready(
+            batched(xs, keys=keys).values), n=3)
+        qps_batch = B / (us_batch / 1e6)
+        speedup = us_seq / us_batch
+        rows.append({"B": B, "us_batch": us_batch, "us_sequential": us_seq,
+                     "qps_batched": qps_batch,
+                     "speedup_vs_sequential": speedup, "parity": parity})
+        print(f"plan_batch_B{B},{us_batch:.0f},"
+              f"qps={qps_batch:.0f}|vs_sequential={speedup:.1f}x"
+              f"|parity={parity}")
+    payload = {"bench": "plan_batch_sort", "n": n, "M": M,
+               "backend": jax.default_backend(),
+               "cache": engine.cache_info()._asdict(), "rows": rows}
+    with open("BENCH_plan.json", "w", encoding="utf-8") as f:
+        json.dump(payload, f, indent=2)
+    print(f"plan_bench_json,0,wrote BENCH_plan.json ({len(rows)} rows)")
+
+
 BENCHES = [bench_prefix_sums, bench_random_indexing, bench_multisearch,
            bench_sorting, bench_funnel, bench_queues, bench_shuffle,
            bench_kernels, bench_moe_dispatch, bench_geometry,
-           bench_cost_model]
+           bench_cost_model, bench_plan]
 
 
 def main() -> None:

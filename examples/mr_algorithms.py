@@ -14,12 +14,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (MRCost, log_M, tree_height, shuffle,
-                        tree_prefix_sum, prefix_cost_bound, random_indexing,
+                        prefix_plan, prefix_cost_bound, random_indexing,
                         funnel_write, funnel_read, PRAMProgram, simulate_crcw,
-                        multisearch, sample_sort, brute_force_sort,
-                        BSPProgram, run_bsp, make_queues, enqueue, dequeue,
+                        multisearch, brute_force_sort,
+                        BSPProgram, bsp_plan, make_queues, enqueue, dequeue,
                         ReferenceEngine, LocalEngine, ShardedEngine,
-                        sample_sort_mr, multisearch_mr)
+                        compile_plan, multisearch_plan, sort_plan)
 
 rng = np.random.default_rng(0)
 M = 32
@@ -35,11 +35,11 @@ print(f"[Thm 2.1] shuffle of 256 items over 64 nodes: delivered="
 
 # --- Lemma 2.2 -------------------------------------------------------------
 n = 10000
-c = MRCost()
-ps = tree_prefix_sum(jnp.ones(n, jnp.int32), M, cost=c)
+pres = compile_plan(prefix_plan(n, M))(jnp.ones(n, jnp.int32))
 rb, cb = prefix_cost_bound(n, M)
-print(f"[Lem 2.2] prefix sums n={n}: rounds={c.rounds} (bound {rb}), "
-      f"comm={c.communication} (bound {cb}); correct={int(ps[-1]) == n}")
+print(f"[Lem 2.2] prefix sums n={n}: rounds={int(pres.stats.rounds)} "
+      f"(bound {rb}), comm={int(pres.stats.communication)} (bound {cb}); "
+      f"correct={int(pres.values[-1]) == n}")
 
 # --- Lemma 2.3 -------------------------------------------------------------
 c = MRCost()
@@ -57,11 +57,12 @@ def superstep(t, ids, state, inbox, inbox_valid):
     stride = 2 ** t
     sender = (ids % (2 * stride)) == stride
     return state, jnp.where(sender, ids - stride, -1)[:, None], state[:, None]
-c = MRCost()
-out = run_bsp(BSPProgram(superstep), vals, n_supersteps=7, M=8, n_procs=P,
-              msg_template=jnp.float32(0), cost=c)
+bres = compile_plan(bsp_plan(BSPProgram(superstep), 7, 8, P,
+                             jnp.float32(0)))(vals)
+out = bres.proc_state
 print(f"[Thm 3.1] BSP tree-sum of {P} procs: R=7 supersteps -> "
-      f"rounds={c.rounds}, C={c.communication} = O(R*N); "
+      f"rounds={int(bres.stats.rounds)}, C={int(bres.stats.communication)} "
+      f"= O(R*N); "
       f"sum ok={np.isclose(float(out[0]), float(np.sum(np.asarray(vals))), rtol=1e-5)}")
 
 # --- Theorem 3.2: CRCW PRAM via invisible funnels --------------------------
@@ -104,35 +105,36 @@ print(f"[Thm 4.2] 100-item burst at one node, M={M}: drained in {rounds} "
 # --- §4.3: sample sort ------------------------------------------------------
 n = 20000
 x = jnp.asarray(rng.normal(size=n).astype(np.float32))
-c = MRCost()
-s = sample_sort(x, M, cost=c)
-print(f"[§4.3] sample sort n={n}: rounds={c.rounds}, comm={c.communication} "
+sres = compile_plan(sort_plan(n, M))(x)
+print(f"[§4.3] sample sort n={n}: rounds={int(sres.stats.rounds)}, "
+      f"comm={int(sres.stats.communication)} "
       f"(O(N log_M N) = {n * log_M(n, M)}); "
-      f"sorted={bool(jnp.all(s[1:] >= s[:-1]))}")
+      f"sorted={bool(jnp.all(jnp.diff(sres.values) >= 0))}")
 
 c = MRCost()
 bf = brute_force_sort(x[:500], M, cost=c)
 print(f"[Lem 4.3] brute-force sort n=500: comm={c.communication} "
       f"(O(N^2 log_M N) — why it is only used on the sqrt(N) pivots)")
 
-# --- The unified engine API: one round program, three backends -------------
-print("\nunified MREngine API (Thm 2.1 as an interface):")
+# --- The plan/compile/execute split: one plan, three backends --------------
+print("\nplan/compile/execute (DESIGN.md §8 — Thm 2.1 as an interface):")
 key = jax.random.PRNGKey(1)
 xs = x[:4096]
 want = np.sort(np.asarray(xs))
 for engine in (ReferenceEngine(), LocalEngine(), ShardedEngine()):
-    res = sample_sort_mr(xs, M, engine=engine, key=key)
+    plan = sort_plan(4096, M, align=engine.aligned_nodes)
+    res = engine.compile(plan)(xs, key=key)
     ok = bool((np.asarray(res.values) == want).all())
-    print(f"  sample_sort_mr on {engine.name:9s}: rounds="
+    print(f"  sort_plan on {engine.name:9s}: rounds="
           f"{int(res.stats.rounds)} comm={int(res.stats.communication)} "
           f"dropped={int(res.stats.dropped)} correct={ok}")
 qq, pv = x[:2000], jnp.sort(x[2000:2128])
-bk = multisearch_mr(qq, pv, M, engine=LocalEngine())
-print(f"  multisearch_mr on local: rounds={int(bk.stats.rounds)} correct="
+bk = compile_plan(multisearch_plan(2000, 128, M))(qq, pv)
+print(f"  multisearch_plan on local: rounds={int(bk.stats.rounds)} correct="
       f"{bool((np.asarray(bk.buckets) == np.searchsorted(np.asarray(pv), np.asarray(qq), side='left')).all())}")
 
 # --- §1.4 applications: engine-native computational geometry ---------------
-from repro.core import (convex_hull_2d_mr, convex_hull_3d, convex_hull_oracle,
+from repro.core import (hull2d_plan, convex_hull_3d, convex_hull_oracle,
                         convex_hull_3d_oracle, hull_round_bound,
                         hull3d_round_bound, linear_program_nd,
                         linear_program_oracle, lp_round_bound)
@@ -145,7 +147,8 @@ for engine in (ReferenceEngine(), LocalEngine(), ShardedEngine()):
     # the reference backend shuffles per item on the host — keep it small
     small = engine.name == "reference"
     sub, want = (pts2[:400], want_small) if small else (pts2, want_full)
-    res = convex_hull_2d_mr(sub, M, engine=engine, key=jax.random.PRNGKey(2))
+    plan = hull2d_plan(sub.shape[0], M, align=engine.aligned_nodes)
+    res = engine.compile(plan)(sub, key=jax.random.PRNGKey(2))
     ok = np.allclose(np.asarray(res.points)[:int(res.count)], want,
                      atol=1e-5)
     print(f"  2-D hull on {engine.name:9s}: n={sub.shape[0]} rounds="

@@ -6,10 +6,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import (MRCost, tree_prefix_sum, random_indexing,
-                        funnel_write, multisearch, sample_sort,
+from repro.core import (MRCost, compile_plan, prefix_plan, random_indexing,
+                        funnel_write, multisearch, multisearch_plan,
                         HardwareModel, LocalEngine, ReferenceEngine,
-                        ShardedEngine, sample_sort_mr, multisearch_mr)
+                        ShardedEngine, sort_plan)
 from repro.configs import get_config
 from repro.models import build_model
 
@@ -20,10 +20,10 @@ def paper_primitives():
     rng = np.random.default_rng(0)
 
     x = jnp.asarray(rng.integers(0, 10, 5000).astype(np.int32))
-    c = MRCost()
-    ps = tree_prefix_sum(x, M, cost=c)
-    print(f"prefix sums (Lemma 2.2): n=5000  rounds={c.rounds}  "
-          f"communication={c.communication}  (paper: O(log_M N), O(N log_M N))")
+    pres = compile_plan(prefix_plan(5000, M, dtype=x.dtype))(x)
+    print(f"prefix sums (Lemma 2.2): n=5000  rounds={int(pres.stats.rounds)}  "
+          f"communication={int(pres.stats.communication)}  "
+          f"(paper: O(log_M N), O(N log_M N))")
 
     c = MRCost()
     idx = random_indexing(5000, jax.random.PRNGKey(1), M, cost=c)
@@ -47,8 +47,9 @@ def paper_primitives():
 
     x = jnp.asarray(rng.normal(size=4096).astype(np.float32))
     c = MRCost()
-    s = sample_sort(x, M, cost=c)
-    assert bool(jnp.all(s[1:] >= s[:-1]))
+    res = compile_plan(sort_plan(4096, M))(x)
+    c.absorb(res.stats)
+    assert bool(jnp.all(jnp.diff(res.values) >= 0))
     hw = HardwareModel(chips=256)
     print(f"sample sort (§4.3): n=4096  rounds={c.rounds}  "
           f"communication={c.communication}")
@@ -57,28 +58,37 @@ def paper_primitives():
 
 
 def engine_backends():
-    print("\n=== unified MREngine API: one program, three backends ===")
+    print("\n=== plan/compile/execute: one plan, three backends ===")
     M = 64
     rng = np.random.default_rng(1)
     x = jnp.asarray(rng.normal(size=4096).astype(np.float32))
     key = jax.random.PRNGKey(0)
     for engine in (ReferenceEngine(), LocalEngine(), ShardedEngine()):
-        res = sample_sort_mr(x, M, engine=engine, key=key)
+        plan = sort_plan(4096, M, align=engine.aligned_nodes)
+        res = engine.compile(plan)(x, key=key)
         ok = bool(jnp.all(res.values[1:] >= res.values[:-1]))
-        print(f"sample_sort_mr[{engine.name:9s}] rounds={int(res.stats.rounds)}"
-              f"  comm={int(res.stats.communication)}  dropped="
+        print(f"sort_plan[{engine.name:9s}] rounds={int(res.stats.rounds)}"
+              f" (bound {plan.round_bound})  comm="
+              f"{int(res.stats.communication)}  dropped="
               f"{int(res.stats.dropped)}  sorted={ok}")
-    # the LocalEngine round loop jit-compiles end to end (no host syncs)
-    jitted = jax.jit(lambda v, k: sample_sort_mr(v, M, engine=LocalEngine(),
-                                                 key=k).values)
-    assert bool(jnp.all(jnp.diff(jitted(x, key)) >= 0))
-    print("sample_sort_mr under jax.jit: OK")
+    # compile is cached (same fingerprint -> same executable, no retrace),
+    # and batch(B) vmaps the whole round program into one device program
+    engine = LocalEngine()
+    exe = engine.compile(sort_plan(4096, M))
+    assert engine.compile(sort_plan(4096, M)) is exe
+    B = 8
+    xs = jnp.asarray(rng.normal(size=(B, 4096)).astype(np.float32))
+    keys = jax.random.split(key, B)
+    outs = exe.batch(B)(xs, keys=keys)
+    ok = bool(jnp.all(jnp.diff(outs.values, axis=1) >= 0))
+    print(f"exe.batch({B}): {B} sorts in one jitted call  sorted={ok}  "
+          f"cache={engine.cache_info()}")
 
     q = jnp.asarray(rng.normal(size=512).astype(np.float32))
     piv = jnp.sort(jnp.asarray(rng.normal(size=64).astype(np.float32)))
-    ms = multisearch_mr(q, piv, M=16, engine=LocalEngine())
+    ms = compile_plan(multisearch_plan(512, 64, 16))(q, piv)
     want = np.searchsorted(np.asarray(piv), np.asarray(q), side="left")
-    print(f"multisearch_mr[local] rounds={int(ms.stats.rounds)}  correct="
+    print(f"multisearch_plan[local] rounds={int(ms.stats.rounds)}  correct="
           f"{bool((np.asarray(ms.buckets) == want).all())}")
 
 

@@ -16,6 +16,13 @@ from .mrmodel import (Mailbox, ShuffleStats, make_mailbox, shuffle,
 # constructed with shuffle_impl="kernel" (or via get_engine("pallas")).
 from .engine import (MREngine, RoundProgram, ReferenceEngine, LocalEngine,
                      ShardedEngine, get_engine, default_engine)
+from .plan import (Plan, PlanStage, PlanState, execute_plan,
+                   account_stage, compute_stage, custom_stage,
+                   entry_stage, round_stage)
+from .api import (BoundedCache, CacheInfo, Executable, compile_plan,
+                  sort_plan, multisearch_plan, prefix_plan, PrefixResult,
+                  funnel_write_plan, bsp_plan, BSPResult,
+                  hull2d_plan, hull3d_plan, lp_plan)
 from .prefix import (tree_prefix_sum, prefix_sum_opt, random_indexing,
                      prefix_cost_bound, max_leaf_occupancy)
 from .funnel import (funnel_write, funnel_read, funnel_read_accum,
@@ -46,6 +53,13 @@ __all__ = [
     "run_round", "run_rounds",
     "MREngine", "RoundProgram", "ReferenceEngine", "LocalEngine",
     "ShardedEngine", "get_engine", "default_engine",
+    "Plan", "PlanStage", "PlanState", "execute_plan",
+    "account_stage", "compute_stage", "custom_stage",
+    "entry_stage", "round_stage",
+    "BoundedCache", "CacheInfo", "Executable", "compile_plan",
+    "sort_plan", "multisearch_plan", "prefix_plan", "PrefixResult",
+    "funnel_write_plan", "bsp_plan", "BSPResult",
+    "hull2d_plan", "hull3d_plan", "lp_plan",
     "tree_prefix_sum", "prefix_sum_opt", "random_indexing",
     "prefix_cost_bound", "max_leaf_occupancy",
     "funnel_write", "funnel_read", "funnel_read_accum",

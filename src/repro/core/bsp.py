@@ -15,11 +15,13 @@ from __future__ import annotations
 
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
 from .costmodel import CostAccum, MRCost
 from .mrmodel import Mailbox
+from .plan import Plan, PlanState, custom_stage
 
 
 class BSPProgram(NamedTuple):
@@ -32,43 +34,104 @@ class BSPProgram(NamedTuple):
     superstep: Callable
 
 
+class BSPResult(NamedTuple):
+    """Output of the BSP simulation plan.  ``dropped_per_step`` localizes
+    the strict-model violation (message bound M exceeded) to its superstep
+    without any host synchronization inside the round loop."""
+
+    proc_state: Any
+    dropped_per_step: jnp.ndarray   # (R,) int32
+    stats: CostAccum
+
+
+def bsp_plan(prog: BSPProgram, n_supersteps: int, M: int, n_procs: int,
+             msg_template: Any) -> Plan:
+    """Theorem 3.1 as a plan builder: R supersteps -> R named one-round
+    stages, C = O(R * N).
+
+    The message exchange of superstep t is the engine's Shuffle step at
+    capacity M; the superstep index is a Python int, so round functions may
+    branch on it statically.  Input at execute time: ``(proc_state,)``.
+    Unlike the legacy driver, a message-bound violation does not raise
+    mid-flight — it is reported per superstep in ``dropped_per_step`` (the
+    deprecated ``run_bsp`` wrapper restores the raising behavior)."""
+    n_supersteps, M, n_procs = int(n_supersteps), int(M), int(n_procs)
+    leaves, treedef = jax.tree_util.tree_flatten(msg_template)
+    fingerprint = ("bsp", prog.superstep, n_supersteps, M, n_procs, treedef,
+                   tuple((str(l.dtype), tuple(jnp.shape(l))) for l in leaves))
+
+    def prologue(inputs, keys):
+        proc_state = inputs[0]
+        inbox = Mailbox(
+            payload=jax.tree_util.tree_map(
+                lambda t: jnp.zeros((n_procs, M) + jnp.shape(t),
+                                    jnp.asarray(t).dtype), msg_template),
+            valid=jnp.zeros((n_procs, M), bool),
+        )
+        state_items = sum(int(x.shape[0]) if x.ndim else 1
+                          for x in jax.tree_util.tree_leaves(proc_state))
+        return {"proc_state": proc_state, "inbox": inbox,
+                "state_items": state_items, "drops": ()}
+
+    proc_ids = jnp.arange(n_procs, dtype=jnp.int32)
+    stages = []
+    for t in range(n_supersteps):
+        def make_apply(t=t):
+            def apply(engine, state: PlanState) -> PlanState:
+                c = state.carry
+                proc_state, dests, msgs = prog.superstep(
+                    t, proc_ids, c["proc_state"], c["inbox"].payload,
+                    c["inbox"].valid)
+                inbox, stats = engine.shuffle(dests, msgs, n_procs, M)
+                # kept state counts as send-to-self (the "keep" primitive)
+                accum = state.accum.add_round(
+                    items_sent=(jnp.asarray(stats.items_sent)
+                                + c["state_items"]),
+                    max_io=jnp.maximum(
+                        jnp.asarray(stats.max_sent, jnp.int32),
+                        jnp.asarray(stats.max_received, jnp.int32)),
+                    dropped=stats.dropped)
+                carry = {**c, "proc_state": proc_state, "inbox": inbox,
+                         "drops": c["drops"]
+                         + (jnp.asarray(stats.dropped, jnp.int32),)}
+                return PlanState(state.box, carry, accum)
+            return apply
+        stages.append(custom_stage(f"superstep-{t}", 1, M, make_apply()))
+
+    def epilogue(state):
+        drops = state.carry["drops"]
+        return BSPResult(proc_state=state.carry["proc_state"],
+                         dropped_per_step=(jnp.stack(drops) if drops
+                                           else jnp.zeros((0,), jnp.int32)),
+                         stats=state.accum)
+
+    return Plan(name="bsp", fingerprint=fingerprint, n_nodes=n_procs,
+                stages=tuple(stages), prologue=prologue, epilogue=epilogue,
+                round_bound=n_supersteps)
+
+
 def run_bsp(prog: BSPProgram, proc_state: Any, n_supersteps: int, M: int,
             n_procs: int, msg_template: Any,
             cost: Optional[MRCost] = None, engine=None) -> Any:
-    """Theorem 3.1 driver: R supersteps -> R rounds, C = O(R * N).
-
-    Supersteps execute on an :class:`~repro.core.engine.MREngine` (default
-    LocalEngine) — the message exchange is the engine's Shuffle step, and
-    the same program runs on the reference or sharded backend by passing
-    ``engine=``.  Costs accumulate functionally; the mutable ``cost``
-    adapter absorbs them once at the end."""
+    """Deprecated wrapper over :func:`bsp_plan`: builds the plan, compiles
+    it on ``engine`` (default LocalEngine) and runs it, enforcing the
+    strict model (raises at the first superstep that exceeded the message
+    bound M) and feeding the mutable ``cost`` adapter."""
+    from .api import deprecated_entry
+    deprecated_entry("run_bsp", "bsp_plan")
     if engine is None:
         from .engine import default_engine
         engine = default_engine()
-    proc_ids = jnp.arange(n_procs, dtype=jnp.int32)
-    inbox = Mailbox(
-        payload=jax.tree_util.tree_map(
-            lambda t: jnp.zeros((n_procs, M) + t.shape, t.dtype), msg_template),
-        valid=jnp.zeros((n_procs, M), bool),
-    )
-    state_items = sum(int(x.shape[0]) if x.ndim else 1
-                      for x in jax.tree_util.tree_leaves(proc_state))
-    accum = CostAccum.zero()
-    for t in range(n_supersteps):
-        proc_state, dests, msgs = prog.superstep(
-            t, proc_ids, proc_state, inbox.payload, inbox.valid)
-        inbox, stats = engine.shuffle(dests, msgs, n_procs, M)
-        # Strict-model validity is enforced per superstep: running on after
-        # a drop would feed later supersteps a silently truncated inbox.
-        if int(stats.dropped):
-            raise RuntimeError(
-                f"superstep {t}: processor exceeded message bound M={M} "
-                f"({int(stats.dropped)} messages dropped)")
-        # kept state counts as send-to-self (paper's "keep" primitive)
-        accum = accum.add_round(
-            items_sent=jnp.asarray(stats.items_sent) + state_items,
-            max_io=jnp.maximum(jnp.asarray(stats.max_sent, jnp.int32),
-                               jnp.asarray(stats.max_received, jnp.int32)))
+    plan = bsp_plan(prog, n_supersteps, M, n_procs, msg_template)
+    res = engine.compile(plan)(proc_state)
+    drops = np.asarray(res.dropped_per_step)
+    if drops.any():
+        t = int(np.flatnonzero(drops)[0])
+        # Strict-model validity per superstep: running on after a drop would
+        # feed later supersteps a silently truncated inbox.
+        raise RuntimeError(
+            f"superstep {t}: processor exceeded message bound M={M} "
+            f"({int(drops[t])} messages dropped)")
     if cost is not None:
-        cost.absorb(accum)
-    return proc_state
+        cost.absorb(res.stats)
+    return res.proc_state

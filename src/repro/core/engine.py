@@ -56,6 +56,12 @@ and fold them into a :class:`CostAccum` value.  Both are pytrees of scalars,
 so a ``LocalEngine`` round loop jits and scans with zero host syncs; the
 mutable :class:`MRCost` survives only as a host-side reporting adapter
 (``MRCost.absorb``).
+
+Complete algorithms enter through the plan/compile/execute split
+(DESIGN.md §8): a ``*_plan`` builder emits the static round schedule,
+``engine.compile(plan)`` lowers it once into a cached
+:class:`~repro.core.api.Executable`, and ``exe.batch(B)`` vmaps the whole
+round program for batched serving.
 """
 from __future__ import annotations
 
@@ -103,6 +109,41 @@ class MREngine:
     """
 
     name = "abstract"
+    #: whether whole round programs may be wrapped in one ``jax.jit``
+    jittable = False
+    #: whether whole round programs may be ``jax.vmap``-ed (Executable.batch)
+    vmappable = False
+    #: bound on the per-engine plan/shuffle cache (see BoundedCache)
+    cache_size = 128
+    _cache = None
+
+    # -- plan/compile/execute split (repro.core.plan / repro.core.api) -------
+    def _ensure_cache(self):
+        if self._cache is None:
+            from .api import BoundedCache
+            self._cache = BoundedCache(self.cache_size)
+        return self._cache
+
+    def compile(self, plan):
+        """Lower a :class:`~repro.core.plan.Plan` onto this backend.
+
+        Returns the cached :class:`~repro.core.api.Executable` when an
+        equal-fingerprint plan was compiled before (a cache hit performs
+        zero retraces — the jitted round program is reused as-is); the
+        bounded cache evicts LRU and reports through :meth:`cache_info`.
+        """
+        from .api import Executable
+        cache = self._ensure_cache()
+        key = ("plan", plan.fingerprint)
+        exe = cache.lookup(key)
+        if exe is None:
+            exe = cache.store(key, Executable(plan, self))
+        return exe
+
+    def cache_info(self):
+        """Hit/miss/eviction counters of this engine's bounded cache (plan
+        executables plus, on ShardedEngine, per-shape shuffle lowerings)."""
+        return self._ensure_cache().info()
 
     # -- backend layout hooks ------------------------------------------------
     def aligned_nodes(self, n_nodes: int) -> int:
@@ -254,6 +295,8 @@ class LocalEngine(MREngine):
     """
 
     name = "local"
+    jittable = True
+    vmappable = True
 
     def __init__(self, use_scan: bool = True, shuffle_impl: str = "dense"):
         if shuffle_impl not in ("dense", "kernel"):
@@ -350,7 +393,6 @@ class ShardedEngine(MREngine):
             self._local_shuffle = kernel_shuffle
         else:
             self._local_shuffle = _dense_shuffle
-        self._compiled = {}
 
     def aligned_nodes(self, n_nodes: int) -> int:
         return -(-max(1, int(n_nodes)) // self.n_shards) * self.n_shards
@@ -434,13 +476,16 @@ class ShardedEngine(MREngine):
             dests = jnp.concatenate([dests, jnp.full((pad,), -1, dests.dtype)])
             leaves = [jnp.concatenate(
                 [l, jnp.zeros((pad,) + l.shape[1:], l.dtype)]) for l in leaves]
-        key = (n_nodes, capacity, dests.shape, dests.ndim, treedef,
+        # Per-shape lowerings share the engine's bounded cache with compiled
+        # plans (previously an unbounded private dict — DESIGN.md §8).
+        cache = self._ensure_cache()
+        key = ("shuffle", n_nodes, capacity, dests.shape, dests.ndim, treedef,
                tuple((l.shape, str(l.dtype)) for l in leaves))
-        fn = self._compiled.get(key)
+        fn = cache.lookup(key)
         if fn is None:
-            fn = self._build(n_nodes, capacity, dests.ndim, treedef,
-                             [(l.shape, l.dtype) for l in leaves])
-            self._compiled[key] = fn
+            fn = cache.store(key, self._build(
+                n_nodes, capacity, dests.ndim, treedef,
+                [(l.shape, l.dtype) for l in leaves]))
         out_leaves, valid, stats = fn(dests, *leaves)
         box = Mailbox(payload=jax.tree_util.tree_unflatten(treedef, out_leaves),
                       valid=valid)

@@ -29,8 +29,22 @@ import jax
 import jax.numpy as jnp
 
 from .costmodel import CostAccum, MRCost, tree_height
+from .plan import Plan, PlanState, custom_stage, execute_plan
 
 Semigroup = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+def _static_scalar(x):
+    """Hashable fingerprint token for a semigroup identity (None, a python
+    number, or a concrete jnp scalar; traced values get a dtype marker —
+    such plans execute fine but should not be cached via compile())."""
+    if x is None:
+        return None
+    try:
+        return float(x)
+    except (TypeError, jax.errors.TracerArrayConversionError,
+            jax.errors.ConcretizationTypeError):
+        return ("traced", str(getattr(x, "dtype", "?")))
 
 
 def _combine_sorted_segments(new_seg: jnp.ndarray, values: jnp.ndarray,
@@ -71,52 +85,101 @@ def _combine_mailbox_slots(payload: jnp.ndarray, valid: jnp.ndarray,
     return acc, has
 
 
-def _funnel_write_engine(addrs, values, memory, op, M, engine, identity):
-    """Theorem 3.2 write funnel with every tree level run as an engine round.
+def funnel_write_plan(n_procs: int, n_cells: int, M: int, op: Semigroup, *,
+                      identity=None, dtype=jnp.float32) -> Plan:
+    """Theorem 3.2 write funnel as a plan builder: every tree level is one
+    named engine round.
 
     Level l routes the item of (cell c, group g) to node ``g'' * N + c`` with
     g'' = g // d — so items sharing a parent funnel node meet in one mailbox
     (capacity d, never overflowed) and are combined slot-FIFO, which equals
     the dense path's leaf-order combine.  After L levels one item per live
-    cell remains, positionally indexed by cell; the root round applies it to
-    ``memory``.  Runs identically (bit-for-bit mailboxes and stats) on
-    Reference/Local/Sharded backends."""
-    P = addrs.shape[0]
-    N = memory.shape[0]
+    cell remains, positionally indexed by cell; the root stage applies it to
+    ``memory``.  Inputs at execute time: ``(addrs, values, memory)``.  Runs
+    identically (bit-for-bit mailboxes and stats) on Reference/Local/Sharded
+    backends.  ``identity`` must be static (None or a concrete scalar) for
+    the plan to be cacheable via ``engine.compile``.
+    """
+    P, N, M = int(n_procs), int(n_cells), int(M)
     d = max(2, M // 2)
     L = tree_height(max(P, 2), d)
+    fingerprint = ("funnel-write", P, N, M, op, _static_scalar(identity),
+                   str(jnp.dtype(dtype)))
+    n_groups_seq = []                    # groups alive after each level
+    g = P
+    for _ in range(L):
+        g = max(1, -(-g // d))
+        n_groups_seq.append(g)
 
-    live = addrs >= 0
-    cells = jnp.where(live, addrs, 0).astype(jnp.int32)
-    vals = values
-    accum = CostAccum.zero()
-    max_fan = jnp.int32(1)
-    n_groups = P                         # groups at the current level (static)
-    for level in range(L):
-        idx = jnp.arange(vals.shape[0], dtype=jnp.int32)
-        # Leaf items carry their group explicitly; from the second level on
-        # an item's position is (group * N + cell), so group/cell are
-        # positional.
-        group = idx if level == 0 else idx // N
-        parent = group // d
-        n_groups = max(1, -(-n_groups // d))
-        dests = jnp.where(live, parent * N + cells, -1)
-        V = engine.aligned_nodes(n_groups * N)
-        box, st = engine.shuffle(dests, vals, V, d)
-        accum = accum.add_round_stats(st)
-        max_fan = jnp.maximum(max_fan, jnp.asarray(st.max_received, jnp.int32))
-        comb, has = _combine_mailbox_slots(box.payload, box.valid, op)
-        vals = comb[:n_groups * N]
-        live = has[:n_groups * N]
-        cells = jnp.arange(n_groups * N, dtype=jnp.int32) % N
-    # One item per cell remains, at position cell (n_groups == 1).
-    if identity is None:
-        merged = op(memory, vals)
-        memory = jnp.where(live, merged, memory)
-    else:
-        memory = op(memory, jnp.where(live, vals, identity))
-    accum = accum.add_round(items_sent=jnp.sum(live), max_io=1)
-    return FunnelResult(memory=memory, max_fan_in=max_fan, stats=accum)
+    def prologue(inputs, keys):
+        addrs, values, memory = inputs
+        live = addrs >= 0
+        return {"vals": values, "live": live,
+                "cells": jnp.where(live, addrs, 0).astype(jnp.int32),
+                "memory": memory, "max_fan": jnp.int32(1)}
+
+    stages = []
+    for level, n_groups in enumerate(n_groups_seq):
+        def make_apply(level=level, n_groups=n_groups):
+            def apply(engine, state: PlanState) -> PlanState:
+                c = state.carry
+                idx = jnp.arange(c["vals"].shape[0], dtype=jnp.int32)
+                # Leaf items carry their group explicitly; from the second
+                # level on an item's position is (group * N + cell), so
+                # group/cell are positional.
+                group = idx if level == 0 else idx // N
+                parent = group // d
+                dests = jnp.where(c["live"], parent * N + c["cells"], -1)
+                V = engine.aligned_nodes(n_groups * N)
+                box, st = engine.shuffle(dests, c["vals"], V, d)
+                accum = state.accum.add_round_stats(st)
+                comb, has = _combine_mailbox_slots(box.payload, box.valid, op)
+                carry = {
+                    "vals": comb[:n_groups * N],
+                    "live": has[:n_groups * N],
+                    "cells": jnp.arange(n_groups * N, dtype=jnp.int32) % N,
+                    "memory": c["memory"],
+                    "max_fan": jnp.maximum(
+                        c["max_fan"],
+                        jnp.asarray(st.max_received, jnp.int32)),
+                }
+                return PlanState(state.box, carry, accum)
+            return apply
+        stages.append(custom_stage(f"funnel-level-{level}", 1, d,
+                                   make_apply()))
+
+    def root_apply(engine, state: PlanState) -> PlanState:
+        # One item per cell remains, at position cell (n_groups == 1).
+        c = state.carry
+        vals, live, memory = c["vals"], c["live"], c["memory"]
+        if identity is None:
+            merged = op(memory, vals)
+            memory = jnp.where(live, merged, memory)
+        else:
+            memory = op(memory, jnp.where(live, vals, identity))
+        accum = state.accum.add_round(items_sent=jnp.sum(live), max_io=1)
+        return PlanState(state.box, {**c, "memory": memory}, accum)
+
+    stages.append(custom_stage("root", 1, 1, root_apply))
+
+    def epilogue(state):
+        return FunnelResult(memory=state.carry["memory"],
+                            max_fan_in=state.carry["max_fan"],
+                            stats=state.accum)
+
+    return Plan(name="funnel-write", fingerprint=fingerprint, n_nodes=P * N,
+                stages=tuple(stages), prologue=prologue, epilogue=epilogue,
+                round_bound=L + 1,
+                input_spec=(((P,), None), ((P,), None), ((N,), None)))
+
+
+def _funnel_write_engine(addrs, values, memory, op, M, engine, identity):
+    """Engine-path funnel write: build the plan and interpret it directly
+    (no compile cache — ``identity`` may be a traced value here)."""
+    plan = funnel_write_plan(addrs.shape[0], memory.shape[0], M, op,
+                             identity=identity,
+                             dtype=getattr(values, "dtype", jnp.float32))
+    return execute_plan(plan, engine, (addrs, values, memory))
 
 
 def funnel_write(addrs: jnp.ndarray, values: jnp.ndarray, memory: jnp.ndarray,
@@ -138,14 +201,26 @@ def funnel_write(addrs: jnp.ndarray, values: jnp.ndarray, memory: jnp.ndarray,
     With ``engine=`` the funnel levels execute as rounds of that
     :class:`~repro.core.engine.MREngine` (same tree, same combine order), so
     the write phase runs — and is stats-accounted — on any of the three
-    backends; ``engine=None`` keeps the dense segmented-scan realization.
+    backends; that path is a deprecated wrapper over
+    :func:`funnel_write_plan` (DESIGN.md §8).  ``engine=None`` keeps the
+    dense segmented-scan realization.
     """
     if engine is not None:
+        from .api import deprecated_entry
+        deprecated_entry("funnel_write(engine=...)", "funnel_write_plan")
         res = _funnel_write_engine(addrs, values, memory, op, M, engine,
                                    identity)
         if cost is not None:
             cost.absorb(res.stats)
         return res
+    res = _funnel_write_dense(addrs, values, memory, op, M, identity)
+    if cost is not None:
+        cost.absorb(res.stats)                    # one host sync, at the end
+    return res
+
+
+def _funnel_write_dense(addrs, values, memory, op, M, identity):
+    """Dense segmented-scan realization of the Theorem 3.2 write funnel."""
     P = addrs.shape[0]
     d = max(2, M // 2)
     L = tree_height(max(P, 2), d)
@@ -196,8 +271,6 @@ def funnel_write(addrs: jnp.ndarray, values: jnp.ndarray, memory: jnp.ndarray,
                                      mode="drop")
         memory = op(memory, base)
     accum = accum.add_round(items_sent=jnp.sum(live), max_io=1)
-    if cost is not None:
-        cost.absorb(accum)                    # one host sync, at the end
     return FunnelResult(memory=memory, max_fan_in=max_fan, stats=accum)
 
 
@@ -266,6 +339,26 @@ def scatter_combine_opt(addrs: jnp.ndarray, values: jnp.ndarray,
     raise ValueError(f"unsupported semigroup {op_name!r}")
 
 
+def _crcw_step(prog, proc_state, memory, t, M, op, identity, engine,
+               need_accum, accum):
+    """One PRAM step of the Theorem 3.2 simulation: funnel read, compute,
+    funnel write.  Shared by :func:`simulate_crcw` and the geometry plans
+    (hull3d builds one plan stage per step from this)."""
+    addrs = prog.read_addr(proc_state, t)
+    if need_accum:
+        vals, racc = funnel_read_accum(addrs, memory, M)
+        accum = accum.merge_sequential(racc)
+    else:
+        vals = memory[addrs]
+    proc_state, w_addr, w_val = prog.compute(proc_state, vals, t)
+    if engine is not None:
+        res = _funnel_write_engine(w_addr, w_val, memory, op, M, engine,
+                                   identity)
+    else:
+        res = _funnel_write_dense(w_addr, w_val, memory, op, M, identity)
+    return proc_state, res.memory, accum.merge_sequential(res.stats)
+
+
 class PRAMProgram(NamedTuple):
     """One step of an f-CRCW PRAM program (paper §3.2 read/compute/write).
 
@@ -295,17 +388,9 @@ def simulate_crcw(prog: PRAMProgram, proc_state, memory: jnp.ndarray,
     need_accum = with_accum or cost is not None
     accum = CostAccum.zero()
     for t in range(n_steps):
-        addrs = prog.read_addr(proc_state, t)
-        if need_accum:
-            vals, racc = funnel_read_accum(addrs, memory, M)
-            accum = accum.merge_sequential(racc)
-        else:
-            vals = memory[addrs]
-        proc_state, w_addr, w_val = prog.compute(proc_state, vals, t)
-        res = funnel_write(w_addr, w_val, memory, op, M,
-                           identity=identity, engine=engine)
-        memory = res.memory
-        accum = accum.merge_sequential(res.stats)
+        proc_state, memory, accum = _crcw_step(
+            prog, proc_state, memory, t, M, op, identity, engine,
+            need_accum, accum)
     if cost is not None:
         cost.absorb(accum)                                  # one host sync
     if with_accum:

@@ -16,19 +16,21 @@ ceiling realizing the paper's O(.) bound.  The deprecated
 """
 from .chain import hull_of_runs, sort_dedup_runs
 from .hull2d import (EngineHullResult, convex_hull_2d, convex_hull_2d_mr,
-                     hull_round_bound)
+                     hull2d_plan, hull_round_bound)
 from .hull3d import (Hull3DResult, convex_hull_3d, convex_hull_3d_mr,
-                     hull3d_round_bound)
-from .lp import LPResult, linear_program_mr, linear_program_nd, lp_round_bound
+                     hull3d_plan, hull3d_round_bound)
+from .lp import (LPResult, linear_program_mr, linear_program_nd, lp_plan,
+                 lp_round_bound)
 from .oracles import (convex_hull_3d_oracle, convex_hull_oracle,
                       linear_program_oracle)
 
 __all__ = [
     "hull_of_runs", "sort_dedup_runs",
     "EngineHullResult", "convex_hull_2d", "convex_hull_2d_mr",
-    "hull_round_bound",
+    "hull2d_plan", "hull_round_bound",
     "Hull3DResult", "convex_hull_3d", "convex_hull_3d_mr",
-    "hull3d_round_bound",
-    "LPResult", "linear_program_mr", "linear_program_nd", "lp_round_bound",
+    "hull3d_plan", "hull3d_round_bound",
+    "LPResult", "linear_program_mr", "linear_program_nd", "lp_plan",
+    "lp_round_bound",
     "convex_hull_oracle", "convex_hull_3d_oracle", "linear_program_oracle",
 ]

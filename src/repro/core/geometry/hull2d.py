@@ -32,7 +32,8 @@ import jax
 import jax.numpy as jnp
 
 from ..costmodel import CostAccum, MRCost, log_M, tree_height
-from ..sortmr import quantile_splitters
+from ..plan import Plan, account_stage, entry_stage, round_stage
+from ..sortmr import pivot_sample_size, quantile_splitters
 from .chain import hull_of_runs
 
 
@@ -44,74 +45,119 @@ class EngineHullResult(NamedTuple):
     stats: CostAccum      # valid iff stats.dropped == 0
 
 
+def hull2d_plan(n: int, M: int, *, oversample: int = 8, slack: float = 3.0,
+                n_nodes: Optional[int] = None, align=None) -> Plan:
+    """2-D convex hull (CCW from the lexicographic minimum) as a plan
+    builder — the module-docstring round structure as a static stage table:
+    pivot-sort accounting, the x-bucket entry shuffle, one named stage per
+    d-ary merge level (capacities growing as min(n, a^k * cap0) — the
+    all-points-extreme worst case, so the tree itself can never drop), and
+    the finalize round.  Input at execute time: ``(points,)`` of shape
+    (n, 2); PRNG slot ``"splitters"`` drives the §4.3 pivot sample.
+
+    ``n_nodes`` overrides the reducer count — pass it when comparing
+    backends whose ``aligned_nodes`` granularities differ, so both run the
+    identical round schedule and stats; ``align`` applies a backend's
+    granularity to the default count.
+    """
+    n, M = int(n), int(M)
+    if n == 0:
+        return Plan(
+            name="hull2d", fingerprint=("hull2d-trivial", 0), n_nodes=1,
+            stages=(),
+            prologue=lambda inputs, keys: {},
+            epilogue=lambda st: EngineHullResult(
+                points=jnp.zeros((0, 2), jnp.float32), count=jnp.int32(0),
+                stats=st.accum),
+            round_bound=0)      # no input_spec: any empty input is accepted
+    M_eff = max(2, M)
+    if n_nodes is not None:
+        V = int(n_nodes)
+    else:
+        V = max(1, -(-n // M_eff))
+        if align is not None:
+            V = int(align(V))
+    a = max(2, M_eff // 2)                       # merge-tree arity
+    n_levels = tree_height(V, a) if V > 1 else 0
+    s = pivot_sample_size(n, V, oversample)      # static, = runtime sample
+    piv_rounds = max(1, log_M(max(s, 2), M_eff))
+    cap0 = min(n, max(1, int(math.ceil(slack * n / V))))
+    fingerprint = ("hull2d", n, M, V, oversample, float(slack))
+
+    def prologue(inputs, keys):
+        pts = jnp.asarray(inputs[0], jnp.float32)
+        splitters, _ = quantile_splitters(pts[:, 0], V, oversample,
+                                          keys["splitters"])
+        return {"pts": pts, "splitters": splitters}
+
+    def emit_entry(carry):
+        pts = carry["pts"]
+        bucket = jnp.clip(
+            jnp.searchsorted(carry["splitters"], pts[:, 0], side="left"),
+            0, V - 1).astype(jnp.int32)
+        return bucket, pts
+
+    def make_chain_and_send(block: int):
+        def make_fn(carry):
+            def fn(r, ids, b):
+                hulls, h = hull_of_runs(b.payload, b.valid)
+                leader = (ids // block) * block
+                slot = jnp.arange(hulls.shape[1], dtype=jnp.int32)
+                dests = jnp.where(slot[None, :] < h[:, None],
+                                  leader[:, None], -1)
+                return dests, hulls
+            return fn
+        return make_fn
+
+    def make_finalize(carry):
+        def finalize(r, ids, b):
+            hulls, h = hull_of_runs(b.payload, b.valid)
+            slot = jnp.arange(hulls.shape[1], dtype=jnp.int32)
+            dests = jnp.where(slot[None, :] < h[:, None], ids[:, None], -1)
+            return dests, hulls
+        return finalize
+
+    stages = [account_stage("pivot-sort",
+                            ((s, min(s, M_eff)),) * piv_rounds),
+              entry_stage("entry", V, cap0, emit_entry)]
+    cap = cap0
+    for k in range(n_levels):
+        cap = min(n, a * cap)
+        stages.append(round_stage(f"merge-{k}",
+                                  make_chain_and_send(a ** (k + 1)), 1,
+                                  capacity=cap))
+    stages.append(round_stage("finalize", make_finalize, 1, capacity=cap))
+
+    def epilogue(state):
+        box = state.box
+        count = jnp.sum(box.valid[0]).astype(jnp.int32)
+        return EngineHullResult(points=box.payload[0], count=count,
+                                stats=state.accum)
+
+    return Plan(name="hull2d", fingerprint=fingerprint, n_nodes=V,
+                stages=tuple(stages), prologue=prologue, epilogue=epilogue,
+                round_bound=piv_rounds + 1 + n_levels + 1,
+                prng_slots=("splitters",), default_seed=7,
+                input_spec=(((n, 2), None),))
+
+
 def convex_hull_2d_mr(points: jnp.ndarray, M: int, *, engine=None,
                       key: Optional[jax.Array] = None,
                       n_nodes: Optional[int] = None,
                       slack: float = 3.0, oversample: int = 8
                       ) -> EngineHullResult:
-    """2-D convex hull (CCW from the lexicographic minimum) as engine rounds.
-
-    ``points``: (n, 2).  Pure and jit-safe: returns padded vertices, their
-    count, and the functional round accounting; callers on the host boundary
-    use :func:`convex_hull_2d` for a trimmed array plus the no-drop check.
-    ``n_nodes`` overrides the reducer count (as in ``sample_sort_mr``) —
-    pass it when comparing backends whose ``aligned_nodes`` granularities
-    differ (a multi-shard ShardedEngine vs LocalEngine), so both run the
-    identical round schedule and stats.
-    """
+    """Deprecated wrapper over :func:`hull2d_plan`: builds the plan,
+    compiles it on ``engine`` (cached per fingerprint) and runs it on
+    ``points`` (n, 2).  Prefer the plan API (repro.core.api)."""
+    from ..api import deprecated_entry
+    deprecated_entry("convex_hull_2d_mr", "hull2d_plan")
     if engine is None:
         from ..engine import default_engine
         engine = default_engine()
-    if key is None:
-        key = jax.random.PRNGKey(7)
     pts = jnp.asarray(points, jnp.float32)
-    n = pts.shape[0]
-    if n == 0:
-        return EngineHullResult(points=jnp.zeros((0, 2), jnp.float32),
-                                count=jnp.int32(0), stats=CostAccum.zero())
-    M_eff = max(2, int(M))
-    V = (int(n_nodes) if n_nodes is not None
-         else engine.aligned_nodes(max(1, -(-n // M_eff))))
-    a = max(2, M_eff // 2)                       # merge-tree arity
-    n_levels = tree_height(V, a) if V > 1 else 0
-
-    accum = CostAccum.zero()
-    splitters, s = quantile_splitters(pts[:, 0], V, oversample, key)
-    for _ in range(max(1, log_M(max(s, 2), M_eff))):     # pivot-sort rounds
-        accum = accum.add_round(items_sent=s, max_io=min(s, M_eff))
-
-    bucket = jnp.clip(jnp.searchsorted(splitters, pts[:, 0], side="left"),
-                      0, V - 1).astype(jnp.int32)
-    cap0 = min(n, max(1, int(math.ceil(slack * n / V))))
-    box, st = engine.shuffle(bucket, pts, V, cap0)
-    accum = accum.add_round_stats(st)
-
-    def chain_and_send(block: int):
-        def fn(r, ids, b):
-            hulls, h = hull_of_runs(b.payload, b.valid)
-            leader = (ids // block) * block
-            slot = jnp.arange(hulls.shape[1], dtype=jnp.int32)
-            dests = jnp.where(slot[None, :] < h[:, None],
-                              leader[:, None], -1)
-            return dests, hulls
-        return fn
-
-    def finalize(r, ids, b):
-        hulls, h = hull_of_runs(b.payload, b.valid)
-        slot = jnp.arange(hulls.shape[1], dtype=jnp.int32)
-        dests = jnp.where(slot[None, :] < h[:, None], ids[:, None], -1)
-        return dests, hulls
-
-    cap = cap0
-    stages = []
-    for k in range(n_levels):
-        cap = min(n, a * cap)
-        stages.append((chain_and_send(a ** (k + 1)), cap))
-    stages.append((finalize, cap))
-    box, accum = engine.run_stages(stages, box, accum=accum)
-
-    count = jnp.sum(box.valid[0]).astype(jnp.int32)
-    return EngineHullResult(points=box.payload[0], count=count, stats=accum)
+    plan = hull2d_plan(pts.shape[0], M, oversample=oversample, slack=slack,
+                       n_nodes=n_nodes, align=engine.aligned_nodes)
+    return engine.compile(plan)(pts, key=key)
 
 
 def convex_hull_2d(points, M: int, *, engine=None,
@@ -126,7 +172,10 @@ def convex_hull_2d(points, M: int, *, engine=None,
     if engine is None:
         from ..engine import default_engine
         engine = default_engine()
-    res = convex_hull_2d_mr(points, M, engine=engine, key=key, slack=slack)
+    pts = jnp.asarray(points, jnp.float32)
+    plan = hull2d_plan(pts.shape[0], M, slack=slack,
+                       align=engine.aligned_nodes)
+    res = engine.compile(plan)(pts, key=key)
     engine.require_no_drops(res.stats, what="2-D convex hull")
     if cost is not None:
         cost.absorb(res.stats)

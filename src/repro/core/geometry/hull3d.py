@@ -27,7 +27,8 @@ import numpy as np
 import jax.numpy as jnp
 
 from ..costmodel import CostAccum, MRCost, tree_height
-from ..funnel import PRAMProgram, simulate_crcw
+from ..funnel import PRAMProgram, _crcw_step, simulate_crcw
+from ..plan import Plan, PlanState, custom_stage
 from .util import combinations_array
 
 
@@ -54,43 +55,108 @@ def _facet_mask(pts: jnp.ndarray, tri: jnp.ndarray, eps: float) -> jnp.ndarray:
                      | jnp.all(dist >= -tol, axis=1))
 
 
+_HULL3D_PROG = PRAMProgram(
+    # One PRAM step per triple vertex: read the cell (funnel read collapses
+    # duplicates), then concurrently write 1.0 into it, combined by max.
+    read_addr=lambda state, t: state["tri"][:, t],
+    compute=lambda state, vals, t: (
+        state,
+        jnp.where(state["facet"], state["tri"][:, t], -1),
+        jnp.ones_like(vals)),
+)
+
+
+def hull3d_plan(n: int, M: int, *, eps: float = 1e-4) -> Plan:
+    """3-D convex hull as a plan builder: the Theorem 3.2 CRCW simulation
+    with one named stage per PRAM step (three Max-CRCW steps, one per
+    triple vertex), each running its invisible funnels as engine rounds.
+    Input at execute time: ``(points,)`` of shape (n, 3).
+    """
+    n, M = int(n), int(M)
+    fingerprint = ("hull3d", n, M, float(eps))
+    if n < 4:                      # degenerate: every point is extreme
+        return Plan(
+            name="hull3d", fingerprint=fingerprint, n_nodes=1, stages=(),
+            prologue=lambda inputs, keys: {},
+            epilogue=lambda st: Hull3DResult(mask=jnp.ones((n,), bool),
+                                             stats=st.accum),
+            round_bound=0, input_spec=(((n, 3), None),))
+    tri = combinations_array(n, 3)                      # (P, 3) static
+    P = int(tri.shape[0])
+    d = max(2, M // 2)
+    L = tree_height(max(P, 2), d)
+
+    def prologue(inputs, keys):
+        pts = jnp.asarray(inputs[0], jnp.float32)
+        return {"state": {"tri": tri, "facet": _facet_mask(pts, tri, eps)},
+                "memory": jnp.zeros((n,), jnp.float32)}
+
+    stages = []
+    for t in range(3):
+        def make_apply(t=t):
+            def apply(engine, state: PlanState) -> PlanState:
+                c = state.carry
+                proc_state, memory, accum = _crcw_step(
+                    _HULL3D_PROG, c["state"], c["memory"], t, M,
+                    jnp.maximum, jnp.float32(0), engine, True, state.accum)
+                return PlanState(state.box,
+                                 {"state": proc_state, "memory": memory},
+                                 accum)
+            return apply
+        # per step: 2L+1 funnel-read rounds + L+1 engine write-funnel rounds
+        stages.append(custom_stage(f"pram-step-{t}", 3 * L + 2, d,
+                                   make_apply()))
+
+    def epilogue(state):
+        return Hull3DResult(mask=state.carry["memory"] > 0.5,
+                            stats=state.accum)
+
+    return Plan(name="hull3d", fingerprint=fingerprint, n_nodes=P * n,
+                stages=tuple(stages), prologue=prologue, epilogue=epilogue,
+                round_bound=3 * (3 * L + 2),
+                input_spec=(((n, 3), None),))
+
+
 def convex_hull_3d_mr(points: jnp.ndarray, M: int, *, engine=None,
                       eps: float = 1e-4) -> Hull3DResult:
-    """Mark the 3-D hull vertices of ``points`` (n, 3) via Theorem 3.2.
-
-    Pure and jit-safe (static n).  ``engine=`` routes the Max-CRCW write
-    funnels through that backend's rounds; ``engine=None`` uses the dense
-    funnel realization with identical results and accounting structure.
+    """Deprecated wrapper: with ``engine=`` it builds :func:`hull3d_plan`,
+    compiles it on that backend (cached per fingerprint) and runs it;
+    ``engine=None`` keeps the legacy dense-funnel realization (identical
+    results, dense accounting structure).  Prefer the plan API.
     """
+    from ..api import deprecated_entry
+    deprecated_entry("convex_hull_3d_mr", "hull3d_plan")
     pts = jnp.asarray(points, jnp.float32)
+    if engine is not None:
+        plan = hull3d_plan(pts.shape[0], M, eps=eps)
+        return engine.compile(plan)(pts)
+    return _hull3d_dense(pts, M, eps)
+
+
+def _hull3d_dense(pts: jnp.ndarray, M: int, eps: float) -> Hull3DResult:
+    """Legacy dense-funnel realization (identical results; the dense
+    accounting structure of funnel_write's segmented-scan path)."""
     n = int(pts.shape[0])
     if n < 4:                      # degenerate: every point is extreme
         return Hull3DResult(mask=jnp.ones((n,), bool), stats=CostAccum.zero())
     tri = combinations_array(n, 3)                      # (P, 3) static
     facet = _facet_mask(pts, tri, eps)
-
-    # One PRAM step per triple vertex: read the cell (funnel read collapses
-    # duplicates), then concurrently write 1.0 into it, combined by max.
-    prog = PRAMProgram(
-        read_addr=lambda state, t: state["tri"][:, t],
-        compute=lambda state, vals, t: (
-            state,
-            jnp.where(state["facet"], state["tri"][:, t], -1),
-            jnp.ones_like(vals)),
-    )
     state = {"tri": tri, "facet": facet}
     _, memory, accum = simulate_crcw(
-        prog, state, jnp.zeros((n,), jnp.float32), 3, M, jnp.maximum,
-        identity=jnp.float32(0), engine=engine, with_accum=True)
+        _HULL3D_PROG, state, jnp.zeros((n,), jnp.float32), 3, M, jnp.maximum,
+        identity=jnp.float32(0), engine=None, with_accum=True)
     return Hull3DResult(mask=memory > 0.5, stats=accum)
 
 
 def convex_hull_3d(points, M: int, *, engine=None, eps: float = 1e-4,
                    cost: Optional[MRCost] = None) -> np.ndarray:
     """Host wrapper: sorted indices of the hull vertices of ``points``."""
-    res = convex_hull_3d_mr(points, M, engine=engine, eps=eps)
+    pts = jnp.asarray(points, jnp.float32)
     if engine is not None:
+        res = engine.compile(hull3d_plan(pts.shape[0], M, eps=eps))(pts)
         engine.require_no_drops(res.stats, what="3-D convex hull")
+    else:
+        res = _hull3d_dense(pts, M, eps)
     if cost is not None:
         cost.absorb(res.stats)
     return np.flatnonzero(np.asarray(res.mask))

@@ -23,7 +23,8 @@ import numpy as np
 import jax.numpy as jnp
 
 from ..costmodel import CostAccum, MRCost, tree_height
-from ..funnel import funnel_write
+from ..funnel import _funnel_write_dense, _funnel_write_engine
+from ..plan import Plan, PlanState, custom_stage
 from .util import combinations_array
 
 
@@ -35,19 +36,10 @@ class LPResult(NamedTuple):
     stats: CostAccum
 
 
-def linear_program_mr(c, A, b, M: int = 64, *, engine=None,
-                      feas_eps: float = 1e-5) -> LPResult:
-    """min c·x s.t. Ax <= b, d = A.shape[1] variables, n constraints.
-
-    Pure and jit-safe (static shapes from n, d).  Returns objective = +inf
-    when no candidate vertex is feasible (infeasible or unbounded over the
-    vertex set — the paper's reduction only inspects basic solutions).
-    """
-    c = jnp.asarray(c, jnp.float32)
-    A = jnp.asarray(A, jnp.float32)
-    bv = jnp.asarray(b, jnp.float32)
-    n, d = int(A.shape[0]), int(A.shape[1])
-    bases = combinations_array(n, d)                    # (Q, d) static
+def _solve_bases(c, A, bv, bases, feas_eps):
+    """Every candidate basis solves its d x d system and tests feasibility
+    against all n constraints (the per-processor PRAM work)."""
+    d = int(A.shape[1])
     sub_A = A[bases]                                    # (Q, d, d)
     sub_b = bv[bases]                                   # (Q, d)
     det = jnp.linalg.det(sub_A)
@@ -57,12 +49,83 @@ def linear_program_mr(c, A, b, M: int = 64, *, engine=None,
     xs = jnp.linalg.solve(safe_A, sub_b[..., None])[..., 0]    # (Q, d)
     feas = ok & jnp.all(A @ xs.T <= bv[:, None] + feas_eps, axis=0)
     obj = jnp.where(feas, xs @ c, jnp.inf)
-    # Min-CRCW: every live processor writes its objective to cell 0.
+    return xs, feas, obj
+
+
+def lp_plan(n: int, d: int, M: int = 64, *, feas_eps: float = 1e-5) -> Plan:
+    """Fixed-dimensional LP as a plan builder: the C(n, d) candidate bases
+    solve and feasibility-test in the prologue (per-processor work), then
+    one named Min-CRCW funnel stage combines the best feasible objective
+    into a single cell as engine rounds (O(log_M C(n, d)) of them).  Inputs
+    at execute time: ``(c, A, b)``.
+    """
+    n, d = int(n), int(d)
+    bases = combinations_array(n, d)                    # (Q, d) static
+    Q = int(bases.shape[0])
+    L = tree_height(max(Q, 2), max(2, M // 2))
+    fingerprint = ("lp", n, d, int(M), float(feas_eps))
+
+    def prologue(inputs, keys):
+        c = jnp.asarray(inputs[0], jnp.float32)
+        A = jnp.asarray(inputs[1], jnp.float32)
+        bv = jnp.asarray(inputs[2], jnp.float32)
+        xs, feas, obj = _solve_bases(c, A, bv, bases, feas_eps)
+        return {"xs": xs, "feas": feas, "obj": obj,
+                "memory": jnp.full((1,), jnp.inf, jnp.float32)}
+
+    def min_funnel(engine, state: PlanState) -> PlanState:
+        # Min-CRCW: every live processor writes its objective to cell 0.
+        carry = state.carry
+        addrs = jnp.where(carry["feas"], 0, -1).astype(jnp.int32)
+        res = _funnel_write_engine(addrs, carry["obj"], carry["memory"],
+                                   jnp.minimum, M, engine,
+                                   jnp.float32(jnp.inf))
+        return PlanState(state.box, {**carry, "memory": res.memory},
+                         state.accum.merge_sequential(res.stats))
+
+    stages = (custom_stage("min-funnel", L + 1, max(2, M // 2), min_funnel),)
+
+    def epilogue(state):
+        carry = state.carry
+        # Broadcast winner: the arg-min candidate (exact for float min).
+        k = jnp.argmin(carry["obj"])
+        return LPResult(x=carry["xs"][k], objective=carry["memory"][0],
+                        stats=state.accum)
+
+    return Plan(name="lp", fingerprint=fingerprint, n_nodes=Q,
+                stages=stages, prologue=prologue, epilogue=epilogue,
+                round_bound=L + 1,
+                input_spec=(((d,), None), ((n, d), None), ((n,), None)))
+
+
+def linear_program_mr(c, A, b, M: int = 64, *, engine=None,
+                      feas_eps: float = 1e-5) -> LPResult:
+    """Deprecated wrapper: with ``engine=`` it builds :func:`lp_plan`,
+    compiles it on that backend (cached per fingerprint) and runs it;
+    ``engine=None`` keeps the legacy dense-funnel combine (identical
+    optimum, dense accounting structure).  Prefer the plan API.
+    """
+    from ..api import deprecated_entry
+    deprecated_entry("linear_program_mr", "lp_plan")
+    A = jnp.asarray(A, jnp.float32)
+    if engine is not None:
+        plan = lp_plan(int(A.shape[0]), int(A.shape[1]), M,
+                       feas_eps=feas_eps)
+        return engine.compile(plan)(c, A, b)
+    return _lp_dense(c, A, b, M, feas_eps)
+
+
+def _lp_dense(c, A, b, M: int, feas_eps: float) -> LPResult:
+    """Legacy dense-funnel realization of the Min-CRCW combine."""
+    c = jnp.asarray(c, jnp.float32)
+    A = jnp.asarray(A, jnp.float32)
+    bv = jnp.asarray(b, jnp.float32)
+    n, d = int(A.shape[0]), int(A.shape[1])
+    bases = combinations_array(n, d)                    # (Q, d) static
+    xs, feas, obj = _solve_bases(c, A, bv, bases, feas_eps)
     addrs = jnp.where(feas, 0, -1).astype(jnp.int32)
-    res = funnel_write(addrs, obj, jnp.full((1,), jnp.inf, jnp.float32),
-                       jnp.minimum, M, identity=jnp.float32(jnp.inf),
-                       engine=engine)
-    # Broadcast winner: the arg-min candidate (deterministic, exact for min).
+    res = _funnel_write_dense(addrs, obj, jnp.full((1,), jnp.inf, jnp.float32),
+                              jnp.minimum, M, jnp.float32(jnp.inf))
     k = jnp.argmin(obj)
     return LPResult(x=xs[k], objective=res.memory[0], stats=res.stats)
 
@@ -72,9 +135,13 @@ def linear_program_nd(c, A, b, M: int = 64, *, engine=None,
                       ) -> Tuple[Optional[np.ndarray], Optional[float]]:
     """Host wrapper with the seed's API: (x_opt, objective), or (None, None)
     when no candidate vertex is feasible."""
-    res = linear_program_mr(c, A, b, M, engine=engine)
+    A = jnp.asarray(A, jnp.float32)
     if engine is not None:
+        plan = lp_plan(int(A.shape[0]), int(A.shape[1]), M)
+        res = engine.compile(plan)(c, A, b)
         engine.require_no_drops(res.stats, what="fixed-dim LP")
+    else:
+        res = _lp_dense(c, A, b, M, 1e-5)
     if cost is not None:
         cost.absorb(res.stats)
     best = float(res.objective)

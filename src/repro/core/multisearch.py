@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from .costmodel import CostAccum, MRCost, log_M, tree_height
+from .plan import Plan, account_stage, entry_stage, round_stage
 from .prefix import random_indexing
 
 
@@ -127,99 +128,131 @@ def multisearch(queries: jnp.ndarray, pivots: jnp.ndarray, M: int,
                              rounds=total_rounds)
 
 
-def multisearch_mr(queries: jnp.ndarray, pivots: jnp.ndarray, M: int, *,
-                   engine=None, key: Optional[jax.Array] = None,
-                   capacity: Optional[int] = None,
-                   pipelined: bool = True) -> EngineSearchResult:
-    """Theorem 4.1 as a round program on the unified engine API.
+def multisearch_plan(n_queries: int, n_pivots: int, M: int, *,
+                     dtype=jnp.float32, capacity: Optional[int] = None,
+                     pipelined: bool = True, align=None) -> Plan:
+    """Theorem 4.1 as a plan builder (DESIGN.md §3 and §8).
 
     The search tree is laid out as mailbox nodes: K batch-source nodes
     [0, K), then tree level l at offset T_l (root = node K, leaves at level
     L).  Batch b waits at source node b and enters the root at round b; a
     query at level l < L descends one level per round via the implicit f-ary
     index arithmetic; leaves keep.  After K + L rounds every query sits at
-    the leaf naming its bucket.  One algorithm definition — identical
-    buckets, mailboxes, and stats on Reference/Local/Sharded backends; on
-    ``LocalEngine`` the loop is a single ``lax.scan`` and the whole function
-    jit-compiles.
+    the leaf naming its bucket.  The layout, K, L and every capacity depend
+    only on (n_queries, n_pivots, M) — the plan is built without data; the
+    ``(queries, pivots)`` pair arrives at execute time.
 
-    ``capacity`` defaults to n_queries (lossless).  The interesting regime is
-    capacity ~ M: per-node congestion is w.h.p. <= M thanks to the random
-    batching, and ``stats.dropped`` reports the w.h.p. failure event instead
-    of crashing a reducer.
+    ``capacity`` defaults to n_queries (lossless).  The interesting regime
+    is capacity ~ M: per-node congestion is w.h.p. <= M thanks to the
+    random batching (PRNG slot ``"batches"``), and ``stats.dropped``
+    reports the w.h.p. failure event instead of crashing a reducer.
     """
+    n_q, m, M = int(n_queries), int(n_pivots), int(M)
+    n = n_q + m
+    dtype = jnp.dtype(dtype)
+    f_br = max(2, M // 2)
+    L = tree_height(max(m, 2), f_br)
+    pad = f_br ** L - m
+    big = (jnp.finfo(dtype).max if jnp.issubdtype(dtype, jnp.floating)
+           else jnp.iinfo(dtype).max)
+    K = max(1, log_M(n, max(2, M))) if pipelined else 1
+    # Node layout: sources [0, K); tree level l occupies [T[l], T[l] + f^l).
+    T = [K + (f_br ** l - 1) // (f_br - 1) for l in range(L + 1)]
+    V = T[L] + f_br ** L
+    if align is not None:
+        V = int(align(V))
+    cap = int(capacity) if capacity is not None else max(1, n_q)
+    fingerprint = ("multisearch", n_q, m, M, str(dtype), cap, pipelined, V)
+
+    def prologue(inputs, keys):
+        queries = jnp.asarray(inputs[0])
+        pivots = jnp.asarray(inputs[1])
+        padded = jnp.concatenate([jnp.sort(pivots),
+                                  jnp.full((pad,), big, pivots.dtype)])
+        if pipelined and n_q > 1:
+            idx = random_indexing(n_q, keys["batches"], M)
+            batch = ((idx * K) // n_q).astype(jnp.int32)
+        else:
+            batch = jnp.zeros((n_q,), jnp.int32)
+        return {"queries": queries, "padded": padded, "batch": batch}
+
+    def make_step(carry):
+        padded = carry["padded"]
+
+        def step(r, ids, b):
+            q, qi = b.payload
+            ids2 = ids[:, None]
+            is_src = ids2 < K
+            # tree descent, selected by the (static) level of each node id
+            dest = jnp.broadcast_to(ids2, q.shape).astype(jnp.int32)   # keep
+            for l in range(L):
+                k_local = ids2 - T[l]
+                stride = f_br ** (L - l - 1)
+                child_base = k_local * f_br
+                j = jnp.arange(f_br)
+                bound_idx = (child_base[..., None] + j + 1) * stride - 1
+                bounds = padded[jnp.clip(bound_idx, 0, padded.shape[0] - 1)]
+                c = jnp.minimum(jnp.sum(q[..., None] > bounds, axis=-1),
+                                f_br - 1)
+                at_l = (ids2 >= T[l]) & (ids2 < T[l] + f_br ** l)
+                dest = jnp.where(at_l, T[l + 1] + child_base + c, dest)
+            # source b releases its batch into the root at round b
+            dest = jnp.where(is_src, jnp.where(ids2 == r, T[0], ids2), dest)
+            dest = jnp.where(b.valid, dest, -1)
+            return dest.astype(jnp.int32), (q, qi)
+        return step
+
+    stages = (
+        # Entry round: query j is thrown into its batch's source node.
+        entry_stage("entry", V, cap,
+                    lambda c: (c["batch"],
+                               (c["queries"],
+                                jnp.arange(n_q, dtype=jnp.int32)))),
+        round_stage("descend", make_step, K + L),
+        account_stage("output", ((n_q, 1),)),
+    )
+
+    def epilogue(state):
+        # Leaves -> output: scatter each query's leaf index by original id.
+        box, carry = state.box, state.carry
+        q, qi = box.payload
+        valid = jnp.asarray(box.valid)
+        ids2 = jnp.arange(valid.shape[0], dtype=jnp.int32)[:, None]
+        at_leaf = valid & (ids2 >= T[L])
+        out_idx = jnp.where(at_leaf, jnp.asarray(qi), n_q)
+        leaf_k = jnp.minimum(ids2 - T[L], m).astype(jnp.int32)
+        buckets = jnp.zeros((n_q,), jnp.int32).at[out_idx.reshape(-1)].set(
+            jnp.broadcast_to(leaf_k, valid.shape).reshape(-1), mode="drop")
+        buckets = jnp.where(carry["queries"] > carry["padded"][m - 1], m,
+                            buckets)
+        return EngineSearchResult(buckets=buckets, stats=state.accum)
+
+    return Plan(name="multisearch", fingerprint=fingerprint, n_nodes=V,
+                stages=stages, prologue=prologue, epilogue=epilogue,
+                round_bound=1 + K + L + 1,
+                prng_slots=("batches",), default_seed=0,
+                input_spec=(((n_q,), None), ((m,), dtype)))
+
+
+def multisearch_mr(queries: jnp.ndarray, pivots: jnp.ndarray, M: int, *,
+                   engine=None, key: Optional[jax.Array] = None,
+                   capacity: Optional[int] = None,
+                   pipelined: bool = True) -> EngineSearchResult:
+    """Deprecated wrapper over :func:`multisearch_plan`: builds the plan,
+    compiles it on ``engine`` (cached per fingerprint) and runs it on
+    ``(queries, pivots)``.  Prefer the plan API (repro.core.api)."""
+    from .api import deprecated_entry
+    deprecated_entry("multisearch_mr", "multisearch_plan")
     if engine is None:
         from .engine import default_engine
         engine = default_engine()
     queries = jnp.asarray(queries)
     pivots = jnp.asarray(pivots)
-    n_q, m = queries.shape[0], pivots.shape[0]
-    n = n_q + m
-    f_br = max(2, M // 2)
-    L = tree_height(max(m, 2), f_br)
-    pad = f_br ** L - m
-    big = (jnp.finfo(pivots.dtype).max
-           if jnp.issubdtype(pivots.dtype, jnp.floating)
-           else jnp.iinfo(pivots.dtype).max)
-    padded = jnp.concatenate([jnp.sort(pivots),
-                              jnp.full((pad,), big, pivots.dtype)])
-
-    K = max(1, log_M(n, max(2, M))) if pipelined else 1
-    if key is None:
-        key = jax.random.PRNGKey(0)
-    if pipelined and n_q > 1:
-        idx = random_indexing(n_q, key, M)
-        batch = ((idx * K) // n_q).astype(jnp.int32)
-    else:
-        batch = jnp.zeros((n_q,), jnp.int32)
-
-    # Node layout: sources [0, K); tree level l occupies [T[l], T[l] + f^l).
-    T = [K + (f_br ** l - 1) // (f_br - 1) for l in range(L + 1)]
-    V = engine.aligned_nodes(T[L] + f_br ** L)
-    cap = int(capacity) if capacity is not None else max(1, n_q)
-
-    accum = CostAccum.zero()
-    # Entry round: query j is thrown into its batch's source node.
-    box, st = engine.shuffle(batch,
-                             (queries, jnp.arange(n_q, dtype=jnp.int32)),
-                             V, cap)
-    accum = accum.add_round_stats(st)
-
-    def step(r, ids, b):
-        q, qi = b.payload
-        ids2 = ids[:, None]
-        is_src = ids2 < K
-        # tree descent, selected by the (static) level of each node id
-        dest = jnp.broadcast_to(ids2, q.shape).astype(jnp.int32)   # keep
-        for l in range(L):
-            k_local = ids2 - T[l]
-            stride = f_br ** (L - l - 1)
-            child_base = k_local * f_br
-            j = jnp.arange(f_br)
-            bound_idx = (child_base[..., None] + j + 1) * stride - 1
-            bounds = padded[jnp.clip(bound_idx, 0, padded.shape[0] - 1)]
-            c = jnp.minimum(jnp.sum(q[..., None] > bounds, axis=-1), f_br - 1)
-            at_l = (ids2 >= T[l]) & (ids2 < T[l] + f_br ** l)
-            dest = jnp.where(at_l, T[l + 1] + child_base + c, dest)
-        # source b releases its batch into the root at round b
-        dest = jnp.where(is_src, jnp.where(ids2 == r, T[0], ids2), dest)
-        dest = jnp.where(b.valid, dest, -1)
-        return dest.astype(jnp.int32), (q, qi)
-
-    box, accum = engine.run_rounds(step, box, K + L, accum=accum)
-
-    # Leaves -> output: scatter each query's leaf index by its original id.
-    q, qi = box.payload
-    valid = jnp.asarray(box.valid)
-    ids2 = jnp.arange(valid.shape[0], dtype=jnp.int32)[:, None]
-    at_leaf = valid & (ids2 >= T[L])
-    out_idx = jnp.where(at_leaf, jnp.asarray(qi), n_q)
-    leaf_k = jnp.minimum(ids2 - T[L], m).astype(jnp.int32)
-    buckets = jnp.zeros((n_q,), jnp.int32).at[out_idx.reshape(-1)].set(
-        jnp.broadcast_to(leaf_k, valid.shape).reshape(-1), mode="drop")
-    buckets = jnp.where(queries > padded[m - 1], m, buckets)
-    accum = accum.add_round(items_sent=n_q, max_io=1)
-    return EngineSearchResult(buckets=buckets, stats=accum)
+    plan = multisearch_plan(queries.shape[0], pivots.shape[0], M,
+                            dtype=pivots.dtype, capacity=capacity,
+                            pipelined=pipelined,
+                            align=engine.aligned_nodes)
+    return engine.compile(plan)(queries, pivots, key=key)
 
 
 def multisearch_opt(queries: jnp.ndarray, pivots: jnp.ndarray) -> jnp.ndarray:

@@ -1,0 +1,228 @@
+"""Declarative round-program plans: the plan half of the plan/compile/execute
+split (DESIGN.md §8).
+
+The paper's headline bounds — O(log_M N) rounds for sorting (§4.3),
+multi-searching (Thm 4.1) and the geometry applications (§1.4) — share one
+structural property: once (N, M) are fixed, the *round schedule* is static;
+only the data varies.  That is exactly the split JAX rewards, so this module
+makes it an object: a :class:`Plan` is an algorithm with the data removed —
+
+- **named stages** (:class:`PlanStage`), each declaring how many rounds it
+  contributes and at what mailbox capacity, plus the callable that executes
+  it against an :class:`~repro.core.engine.MREngine`;
+- a **prologue** that turns the runtime inputs (and PRNG keys) into the
+  initial carry, and an **epilogue** that turns the final
+  :class:`PlanState` into the algorithm's result;
+- the **paper round-bound ceiling** (``round_bound``) and the declared
+  **PRNG slots** the plan consumes.
+
+Plans are built by the ``*_plan`` builders in each algorithm module
+(``sort_plan``, ``multisearch_plan``, ``hull2d_plan``, ...; re-exported from
+:mod:`repro.core.api`) from *static* parameters only — shapes, M, dtypes —
+never from data.  ``MREngine.compile(plan)`` lowers a plan once per
+(fingerprint, backend) into a cached :class:`~repro.core.api.Executable`;
+:func:`execute_plan` is the engine-agnostic interpreter both paths share.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .costmodel import CostAccum
+from .mrmodel import Mailbox
+
+
+class PlanStage(NamedTuple):
+    """One named step of a plan's static schedule.
+
+    ``rounds`` and ``capacity`` are the *declared* schedule (what
+    ``Plan.schedule()`` prints and ``Plan.total_rounds`` sums); ``apply``
+    is the executable body ``(engine, PlanState) -> PlanState`` and must
+    account exactly ``rounds`` rounds into the state's accumulator.
+    ``capacity=None`` means the stage inherits the current mailbox capacity
+    (or does not shuffle at all)."""
+
+    name: str
+    rounds: int
+    capacity: Optional[int]
+    apply: Callable
+
+
+class PlanState(NamedTuple):
+    """Threaded execution state: the current mailbox (None before the entry
+    shuffle), an arbitrary pytree ``carry`` (splitters, funnel frontiers,
+    PRAM memory, ...) and the functional cost accumulator."""
+
+    box: Optional[Mailbox]
+    carry: Any
+    accum: CostAccum
+
+
+class Plan(NamedTuple):
+    """A round program with the data removed (see module docstring).
+
+    ``fingerprint`` is a hashable tuple of every static parameter that went
+    into the build (name, n, M, dtypes, capacities, ...): two builder calls
+    with equal static arguments yield equal fingerprints, which is what the
+    engine plan cache keys on — closures are never compared."""
+
+    name: str
+    fingerprint: Tuple
+    n_nodes: int
+    stages: Tuple[PlanStage, ...]
+    prologue: Callable            # (inputs: tuple, keys: dict) -> carry
+    epilogue: Callable            # (PlanState) -> outputs
+    round_bound: int              # concrete ceiling realizing the paper's O(.)
+    prng_slots: Tuple[str, ...] = ()
+    default_seed: int = 7
+    #: per-input (shape, dtype-or-None) pairs (None entry/spec = unchecked);
+    #: the plan bakes these statics in, so a mismatched runtime input would
+    #: silently corrupt — execute_plan turns that into a ValueError.
+    input_spec: Optional[Tuple] = None
+
+    @property
+    def total_rounds(self) -> int:
+        """Rounds the declared schedule executes (must be <= round_bound)."""
+        return sum(s.rounds for s in self.stages)
+
+    def schedule(self) -> Tuple[Tuple[str, int, Optional[int]], ...]:
+        """The static round schedule as (stage name, rounds, capacity) rows."""
+        return tuple((s.name, s.rounds, s.capacity) for s in self.stages)
+
+    def describe(self) -> str:
+        rows = [f"Plan {self.name!r}: V={self.n_nodes}, "
+                f"rounds={self.total_rounds} (bound {self.round_bound}), "
+                f"prng={list(self.prng_slots)}"]
+        for name, rounds, cap in self.schedule():
+            rows.append(f"  {name:<16} rounds={rounds:<3} "
+                        f"capacity={'inherit' if cap is None else cap}")
+        return "\n".join(rows)
+
+    def split_key(self, key) -> dict:
+        """Resolve the caller's key into one key per declared PRNG slot.
+
+        A single slot receives the key unchanged (bit-compatible with the
+        pre-plan entry points); multiple slots split it in declaration
+        order.  ``key=None`` falls back to ``PRNGKey(default_seed)``."""
+        if not self.prng_slots:
+            return {}
+        if key is None:
+            key = jax.random.PRNGKey(self.default_seed)
+        if len(self.prng_slots) == 1:
+            return {self.prng_slots[0]: key}
+        subkeys = jax.random.split(key, len(self.prng_slots))
+        return dict(zip(self.prng_slots, subkeys))
+
+
+def _check_inputs(plan: Plan, inputs: Tuple) -> None:
+    """Fail loudly when runtime inputs disagree with the plan's baked-in
+    statics (shapes/dtypes are part of the fingerprint, not of the data)."""
+    if plan.input_spec is None:
+        return
+    if len(inputs) != len(plan.input_spec):
+        raise ValueError(
+            f"plan {plan.name!r} expects {len(plan.input_spec)} inputs, "
+            f"got {len(inputs)}")
+    import numpy as np
+    for i, (spec, x) in enumerate(zip(plan.input_spec, inputs)):
+        if spec is None:
+            continue
+        shape, dtype = spec
+        got = tuple(jnp.shape(x))
+        if got != tuple(shape):
+            raise ValueError(
+                f"plan {plan.name!r} input {i}: expected shape "
+                f"{tuple(shape)} (baked into the plan), got {got} — rebuild "
+                f"the plan for this size")
+        got_dtype = getattr(x, "dtype", None)
+        if dtype is not None and got_dtype is not None \
+                and np.dtype(got_dtype) != np.dtype(dtype):
+            raise ValueError(
+                f"plan {plan.name!r} input {i}: expected dtype "
+                f"{np.dtype(dtype)} (baked into the plan), got "
+                f"{np.dtype(got_dtype)} — rebuild the plan for this dtype")
+
+
+def execute_plan(plan: Plan, engine, inputs: Tuple, key=None):
+    """Run a plan's stages in order on ``engine`` and return its outputs.
+
+    Pure whenever the plan's stage bodies are (every builder in this repo):
+    safe under ``jax.jit`` / ``jax.vmap`` on array backends, which is what
+    :class:`~repro.core.api.Executable` relies on for caching and batching.
+    """
+    _check_inputs(plan, inputs)
+    keys = plan.split_key(key)
+    carry = plan.prologue(tuple(inputs), keys)
+    state = PlanState(box=None, carry=carry, accum=CostAccum.zero())
+    for stage in plan.stages:
+        state = stage.apply(engine, state)
+    return plan.epilogue(state)
+
+
+# ---------------------------------------------------------------------------
+# Stage constructors — the vocabulary the plan builders compose.
+# ---------------------------------------------------------------------------
+
+def account_stage(name: str,
+                  round_costs: Tuple[Tuple[int, int], ...]) -> PlanStage:
+    """Accounting-only rounds with static (items_sent, max_io) per round —
+    e.g. the §4.3 pivot-sort rounds, whose cost depends only on (n, M)."""
+    costs = tuple((int(i), int(io)) for i, io in round_costs)
+
+    def apply(engine, state: PlanState) -> PlanState:
+        acc = state.accum
+        for items, io in costs:
+            acc = acc.add_round(items_sent=items, max_io=io)
+        return state._replace(accum=acc)
+
+    return PlanStage(name, len(costs), None, apply)
+
+
+def entry_stage(name: str, n_nodes: int, capacity: int,
+                emit: Callable) -> PlanStage:
+    """The entry shuffle: ``emit(carry) -> (dests, payload)`` routes the
+    input collection into a fresh (n_nodes, capacity) mailbox."""
+
+    def apply(engine, state: PlanState) -> PlanState:
+        dests, payload = emit(state.carry)
+        box, st = engine.shuffle(dests, payload, n_nodes, capacity)
+        return PlanState(box, state.carry, state.accum.add_round_stats(st))
+
+    return PlanStage(name, 1, capacity, apply)
+
+
+def round_stage(name: str, make_fn: Callable, n_rounds: int,
+                capacity: Optional[int] = None) -> PlanStage:
+    """``n_rounds`` applications of one round function over the current
+    mailbox.  ``make_fn(carry) -> RoundFn`` binds the carry (splitters,
+    padded pivots, ...) at execute time; uniform capacity means
+    ``LocalEngine`` rolls the rounds into a single ``lax.scan``."""
+
+    def apply(engine, state: PlanState) -> PlanState:
+        box, accum = engine.run_rounds(make_fn(state.carry), state.box,
+                                       n_rounds, capacity=capacity,
+                                       accum=state.accum)
+        return state._replace(box=box, accum=accum)
+
+    return PlanStage(name, n_rounds, capacity, apply)
+
+
+def compute_stage(name: str, fn: Callable) -> PlanStage:
+    """A zero-round transform ``fn(box, carry) -> (box, carry)`` — local
+    compute between shuffles (the paper's in-reducer work)."""
+
+    def apply(engine, state: PlanState) -> PlanState:
+        box, carry = fn(state.box, state.carry)
+        return state._replace(box=box, carry=carry)
+
+    return PlanStage(name, 0, None, apply)
+
+
+def custom_stage(name: str, rounds: int, capacity: Optional[int],
+                 apply: Callable) -> PlanStage:
+    """Escape hatch for stages that drive the engine directly (invisible
+    funnels, PRAM steps, BSP supersteps); ``apply(engine, state) -> state``
+    must account exactly ``rounds`` rounds."""
+    return PlanStage(name, rounds, capacity, apply)

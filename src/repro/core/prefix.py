@@ -14,12 +14,13 @@ is the same tree folded into VMEM tiles).  Both are tested to agree.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from .costmodel import CostAccum, MRCost, tree_height
+from .plan import Plan, account_stage
 
 
 def _pad_to_tree(x: jnp.ndarray, d: int, height: int) -> jnp.ndarray:
@@ -30,59 +31,91 @@ def _pad_to_tree(x: jnp.ndarray, d: int, height: int) -> jnp.ndarray:
     return x
 
 
+class PrefixResult(NamedTuple):
+    """Output of the prefix-sums plan."""
+
+    values: jnp.ndarray
+    stats: CostAccum
+
+
+def prefix_plan(n: int, M: int, *, dtype=jnp.int32,
+                inclusive: bool = True) -> Plan:
+    """Lemma 2.2 all-prefix-sums as a plan builder, d = M/2.
+
+    The round schedule — 1 (input -> leaves) + (L-1) bottom-up + L top-down
+    + 1 (output) = O(log_M N) rounds, with per-round communication that
+    depends only on (n, M) — is entirely static, so the stage table carries
+    the exact accounting while the prologue performs the dense level-by-
+    level tree computation on the data (``(values,)`` at execute time).
+    """
+    n, M = int(n), int(M)
+    dtype = jnp.dtype(dtype)
+    d = max(2, M // 2)
+    L = tree_height(max(n, 2), d)
+    fingerprint = ("prefix", n, M, str(dtype), bool(inclusive))
+
+    # Static accounting: only non-empty nodes communicate (implicit tree).
+    up_costs = []
+    occupied = n                                  # non-empty nodes this level
+    for _ in range(L - 1):
+        up_costs.append((occupied + n, d))
+        occupied = -(-occupied // d)
+    down_costs = []
+    for l in range(L):
+        width = d ** (l + 1)                      # offsets width after fanout
+        occ = min(width, -(-n // d ** (L - 1 - l)) * d, 2 * n)
+        down_costs.append((occ + n, d))
+
+    def prologue(inputs, keys):
+        values = jnp.asarray(inputs[0])
+        leaves = _pad_to_tree(values, d, L)
+        # Bottom-up phase: levels[i] = subtree sums of the nodes at tree
+        # level L-1-i; each iteration is one MR round (node v sends s_v to
+        # its parent (l-1, floor(k/d))).
+        levels = [leaves]
+        for _ in range(L - 1):
+            levels.append(jnp.sum(levels[-1].reshape(-1, d), axis=1))
+        # Top-down phase: offsets[k] = sum of all leaves strictly left of
+        # node k's subtree at the current level.
+        offsets = jnp.zeros((1,), leaves.dtype)   # the (virtual) root
+        for l in range(L):
+            child_sums = levels[L - 1 - l].reshape(-1, d)
+            excl = jnp.cumsum(child_sums, axis=1) - child_sums
+            offsets = (offsets[:, None] + excl).reshape(-1)
+        out = offsets[:n] + values if inclusive else offsets[:n]
+        return {"values": out}
+
+    stages = (
+        account_stage("input", ((n, 1),)),        # input node i -> leaf i
+        account_stage("bottom-up", tuple(up_costs)),
+        account_stage("top-down", tuple(down_costs)),
+        account_stage("output", ((n, 1),)),       # leaf k -> a_k + s_{p(v)}
+    )
+
+    def epilogue(state):
+        return PrefixResult(values=state.carry["values"], stats=state.accum)
+
+    return Plan(name="prefix", fingerprint=fingerprint, n_nodes=d ** L,
+                stages=stages, prologue=prologue, epilogue=epilogue,
+                round_bound=2 * L + 1, input_spec=(((n,), dtype),))
+
+
 def tree_prefix_sum(values: jnp.ndarray, M: int,
                     cost: Optional[MRCost] = None,
                     inclusive: bool = True) -> jnp.ndarray:
-    """Lemma 2.2: all-prefix-sums on the d-ary tree, d = M/2.
-
-    Rounds: 1 (input -> leaves) + (L-1) bottom-up + L top-down + 1 (output)
-    = O(log_M N).  Communication: O(N) per round (dominated by the N leaves
-    keeping their items), O(N log_M N) total.
-    """
+    """Deprecated wrapper over :func:`prefix_plan` (Lemma 2.2): builds the
+    plan, compiles it on the default engine and runs it, feeding the
+    mutable ``cost`` adapter from the plan's functional accounting."""
+    from .api import compile_plan, deprecated_entry
+    deprecated_entry("tree_prefix_sum", "prefix_plan")
     if values.ndim != 1:
         raise ValueError("tree_prefix_sum expects a 1-D collection of items")
-    n = values.shape[0]
-    d = max(2, M // 2)
-    L = tree_height(max(n, 2), d)
-    leaves = _pad_to_tree(values, d, L)
-
-    # Functional accounting: the per-round quantities are static (they depend
-    # only on n, M), so the accumulator is built value-style and absorbed
-    # into the mutable reporting adapter once at the end.
-    accum = CostAccum.zero()
-    # Round 0: input node i sends a_i to leaf (L-1, i); leaves keep items after.
-    accum = accum.add_round(items_sent=n, max_io=1)
-
-    # --- Bottom-up phase.  levels[i] = subtree sums of the nodes at tree
-    # level L-1-i; levels[0] = leaves (width d^L), levels[-1] = the root's
-    # children (width d).  Each iteration is one MR round: every node at the
-    # current level sends s_v to p(v) = (l-1, floor(k/d)).
-    levels = [leaves]
-    occupied = n                                  # non-empty nodes this level
-    for _ in range(L - 1):
-        child = levels[-1]
-        parent = jnp.sum(child.reshape(-1, d), axis=1)
-        levels.append(parent)
-        # only non-empty nodes communicate (the tree is implicit)
-        accum = accum.add_round(items_sent=occupied + n, max_io=d)
-        occupied = -(-occupied // d)
-
-    # --- Top-down phase.  offsets[k] = sum of all leaves strictly left of
-    # node k's subtree at the current level.  Each iteration is one MR round:
-    # node v sends child w_i the value s_{p(v)} + sum_{j<i} s_{w_j}.
-    offsets = jnp.zeros((1,), leaves.dtype)      # the (virtual) root
-    for l in range(L):
-        child_sums = levels[L - 1 - l].reshape(-1, d)
-        excl = jnp.cumsum(child_sums, axis=1) - child_sums
-        offsets = (offsets[:, None] + excl).reshape(-1)
-        occupied = min(offsets.shape[0], -(-n // d ** (L - 1 - l)) * d, 2 * n)
-        accum = accum.add_round(items_sent=occupied + n, max_io=d)
-
-    # Final round: leaf k outputs a_k + s_{p(v)}.
-    accum = accum.add_round(items_sent=n, max_io=1)
+    plan = prefix_plan(values.shape[0], M, dtype=values.dtype,
+                       inclusive=inclusive)
+    res = compile_plan(plan)(values)
     if cost is not None:
-        cost.absorb(accum)
-    return offsets[:n] + values if inclusive else offsets[:n]
+        cost.absorb(res.stats)
+    return res.values
 
 
 def prefix_sum_opt(values: jnp.ndarray, inclusive: bool = True) -> jnp.ndarray:

@@ -6,17 +6,20 @@ bottom-up phase yields each item's rank.  O(log_M N) rounds but O(N^2 log_M N)
 communication — only viable for small inputs, which is exactly how §4.3 uses
 it: on the Theta(sqrt(N)) pivots.
 
-``sample_sort`` (the paper's algorithm, fully parallel — no master node):
-  1. pick Theta(sqrt(N)) random pivots;
-  2. rank the pivots with the brute-force sort;
-  3. multi-search (Thm 4.1) every item over the pivot tree -> bucket label;
-  4. route items to their buckets (a shuffle) and recurse in parallel until a
-     bucket fits one reducer (<= M), then sort locally.
+``sort_plan`` is the paper's §4.3 sample sort as a *plan builder* (DESIGN.md
+§8): the static radix schedule — pivot-sort accounting, entry shuffle,
+bucket-refinement rounds, reducer-local sort — is emitted as a declarative
+:class:`~repro.core.plan.Plan` from (n, M) alone, compiled once per backend
+through ``engine.compile(plan)`` and executed (or vmap-batched) on data.
+
+The historical entry points survive as thin deprecated wrappers:
+``sample_sort_mr`` builds+compiles+runs the plan; the seed's host-recursive
+numpy ``sample_sort`` delegates to the same plan (escalating capacity until
+the w.h.p. drop event clears) so the two sorters can no longer drift.
 
 Recursion bottoms out in a per-reducer local sort: on TPU that is the bitonic
 in-VMEM Pallas kernel (:mod:`repro.kernels.bitonic_sort`); here we call its
-jnp oracle.  Round cost of parallel recursion is the max over branches;
-communication adds (MRCost.merge_parallel).
+jnp oracle.
 
 Optimized counterpart: single fused ``jax.lax.sort`` per shard + all_to_all
 redistribution (see repro.core.distributed.sharded_sample_sort).
@@ -32,6 +35,7 @@ import jax.numpy as jnp
 
 from .costmodel import CostAccum, MRCost, log_M
 from .multisearch import brute_force_multisearch, multisearch
+from .plan import Plan, account_stage, entry_stage, round_stage
 
 
 def brute_force_sort(x: jnp.ndarray, M: int,
@@ -69,64 +73,46 @@ def brute_force_sort(x: jnp.ndarray, M: int,
     return out
 
 
-def _local_sort(x: np.ndarray) -> np.ndarray:
-    """Reducer-local sort of <= M items (TPU: bitonic Pallas kernel)."""
-    return np.sort(x, kind="stable")
-
-
 def sample_sort(x: jnp.ndarray, M: int, key: Optional[jax.Array] = None,
                 cost: Optional[MRCost] = None,
                 _depth: int = 0) -> jnp.ndarray:
-    """§4.3 sample sort.  Returns x ascending; cost tracks the paper's
-    O(log_M N) rounds / O(N log_M N) communication (w.h.p.) accounting."""
-    if key is None:
-        key = jax.random.PRNGKey(7)
-    xs = np.asarray(x)
-    n = xs.shape[0]
-    if n <= max(2, M):
-        if cost is not None:
-            cost.round(items_sent=n, max_io=n)      # one reducer sorts locally
-        return jnp.asarray(_local_sort(xs))
-    if _depth > 8:  # w.h.p. never reached; guards adversarial duplicates
-        return jnp.asarray(_local_sort(xs))
+    """Deprecated: the seed's host-recursive §4.3 sample sort.
 
-    # 1. Theta(sqrt(N)) random pivots.
-    n_piv = max(2, int(math.isqrt(n)))
-    k_piv, k_ms, k_rec = jax.random.split(key, 3)
-    piv_idx = jax.random.choice(k_piv, n, shape=(n_piv,), replace=False)
-    pivots = jnp.asarray(xs)[piv_idx]
-    # 2. brute-force sort of the pivots (Lemma 4.3): N_piv^2 = N comparisons.
-    sorted_piv = brute_force_sort(pivots, M, cost=cost)
-    # 3. multi-search every item over the pivot tree (Theorem 4.1).
-    ms = multisearch(jnp.asarray(xs), sorted_piv, M, key=k_ms, cost=cost)
-    buckets = np.asarray(ms.buckets)
-    # 4. shuffle to buckets (one round) and recurse in parallel.
+    Delegates to the engine-native sort plan (:func:`sort_plan` on the
+    default engine) so the two sorters cannot drift; the w.h.p. mailbox
+    overflow event is handled the way the paper handles it — by retrying
+    with more capacity (escalating ``slack``, finally collapsing to a
+    single reducer, which always fits).  ``cost`` absorbs the plan's
+    functional accounting.  ``_depth`` is accepted for back-compat and
+    ignored (there is no host recursion anymore)."""
+    from .api import deprecated_entry
+    deprecated_entry("sample_sort", "sort_plan")
+    res = sort_plan_escalating(jnp.asarray(x), M, key=key)
     if cost is not None:
-        cost.round(items_sent=n, max_io=int(np.max(np.bincount(
-            buckets, minlength=n_piv + 1))))
-    order = np.argsort(buckets, kind="stable")
-    xs_b = xs[order]
-    counts = np.bincount(buckets, minlength=n_piv + 1)
-    offs = np.concatenate([[0], np.cumsum(counts)])
-    out = np.empty_like(xs)
-    sub_costs = []
-    sub_keys = jax.random.split(k_rec, n_piv + 1)
-    for b in range(n_piv + 1):
-        lo, hi = offs[b], offs[b + 1]
-        if hi <= lo:
-            continue
-        sub_cost = MRCost() if cost is not None else None
-        out[lo:hi] = np.asarray(sample_sort(
-            jnp.asarray(xs_b[lo:hi]), M, key=sub_keys[b], cost=sub_cost,
-            _depth=_depth + 1))
-        if sub_cost is not None:
-            sub_costs.append(sub_cost)
-    if cost is not None and sub_costs:
-        par = sub_costs[0]
-        for c in sub_costs[1:]:
-            par.merge_parallel(c)
-        cost.merge_sequential(par)
-    return jnp.asarray(out)
+        cost.absorb(res.stats)
+    return res.values
+
+
+def sort_plan_escalating(x: jnp.ndarray, M: int, *, key=None,
+                         engine=None) -> "EngineSortResult":
+    """Run the sort plan, retrying the w.h.p. drop event with more capacity
+    the way the paper does: defaults -> generous slack -> one reducer
+    (cap >= n, cannot drop).  Deterministic success even on all-duplicate
+    inputs.  The one escalate-until-no-drops policy — shared by the
+    deprecated ``sample_sort`` and the data pipeline's paper shuffle.
+    Host-level (reads ``stats.dropped``): not for use under jit."""
+    if engine is None:
+        from .engine import default_engine
+        engine = default_engine()
+    x = jnp.asarray(x)
+    n = x.shape[0]
+    for slack, n_nodes in ((3.0, None), (8.0, None), (1.0, 1)):
+        plan = sort_plan(n, M, dtype=x.dtype, slack=slack, n_nodes=n_nodes,
+                         align=engine.aligned_nodes)
+        res = engine.compile(plan)(x, key=key)
+        if int(res.stats.dropped) == 0:
+            break
+    return res
 
 
 class EngineSortResult(NamedTuple):
@@ -134,6 +120,14 @@ class EngineSortResult(NamedTuple):
 
     values: jnp.ndarray          # (n,) ascending — valid iff stats.dropped == 0
     stats: CostAccum
+
+
+def pivot_sample_size(n: int, n_buckets: int, oversample: int) -> int:
+    """Static Theta(n_buckets * oversample) sample size of the §4.3 pivot
+    stage — the single source of truth shared by :func:`quantile_splitters`
+    (runtime) and the plans' pivot-sort accounting (``sort_plan``,
+    ``hull2d_plan``), so declared schedules cannot drift from execution."""
+    return int(min(n, max(2, n_buckets * oversample)))
 
 
 def quantile_splitters(x: jnp.ndarray, n_buckets: int, oversample: int,
@@ -148,9 +142,128 @@ def quantile_splitters(x: jnp.ndarray, n_buckets: int, oversample: int,
     Pure, jit-safe: shapes depend only on static (n, n_buckets, oversample).
     """
     n = x.shape[0]
-    s = int(min(n, max(2, n_buckets * oversample)))
+    s = pivot_sample_size(n, n_buckets, oversample)
     sample = jnp.sort(x[jax.random.permutation(key, n)[:s]])
     return sample[(jnp.arange(1, n_buckets) * s) // n_buckets], s
+
+
+def sort_plan(n: int, M: int, *, dtype=jnp.float32, levels: int = 1,
+              oversample: int = 8, slack: float = 3.0,
+              n_nodes: Optional[int] = None, align=None) -> Plan:
+    """§4.3 sample sort as a plan builder (DESIGN.md §3 and §8).
+
+    The recursion is flattened into a static radix schedule of ``levels``
+    bucket-refinement rounds: with V reducers and branching
+    B = V^(1/levels), round d routes every item to the leader of its
+    B^(levels-1-d)-wide bucket group, so items converge to their final
+    bucket in ``levels`` shuffles; one reducer-local sort round (the "keep"
+    primitive) then orders each bucket.  Splitters are the V-1 sample
+    quantiles of a Theta(V * oversample) random sample — the paper's pivot
+    stage, accounted as its O(log_M) rounds.
+
+    Everything here is static — shapes, capacities, the stage table — so
+    the plan is built **without touching data**; inputs ``(x,)`` arrive at
+    execute time.  ``align`` (e.g. ``engine.aligned_nodes``) rounds the
+    default reducer count to a backend's layout granularity.  The executed
+    result is valid iff ``stats.dropped == 0`` (the paper's w.h.p. event —
+    raise ``slack`` or ``oversample`` if it fires).
+    """
+    n, M = int(n), int(M)
+    dtype = jnp.dtype(dtype)
+    if n <= 1:
+        return Plan(
+            name="sort", fingerprint=("sort-trivial", n, str(dtype)),
+            n_nodes=1, stages=(),
+            prologue=lambda inputs, keys: {"x": jnp.asarray(inputs[0])},
+            epilogue=lambda st: EngineSortResult(values=st.carry["x"],
+                                                 stats=st.accum),
+            round_bound=0, input_spec=(((n,), dtype),))
+    levels = max(1, int(levels))
+    M_eff = max(2, M)
+    if n_nodes is not None:
+        V = int(n_nodes)
+    else:
+        V = max(1, -(-n // M_eff))
+        if align is not None:
+            V = int(align(V))
+    B = max(2, math.ceil(V ** (1.0 / levels))) if V > 1 else 1
+    s = pivot_sample_size(n, V, oversample)       # static, = runtime sample
+    piv_rounds = max(1, log_M(max(s, 2), M_eff))
+    fingerprint = ("sort", n, M, str(dtype), levels, oversample,
+                   float(slack), V)
+
+    def group_cap(d):
+        groups = min(V, B ** (d + 1))
+        return max(1, int(math.ceil(slack * n / groups)))
+
+    def bucket_of(splitters, v):
+        b = jnp.searchsorted(splitters, v, side="left")
+        return jnp.clip(b, 0, V - 1).astype(jnp.int32)
+
+    def level_dest(splitters, vals, valid, d):
+        width = B ** (levels - 1 - d)
+        dest = (bucket_of(splitters, vals) // width) * width
+        return jnp.where(valid, dest, -1)
+
+    def prologue(inputs, keys):
+        x = jnp.asarray(inputs[0])
+        splitters, _ = quantile_splitters(x, V, oversample, keys["splitters"])
+        return {"x": x, "splitters": splitters}
+
+    stages = [
+        # pivot sort: O(log_M s) rounds moving the s samples
+        account_stage("pivot-sort", ((s, min(s, M_eff)),) * piv_rounds),
+        # level 0 routes straight from the input collection
+        entry_stage("entry", V, group_cap(0),
+                    lambda c: (level_dest(c["splitters"], c["x"],
+                                          jnp.ones_like(c["x"], bool), 0),
+                               c["x"])),
+    ]
+    for d in range(1, levels):
+        def make_refine(carry, _d=d):
+            spl = carry["splitters"]
+
+            def refine(r, ids, b):
+                return level_dest(spl, b.payload, b.valid, _d), b.payload
+            return refine
+        stages.append(round_stage(f"refine-{d}", make_refine, 1,
+                                  capacity=group_cap(d)))
+
+    big = (jnp.finfo(dtype).max if jnp.issubdtype(dtype, jnp.floating)
+           else jnp.iinfo(dtype).max)
+
+    def make_local_sort(carry):
+        # Reducer-local sort round: sort within the mailbox, keep at self.
+        def local_sort(r, ids, b):
+            svals = jnp.sort(jnp.where(b.valid, b.payload, big), axis=1)
+            count = jnp.sum(b.valid, axis=1, keepdims=True)
+            slot = jnp.arange(svals.shape[1], dtype=jnp.int32)[None, :]
+            dest = jnp.where(slot < count, ids[:, None], -1)
+            return dest, svals
+        return local_sort
+
+    stages.append(round_stage("local-sort", make_local_sort, 1))
+    stages.append(account_stage("output", ((n, 1),)))   # leaves -> output
+
+    def epilogue(state):
+        # Output assembly: bucket-major compaction (valid slots are a FIFO
+        # prefix per node, so position = bucket offset + slot).
+        box = state.box
+        valid = jnp.asarray(box.valid)
+        payload = jnp.asarray(box.payload)
+        counts = jnp.sum(valid, axis=1)
+        offsets = jnp.cumsum(counts) - counts
+        slot = jnp.arange(valid.shape[1], dtype=jnp.int32)[None, :]
+        pos = jnp.where(valid, offsets[:, None] + slot, n)
+        out = jnp.zeros((n,), dtype).at[pos.reshape(-1)].set(
+            payload.reshape(-1), mode="drop")
+        return EngineSortResult(values=out, stats=state.accum)
+
+    return Plan(name="sort", fingerprint=fingerprint, n_nodes=V,
+                stages=tuple(stages), prologue=prologue, epilogue=epilogue,
+                round_bound=piv_rounds + levels + 2,
+                prng_slots=("splitters",), default_seed=7,
+                input_spec=(((n,), dtype),))
 
 
 def sample_sort_mr(x: jnp.ndarray, M: int, *, engine=None,
@@ -158,100 +271,20 @@ def sample_sort_mr(x: jnp.ndarray, M: int, *, engine=None,
                    n_nodes: Optional[int] = None,
                    levels: int = 1, oversample: int = 8,
                    slack: float = 3.0) -> EngineSortResult:
-    """§4.3 sample sort as a round program on the unified engine API.
-
-    The seed's host-recursive ``sample_sort`` re-enters Python at every
-    bucket; this version runs the whole computation as engine rounds over a
-    static mailbox layout, so on :class:`~repro.core.engine.LocalEngine` it
-    is ``jax.jit``-compilable end to end and on ``ShardedEngine`` the same
-    definition scales over a mesh axis.  The recursion is flattened into a
-    static radix schedule of ``levels`` bucket-refinement rounds (DESIGN.md
-    §3): with V reducers and branching B = V^(1/levels), round d routes every
-    item to the leader of its B^(levels-1-d)-wide bucket group, so items
-    converge to their final bucket in ``levels`` shuffles — the engine-round
-    image of the paper's recursive partitioning.  Then one reducer-local sort
-    round (the "keep" primitive) orders each bucket.
-
-    Splitters are the V-1 sample quantiles of a Theta(V * oversample) random
-    sample — the paper's pivot stage, with the brute-force pivot sort
-    realized by the dense in-memory sort it degenerates to when the sample
-    fits one reducer (§4.3 / Lemma 4.3), accounted as its O(log_M) rounds.
-
-    Returns values plus the functional :class:`CostAccum`; the result is
-    valid iff ``stats.dropped == 0`` (the paper's w.h.p. event — raise
-    ``slack`` or ``oversample`` if it fires).  Pure: safe under jit.
-    """
+    """Deprecated wrapper over :func:`sort_plan`: builds the plan, compiles
+    it on ``engine`` (cached per fingerprint) and runs it on ``x``.  Prefer
+    the plan API, which separates the static schedule from the data and
+    exposes batching (``engine.compile(plan).batch(B)``)."""
+    from .api import deprecated_entry
+    deprecated_entry("sample_sort_mr", "sort_plan")
     if engine is None:
         from .engine import default_engine
         engine = default_engine()
-    if key is None:
-        key = jax.random.PRNGKey(7)
     x = jnp.asarray(x)
-    n = x.shape[0]
-    if n <= 1:
-        return EngineSortResult(values=x, stats=CostAccum.zero())
-    levels = max(1, int(levels))
-    V = n_nodes if n_nodes is not None else engine.aligned_nodes(
-        max(1, -(-n // max(2, M))))
-    B = max(2, math.ceil(V ** (1.0 / levels))) if V > 1 else 1
-
-    # Pivot stage: V-1 quantile splitters from a sorted random sample.
-    splitters, s = quantile_splitters(x, V, oversample, key)
-
-    def bucket_of(v):
-        b = jnp.searchsorted(splitters, v, side="left")
-        return jnp.clip(b, 0, V - 1).astype(jnp.int32)
-
-    accum = CostAccum.zero()
-    # account the pivot sort: O(log_M s) rounds moving the s samples
-    for _ in range(max(1, log_M(max(s, 2), max(2, M)))):
-        accum = accum.add_round(items_sent=s, max_io=min(s, max(2, M)))
-
-    def group_cap(d):
-        groups = min(V, B ** (d + 1))
-        return max(1, int(math.ceil(slack * n / groups)))
-
-    def level_dest(vals, valid, d):
-        width = B ** (levels - 1 - d)
-        dest = (bucket_of(vals) // width) * width
-        return jnp.where(valid, dest, -1)
-
-    # Level 0 routes straight from the input collection (the entry shuffle).
-    box, st = engine.shuffle(level_dest(x, jnp.ones_like(x, bool), 0), x,
-                             V, group_cap(0))
-    accum = accum.add_round_stats(st)
-    for d in range(1, levels):
-        def refine(r, ids, b, _d=d):
-            return level_dest(b.payload, b.valid, _d), b.payload
-        box, st = engine.run_round(refine, box, d, capacity=group_cap(d))
-        accum = accum.add_round_stats(st)
-
-    # Reducer-local sort round: sort within the mailbox, keep at self.
-    big = (jnp.finfo(x.dtype).max if jnp.issubdtype(x.dtype, jnp.floating)
-           else jnp.iinfo(x.dtype).max)
-
-    def local_sort(r, ids, b):
-        svals = jnp.sort(jnp.where(b.valid, b.payload, big), axis=1)
-        count = jnp.sum(b.valid, axis=1, keepdims=True)
-        slot = jnp.arange(svals.shape[1], dtype=jnp.int32)[None, :]
-        dest = jnp.where(slot < count, ids[:, None], -1)
-        return dest, svals
-
-    box, st = engine.run_round(local_sort, box, levels)
-    accum = accum.add_round_stats(st)
-
-    # Output assembly: bucket-major compaction (valid slots are a FIFO
-    # prefix per node, so position = bucket offset + slot).
-    valid = jnp.asarray(box.valid)
-    payload = jnp.asarray(box.payload)
-    counts = jnp.sum(valid, axis=1)
-    offsets = jnp.cumsum(counts) - counts
-    slot = jnp.arange(valid.shape[1], dtype=jnp.int32)[None, :]
-    pos = jnp.where(valid, offsets[:, None] + slot, n)
-    out = jnp.zeros((n,), x.dtype).at[pos.reshape(-1)].set(
-        payload.reshape(-1), mode="drop")
-    accum = accum.add_round(items_sent=n, max_io=1)   # leaves -> output
-    return EngineSortResult(values=out, stats=accum)
+    plan = sort_plan(x.shape[0], M, dtype=x.dtype, levels=levels,
+                     oversample=oversample, slack=slack, n_nodes=n_nodes,
+                     align=engine.aligned_nodes)
+    return engine.compile(plan)(x, key=key)
 
 
 def sort_opt(x: jnp.ndarray) -> jnp.ndarray:

@@ -7,9 +7,9 @@ data dependency.  Properties a 1000-node deployment needs:
     (seed, step), so checkpoint restart resumes the exact stream with no
     loader state to persist.
   * *Global shuffle = the paper's sample sort* (§4.3): document order is a
-    permutation produced by sorting random keys — executed through
-    repro.core.sortmr.sample_sort when `paper_shuffle` (tests/benchmarks) or
-    a fused argsort otherwise (same permutation law).
+    permutation produced by sorting random keys — executed through the
+    compiled sort plan (repro.core.api.sort_plan) when `paper_shuffle`
+    (tests/benchmarks) or a fused argsort otherwise (same permutation law).
   * *Sharding*: the loader yields the global batch; pjit shards it over
     ('pod','data') via the batch input shardings.  Per-host slicing for
     multi-host runs keys off jax.process_index() the same way.
@@ -37,12 +37,14 @@ def global_shuffle_indices(n: int, seed: int, paper_shuffle: bool = False,
     rng = np.random.default_rng(seed)
     keys = rng.random(n).astype(np.float32)
     if paper_shuffle:
-        from ..core.sortmr import sample_sort
-        sorted_keys = np.asarray(sample_sort(jnp.asarray(keys), M))
+        from ..core.sortmr import sort_plan_escalating
+        res = sort_plan_escalating(jnp.asarray(keys), M)
+        sorted_keys = np.asarray(res.values)
         ranks = np.searchsorted(sorted_keys, keys)       # rank of each item
-        perm = np.empty(n, dtype=np.int64)
-        perm[ranks] = np.arange(n)
-        return perm
+        # float32 keys collide at realistic n; a stable argsort over the
+        # collapsed ranks breaks ties by input order, so the result is a
+        # permutation even with duplicate keys.
+        return np.argsort(ranks, kind="stable")
     return np.argsort(keys, kind="stable")
 
 

@@ -1,0 +1,203 @@
+"""The plan/compile/execute split: caching, batching, deprecation, schedule.
+
+Pins the DESIGN.md §8 contracts:
+
+- a second ``engine.compile`` of an equal-fingerprint Plan is a cache hit
+  returning the *same* Executable, and re-running it performs **zero
+  retraces** (trace-counter assertion on jit backends; cache-hit counters
+  on all four);
+- ``Executable.batch(B)`` output is bit-identical to a Python loop over B
+  single-query calls on Reference/Local/Pallas/Sharded;
+- the per-engine plan cache is bounded (LRU eviction) and observable via
+  ``engine.cache_info()`` — including ShardedEngine's per-shape shuffle
+  lowerings, previously an unbounded private dict;
+- the legacy ``fn(x, M, engine=...)`` entry points still work but emit
+  DeprecationWarning, and the deprecated host-recursive ``sample_sort``
+  delegates to the engine-native sort plan (duplicate-heavy inputs
+  included, via the capacity-escalation ladder);
+- a plan's declared stage schedule matches the rounds the executed program
+  actually accounts.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (BoundedCache, LocalEngine, MRCost, ReferenceEngine,
+                        ShardedEngine, get_engine, multisearch_plan,
+                        sample_sort, sample_sort_mr, sort_plan)
+
+RNG = np.random.default_rng(42)
+
+
+class TestPlanCache:
+    @pytest.mark.parametrize("make_engine", [
+        ReferenceEngine, LocalEngine, ShardedEngine,
+        lambda: get_engine("pallas")], ids=["ref", "local", "sharded",
+                                            "pallas"])
+    def test_second_compile_is_hit_with_zero_retraces(self, make_engine):
+        eng = make_engine()
+        x = jnp.asarray(RNG.normal(size=96).astype(np.float32))
+        key = jax.random.PRNGKey(0)
+        exe1 = eng.compile(sort_plan(96, 8, align=eng.aligned_nodes))
+        r1 = exe1(x, key=key)
+        traces = exe1.trace_count
+        misses = eng.cache_info().misses
+        # identical static args -> equal fingerprint -> same executable
+        exe2 = eng.compile(sort_plan(96, 8, align=eng.aligned_nodes))
+        assert exe2 is exe1
+        assert eng.cache_info().hits >= 1
+        r2 = exe2(x, key=key)
+        if eng.jittable:
+            # the jitted round program was reused: zero retraces
+            assert exe2.trace_count == traces
+        # no new plan lowerings were built either
+        assert eng.cache_info().misses == misses
+        np.testing.assert_array_equal(np.asarray(r1.values),
+                                      np.asarray(r2.values))
+
+    def test_different_fingerprint_misses(self):
+        eng = LocalEngine()
+        exe1 = eng.compile(sort_plan(64, 8))
+        exe2 = eng.compile(sort_plan(64, 16))      # different M
+        assert exe2 is not exe1
+
+    def test_bounded_cache_lru_eviction_and_counters(self):
+        cache = BoundedCache(maxsize=2)
+        assert cache.lookup("a") is None           # miss
+        cache.store("a", 1)
+        cache.store("b", 2)
+        assert cache.lookup("a") == 1              # hit; 'a' becomes MRU
+        cache.store("c", 3)                        # evicts LRU 'b'
+        assert "b" not in cache and "a" in cache and "c" in cache
+        info = cache.info()
+        assert info.evictions == 1 and info.currsize == 2 and info.maxsize == 2
+        assert info.hits == 1 and info.misses == 1
+
+    def test_sharded_shuffle_cache_is_bounded_and_counted(self):
+        """ShardedEngine's per-shape shuffle lowerings go through the same
+        bounded cache (the fix for the unbounded private _compiled dict)."""
+        eng = ShardedEngine()
+        dests = np.arange(8, dtype=np.int32) % 4
+        payload = np.arange(8, dtype=np.float32)
+        eng.shuffle(dests, payload, 4, 4)
+        info1 = eng.cache_info()
+        assert info1.misses >= 1
+        eng.shuffle(dests, payload, 4, 4)          # same shapes: a hit
+        info2 = eng.cache_info()
+        assert info2.hits > info1.hits
+        assert info2.misses == info1.misses
+
+
+class TestBatch:
+    @pytest.mark.parametrize("make_engine", [
+        ReferenceEngine, LocalEngine, ShardedEngine,
+        lambda: get_engine("pallas")], ids=["ref", "local", "sharded",
+                                            "pallas"])
+    def test_batched_sort_bit_identical_to_loop(self, make_engine):
+        eng = make_engine()
+        B, n = 3, 48
+        exe = eng.compile(sort_plan(n, 8, align=eng.aligned_nodes))
+        xs = jnp.asarray(RNG.normal(size=(B, n)).astype(np.float32))
+        keys = jax.random.split(jax.random.PRNGKey(7), B)
+        batched = exe.batch(B)(xs, keys=keys)
+        singles = [exe(xs[i], key=keys[i]) for i in range(B)]
+        for i in range(B):
+            np.testing.assert_array_equal(np.asarray(batched.values[i]),
+                                          np.asarray(singles[i].values))
+            for name, fa, fb in zip(batched.stats._fields, batched.stats,
+                                    singles[i].stats):
+                assert float(np.asarray(fa)[i]) == float(fb), (eng.name, name)
+
+    def test_batched_multisearch_local(self):
+        eng = LocalEngine()
+        B, n_q, m = 4, 64, 12
+        exe = eng.compile(multisearch_plan(n_q, m, 8))
+        qs = jnp.asarray(RNG.normal(size=(B, n_q)).astype(np.float32))
+        pivs = jnp.sort(jnp.asarray(RNG.normal(size=(B, m))
+                                    .astype(np.float32)), axis=1)
+        keys = jax.random.split(jax.random.PRNGKey(1), B)
+        batched = exe.batch(B)(qs, pivs, keys=keys)
+        for i in range(B):
+            single = exe(qs[i], pivs[i], key=keys[i])
+            np.testing.assert_array_equal(np.asarray(batched.buckets[i]),
+                                          np.asarray(single.buckets))
+            want = np.searchsorted(np.asarray(pivs[i]), np.asarray(qs[i]),
+                                   side="left")
+            np.testing.assert_array_equal(np.asarray(single.buckets), want)
+
+    def test_batch_callable_is_cached_and_bounded(self):
+        eng = LocalEngine()
+        exe = eng.compile(sort_plan(32, 8))
+        assert exe.batch(4) is exe.batch(4)
+        # one lowered program per distinct B, LRU-bounded like the plan cache
+        for b in range(2, 2 + exe.batch_cache_size + 2):
+            exe.batch(b)
+        assert len(exe._batched) <= exe.batch_cache_size
+
+
+class TestInputValidation:
+    def test_wrong_shape_raises(self):
+        exe = LocalEngine().compile(sort_plan(16, 4))
+        with pytest.raises(ValueError, match="expected shape"):
+            exe(jnp.ones(8))
+
+    def test_wrong_dtype_raises(self):
+        exe = LocalEngine().compile(sort_plan(4, 4))   # default float32
+        with pytest.raises(ValueError, match="expected dtype"):
+            exe(jnp.arange(4, dtype=jnp.int32))
+
+    def test_bsp_zero_supersteps(self):
+        from repro.core import BSPProgram, bsp_plan, compile_plan
+        state = jnp.arange(4.0)
+        prog = BSPProgram(lambda t, ids, s, inbox, v: (s, inbox, inbox))
+        res = compile_plan(bsp_plan(prog, 0, 2, 4, jnp.float32(0)))(state)
+        np.testing.assert_array_equal(np.asarray(res.proc_state),
+                                      np.asarray(state))
+        assert res.dropped_per_step.shape == (0,)
+
+
+class TestDeprecatedWrappers:
+    def test_sample_sort_mr_warns_and_matches(self):
+        x = jnp.asarray(RNG.normal(size=120).astype(np.float32))
+        with pytest.warns(DeprecationWarning, match="sort_plan"):
+            res = sample_sort_mr(x, 16, engine=LocalEngine())
+        np.testing.assert_array_equal(np.asarray(res.values),
+                                      np.sort(np.asarray(x)))
+
+    def test_host_recursive_sample_sort_delegates(self):
+        """Satellite: the numpy sample_sort now runs the engine-native plan
+        (same values), warning on the way."""
+        x = jnp.asarray(RNG.normal(size=200).astype(np.float32))
+        c = MRCost()
+        with pytest.warns(DeprecationWarning, match="sample_sort"):
+            got = sample_sort(x, 16, key=jax.random.PRNGKey(2), cost=c)
+        np.testing.assert_array_equal(np.asarray(got), np.sort(np.asarray(x)))
+        assert c.rounds > 0
+
+    def test_host_recursive_sample_sort_duplicate_heavy(self):
+        """All-duplicates input overflows any proportional bucket capacity;
+        the escalation ladder must still return the exact sort."""
+        x = jnp.asarray(RNG.integers(0, 3, 257).astype(np.int32)
+                        ).astype(jnp.float32)
+        with pytest.warns(DeprecationWarning):
+            got = sample_sort(x, 16, key=jax.random.PRNGKey(3))
+        np.testing.assert_array_equal(np.asarray(got), np.sort(np.asarray(x)))
+
+
+class TestSchedule:
+    def test_declared_schedule_matches_measured_rounds(self):
+        plan = sort_plan(256, 16)
+        res = LocalEngine().compile(plan)(
+            jnp.asarray(RNG.normal(size=256).astype(np.float32)))
+        assert int(res.stats.rounds) == plan.total_rounds
+        assert plan.total_rounds <= plan.round_bound
+        names = [name for name, _, _ in plan.schedule()]
+        assert names[0] == "pivot-sort" and names[1] == "entry"
+        assert "local-sort" in names
+
+    def test_describe_mentions_every_stage(self):
+        plan = multisearch_plan(100, 10, 8)
+        text = plan.describe()
+        for name, _, _ in plan.schedule():
+            assert name in text

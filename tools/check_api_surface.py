@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""API-surface guard: ``repro.core.__all__`` must match the pinned list.
+
+The plan/compile/execute split made ``repro.core`` the public query surface
+(DESIGN.md §8), so accidental drift — a re-export dropped in a refactor, a
+private helper leaking into ``__all__`` — is an API break.  This tool pins
+the exact surface: it fails when ``repro.core.__all__`` gains or loses
+names relative to EXPECTED below, and when any advertised name does not
+actually resolve.  Deliberate changes update EXPECTED in the same commit
+(the diff then documents the API change).  CI runs this in the docs job.
+"""
+import sys
+
+EXPECTED = frozenset([
+    # cost model
+    "MRCost", "CostAccum", "RoundStats", "HardwareModel",
+    "log_M", "tree_height",
+    # mailbox model
+    "Mailbox", "ShuffleStats", "make_mailbox", "shuffle",
+    "run_round", "run_rounds",
+    # engines
+    "MREngine", "RoundProgram", "ReferenceEngine", "LocalEngine",
+    "ShardedEngine", "get_engine", "default_engine",
+    # plan/compile/execute split
+    "Plan", "PlanStage", "PlanState", "execute_plan",
+    "account_stage", "compute_stage", "custom_stage",
+    "entry_stage", "round_stage",
+    "BoundedCache", "CacheInfo", "Executable", "compile_plan",
+    "sort_plan", "multisearch_plan", "prefix_plan", "PrefixResult",
+    "funnel_write_plan", "bsp_plan", "BSPResult",
+    "hull2d_plan", "hull3d_plan", "lp_plan",
+    # prefix sums / random indexing
+    "tree_prefix_sum", "prefix_sum_opt", "random_indexing",
+    "prefix_cost_bound", "max_leaf_occupancy",
+    # funnels / CRCW simulation
+    "funnel_write", "funnel_read", "funnel_read_accum",
+    "scatter_combine_opt", "FunnelResult",
+    "PRAMProgram", "simulate_crcw",
+    # multisearch
+    "multisearch", "multisearch_mr", "multisearch_opt",
+    "brute_force_multisearch", "MultisearchResult", "EngineSearchResult",
+    # sorting
+    "brute_force_sort", "sample_sort", "sample_sort_mr", "sort_opt",
+    "quantile_splitters", "EngineSortResult",
+    # BSP / queues
+    "BSPProgram", "run_bsp",
+    "QueueState", "make_queues", "enqueue", "dequeue", "run_queued",
+    # geometry
+    "EngineHullResult", "Hull3DResult", "LPResult",
+    "convex_hull_2d", "convex_hull_2d_mr", "convex_hull_3d",
+    "convex_hull_3d_mr", "convex_hull_3d_oracle",
+    "hull_round_bound", "hull3d_round_bound",
+    "linear_program_mr", "linear_program_nd", "linear_program_oracle",
+    "lp_round_bound",
+    "convex_hull_oracle",
+])
+
+
+def main() -> int:
+    import repro.core
+
+    actual = set(repro.core.__all__)
+    missing = sorted(EXPECTED - actual)
+    unexpected = sorted(actual - EXPECTED)
+    broken = sorted(n for n in actual if not hasattr(repro.core, n))
+    for name in missing:
+        print(f"repro.core.__all__ lost: {name}", file=sys.stderr)
+    for name in unexpected:
+        print(f"repro.core.__all__ gained (update tools/check_api_surface.py "
+              f"if deliberate): {name}", file=sys.stderr)
+    for name in broken:
+        print(f"repro.core.__all__ advertises unresolvable name: {name}",
+              file=sys.stderr)
+    ok = not (missing or unexpected or broken)
+    print(f"check_api_surface: {len(actual)} names, "
+          f"{'OK' if ok else 'DRIFT DETECTED'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
