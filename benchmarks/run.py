@@ -347,10 +347,120 @@ def bench_plan(quick):
     print(f"plan_bench_json,0,wrote BENCH_plan.json ({len(rows)} rows)")
 
 
+def bench_shape(quick):
+    """Dense (frozen-shape) vs shape-scheduled execution (DESIGN.md §9).
+
+    For each (N, M) grid point the same plan is built twice — ``shape=False``
+    freezes the entry mailbox footprint for the whole program, ``shape=True``
+    gives every stage its live (V_r, M_r) — and both are compiled on
+    LocalEngine and timed.  Each cell carries an **in-bench parity assert**
+    (bit-identical outputs and CostAccum — the shape schedule is a physical
+    optimization, never a semantic one) and reports peak/total declared
+    mailbox bytes.  The grid is fixed (no --quick variation) so the series
+    in BENCH_shape.json are comparable across runs: ``tools/bench_compare.py``
+    gates regressions against the committed baseline in CI.
+    """
+    import json
+    from repro.core import LocalEngine, hull2d_plan, prefix_plan
+    from repro.core.funnel import funnel_write_plan
+    from repro.core.plan import execute_plan
+
+    engine = LocalEngine()
+    rng = np.random.default_rng(0)
+    rows = []
+
+    def run_pair(family, label, make_plan_call, out_leaf, n_calls):
+        """Measure one grid point: ``make_plan_call(shape) -> (plan, call)``
+        where ``call()`` runs the program and returns its result."""
+        t, peak, total, res = {}, {}, {}, {}
+        for s in (False, True):
+            plan, call = make_plan_call(s)
+            res[s] = jax.block_until_ready(call())
+            t[s] = _timeit(lambda: jax.block_until_ready(out_leaf(call())),
+                           n=n_calls)
+            peak[s] = plan.peak_mailbox_slots() * 4        # float32/int32
+            total[s] = plan.total_mailbox_slots() * 4
+        # Parity assert: frozen and shaped must agree bit-for-bit, outputs
+        # and accounting alike.
+        for la, lb in zip(jax.tree_util.tree_leaves(res[False]),
+                          jax.tree_util.tree_leaves(res[True])):
+            assert np.array_equal(np.asarray(la), np.asarray(lb)), \
+                f"bench_shape: {label} diverged between frozen and shaped"
+        speedup = t[False] / t[True]
+        rows.append({"family": family, "label": label,
+                     "us_frozen": t[False], "us_shaped": t[True],
+                     "speedup": speedup,
+                     "peak_bytes_frozen": peak[False],
+                     "peak_bytes_shaped": peak[True],
+                     "total_bytes_frozen": total[False],
+                     "total_bytes_shaped": total[True],
+                     "parity": True})
+        print(f"shape_{family}_{label},{t[True]:.0f},"
+              f"frozen={t[False]:.0f}us|speedup={speedup:.2f}x"
+              f"|peak_bytes={peak[False]}->{peak[True]}|parity=True")
+
+    key = jax.random.PRNGKey(0)
+    for n, M in ((500, 32), (1000, 32), (2000, 64)):
+        pts = jnp.asarray(rng.normal(size=(n, 2)).astype(np.float32))
+
+        def hull_pc(s, n=n, M=M, pts=pts):
+            exe = engine.compile(hull2d_plan(n, M, shape=s))
+            return exe.plan, lambda: exe(pts, key=key)
+        run_pair("hull2d", f"n{n}_M{M}", hull_pc, lambda r: r.points, 2)
+    for n, M in ((10000, 64), (30000, 64), (60000, 64)):
+        x = jnp.asarray(rng.integers(0, 9, n).astype(np.int32))
+
+        def prefix_pc(s, n=n, M=M, x=x):
+            exe = engine.compile(prefix_plan(n, M, physical=True, shape=s))
+            return exe.plan, lambda: exe(x)
+        run_pair("prefix", f"n{n}_M{M}", prefix_pc, lambda r: r.values, 3)
+    for P, N, M in ((2048, 128, 32), (8192, 256, 32)):
+        addrs = jnp.asarray(rng.integers(0, N, P).astype(np.int32))
+        vals = jnp.asarray(rng.normal(size=P).astype(np.float32))
+        mem = jnp.zeros(N, jnp.float32)
+
+        def funnel_pc(s, P=P, N=N, M=M, addrs=addrs, vals=vals, mem=mem):
+            # identity must stay static for compile(); jit execute_plan
+            # directly instead.
+            plan = funnel_write_plan(P, N, M, jnp.add, identity=0.0,
+                                     shape=s)
+            fn = jax.jit(lambda a, v, m: execute_plan(plan, engine,
+                                                      (a, v, m)))
+            return plan, lambda: fn(addrs, vals, mem)
+        run_pair("funnel", f"P{P}_N{N}_M{M}", funnel_pc,
+                 lambda r: r.memory, 2)
+
+    # The acceptance claim is absolute and machine-local: the shaped path
+    # must beat the frozen path >= 2x at the largest hull2d/prefix point.
+    largest = {fam: [r for r in rows if r["family"] == fam][-1]
+               for fam in ("hull2d", "prefix", "funnel")}
+    assert largest["hull2d"]["speedup"] >= 2.0 or \
+        largest["prefix"]["speedup"] >= 2.0, \
+        "shape schedule must be >= 2x at the largest hull2d/prefix point"
+    # Gated series must be deterministic across machines, so only the
+    # declared-byte ratios go under "series" (tools/bench_compare.py fails
+    # CI on >1.3x regression *relative to the committed baseline*);
+    # wall-clock speedups are reported per row and under "info".
+    series = {f"{fam}_total_bytes_ratio":
+              r["total_bytes_frozen"] / r["total_bytes_shaped"]
+              for fam, r in largest.items()}
+    series["hull2d_peak_bytes_ratio"] = (
+        largest["hull2d"]["peak_bytes_frozen"]
+        / largest["hull2d"]["peak_bytes_shaped"])
+    info = {f"{fam}_speedup_largest": r["speedup"]
+            for fam, r in largest.items()}
+    payload = {"bench": "shape_schedule",
+               "backend": jax.default_backend(), "rows": rows,
+               "series": series, "info": info}
+    with open("BENCH_shape.json", "w", encoding="utf-8") as f:
+        json.dump(payload, f, indent=2)
+    print(f"shape_bench_json,0,wrote BENCH_shape.json ({len(rows)} rows)")
+
+
 BENCHES = [bench_prefix_sums, bench_random_indexing, bench_multisearch,
            bench_sorting, bench_funnel, bench_queues, bench_shuffle,
            bench_kernels, bench_moe_dispatch, bench_geometry,
-           bench_cost_model, bench_plan]
+           bench_cost_model, bench_plan, bench_shape]
 
 
 def main() -> None:

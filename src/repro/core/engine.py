@@ -92,6 +92,9 @@ class RoundProgram(NamedTuple):
     fn: RoundFn
     n_rounds: int
     capacity: Optional[int] = None
+    #: target mailbox node count per round (None = inherit the entry shape);
+    #: with ``capacity`` this is the program's physical footprint (V_r, M_r)
+    n_nodes: Optional[int] = None
 
 
 class MREngine:
@@ -134,7 +137,10 @@ class MREngine:
         """
         from .api import Executable
         cache = self._ensure_cache()
-        key = ("plan", plan.fingerprint)
+        # The declared shape schedule is part of the identity: two plans
+        # that differ only in per-stage (V_r, M_r) footprints must not
+        # share a compiled executable (DESIGN.md §9).
+        key = ("plan", plan.fingerprint, plan.shape_fingerprint)
         exe = cache.lookup(key)
         if exe is None:
             exe = cache.store(key, Executable(plan, self))
@@ -165,21 +171,30 @@ class MREngine:
 
     # -- round drivers -------------------------------------------------------
     def run_round(self, f: RoundFn, box: Mailbox, round_idx,
-                  capacity: Optional[int] = None
+                  capacity: Optional[int] = None,
+                  n_nodes: Optional[int] = None
                   ) -> Tuple[Mailbox, RoundStats]:
-        """One round: apply f at every node, then shuffle."""
+        """One round: apply f at every node, then shuffle.
+
+        ``n_nodes`` sets the target mailbox node count — a *shape-change
+        round* when it differs from ``box.n_nodes`` (the paper's tree
+        algorithms shrink their live node set geometrically per level;
+        DESIGN.md §9).  ``f`` must then emit destinations in the target's
+        compact numbering [0, n_nodes).  None keeps the current shape."""
         cap = capacity if capacity is not None else box.capacity
+        V = n_nodes if n_nodes is not None else box.n_nodes
         dests, payload = f(round_idx, self.node_ids(box.n_nodes), box)
-        return self.shuffle(dests, payload, box.n_nodes, cap)
+        return self.shuffle(dests, payload, V, cap)
 
     def run_rounds(self, f: RoundFn, box: Mailbox, n_rounds: int,
                    capacity: Optional[int] = None,
-                   accum: Optional[CostAccum] = None
+                   accum: Optional[CostAccum] = None,
+                   n_nodes: Optional[int] = None
                    ) -> Tuple[Mailbox, CostAccum]:
         """Drive R rounds, returning the final mailbox and accumulated cost."""
         acc = accum if accum is not None else CostAccum.zero()
         for r in range(n_rounds):
-            box, stats = self.run_round(f, box, r, capacity)
+            box, stats = self.run_round(f, box, r, capacity, n_nodes=n_nodes)
             acc = acc.add_round_stats(stats)
         return box, acc
 
@@ -187,23 +202,28 @@ class MREngine:
                     accum: Optional[CostAccum] = None
                     ) -> Tuple[Mailbox, CostAccum]:
         return self.run_rounds(prog.fn, box, prog.n_rounds,
-                               capacity=prog.capacity, accum=accum)
+                               capacity=prog.capacity, accum=accum,
+                               n_nodes=prog.n_nodes)
 
     def run_stages(self, stages, box: Mailbox,
                    accum: Optional[CostAccum] = None
                    ) -> Tuple[Mailbox, CostAccum]:
         """Drive a heterogeneous round schedule: ``stages`` is a sequence of
-        ``(round_fn, capacity)`` pairs, each executed as one round.
+        ``(round_fn, capacity)`` pairs or ``(round_fn, capacity, n_nodes)``
+        triples, each executed as one round.
 
         This is the staged counterpart of :meth:`run_program` for
-        computations whose mailbox capacity changes per round (e.g. the
+        computations whose mailbox footprint changes per round (e.g. the
         d-ary hull merge tree, where each level concentrates up to ``a``
-        partial results at one node).  Capacities are Python ints, so the
-        schedule is static and the whole driver stays jit-compatible on
-        array backends."""
+        partial results at one node — and the live node count shrinks by
+        ``a`` per level).  Capacities and node counts are Python ints, so
+        the schedule is static and the whole driver stays jit-compatible
+        on array backends."""
         acc = accum if accum is not None else CostAccum.zero()
-        for r, (fn, cap) in enumerate(stages):
-            box, stats = self.run_round(fn, box, r, capacity=cap)
+        for r, stage in enumerate(stages):
+            fn, cap = stage[0], stage[1]
+            V = stage[2] if len(stage) > 2 else None
+            box, stats = self.run_round(fn, box, r, capacity=cap, n_nodes=V)
             acc = acc.add_round_stats(stats)
         return box, acc
 
@@ -257,12 +277,13 @@ class ReferenceEngine(MREngine):
             for fl, ol in zip(flat_leaves, out_leaves):
                 ol[d, r] = fl[j]
             valid[d, r] = True
-        if dests.ndim >= 2:
+        if dests.ndim >= 2 and n:
             sent_per_node = np.sum(flat_dest.reshape(dests.shape[0], -1) >= 0,
                                    axis=1)
             max_sent = np.int32(sent_per_node.max(initial=0))
         else:
-            max_sent = np.int32(1)
+            # n == 0 with a (V, M) send shape: no source node sent anything.
+            max_sent = np.int32(0 if dests.ndim >= 2 else 1)
         stats = RoundStats(
             items_sent=np.int32(np.sum(flat_dest >= 0)),
             max_sent=max_sent,
@@ -292,6 +313,13 @@ class LocalEngine(MREngine):
     - ``"kernel"``: :func:`repro.core.kshuffle.kernel_shuffle` — the Pallas
       composition bincount → prefix_scan → bitonic_sort (``interpret=True``
       off TPU).  ``get_engine("pallas")`` constructs this variant.
+
+    The kernel path's int32-keyspace and single-VMEM-tile guards are
+    re-derived per shuffle call from that call's (n, V) shape
+    (:func:`repro.core.kshuffle.kernel_fits`): a call whose shape exceeds
+    them falls back to the bit-identical dense shuffle, so in a
+    shape-scheduled program (DESIGN.md §9) late levels that fit a single
+    VMEM tile take the kernel path even when the entry level cannot.
     """
 
     name = "local"
@@ -305,7 +333,8 @@ class LocalEngine(MREngine):
         self.use_scan = use_scan
         self.shuffle_impl = shuffle_impl
         if shuffle_impl == "kernel":
-            from .kshuffle import kernel_shuffle
+            from .kshuffle import kernel_fits, kernel_shuffle
+            self._kernel_fits = kernel_fits
             self._shuffle_fn = kernel_shuffle
             self.name = "pallas"
         else:
@@ -313,27 +342,37 @@ class LocalEngine(MREngine):
 
     def shuffle(self, dests, payload: Payload, n_nodes: int,
                 capacity: int) -> Tuple[Mailbox, RoundStats]:
-        return self._shuffle_fn(jnp.asarray(dests), payload, n_nodes,
-                                capacity)
+        dests = jnp.asarray(dests)
+        fn = self._shuffle_fn
+        if self.shuffle_impl == "kernel" and not self._kernel_fits(
+                int(np.prod(dests.shape)), n_nodes):
+            fn = _dense_shuffle          # per-stage guard: oversize -> dense
+        return fn(dests, payload, n_nodes, capacity)
 
     def run_rounds(self, f: RoundFn, box: Mailbox, n_rounds: int,
                    capacity: Optional[int] = None,
-                   accum: Optional[CostAccum] = None
+                   accum: Optional[CostAccum] = None,
+                   n_nodes: Optional[int] = None
                    ) -> Tuple[Mailbox, CostAccum]:
         acc = accum if accum is not None else CostAccum.zero()
         if not self.use_scan or n_rounds <= 1:
-            return super().run_rounds(f, box, n_rounds, capacity, acc)
+            return super().run_rounds(f, box, n_rounds, capacity, acc,
+                                      n_nodes=n_nodes)
         cap = capacity if capacity is not None else box.capacity
+        V = n_nodes if n_nodes is not None else box.n_nodes
         start = 0
-        if cap != box.capacity:
-            # first round reshapes the mailbox to (V, cap); scan the rest
-            box, stats = self.run_round(f, box, 0, cap)
+        if cap != box.capacity or V != box.n_nodes:
+            # Shape-uniform segmentation: the first round is a shape-change
+            # round (it reshapes the mailbox to (V, cap)) and runs eagerly
+            # traced; the remaining rounds are shape-uniform and roll into
+            # one lax.scan — shrinking programs stay fully jitted.
+            box, stats = self.run_round(f, box, 0, cap, n_nodes=V)
             acc = acc.add_round_stats(stats)
             start = 1
 
         def step(carry, r):
             b, a = carry
-            b2, stats = self.run_round(f, b, r, cap)
+            b2, stats = self.run_round(f, b, r, cap, n_nodes=V)
             return (b2, a.add_round_stats(stats)), None
 
         if n_rounds - start > 0:
@@ -398,12 +437,22 @@ class ShardedEngine(MREngine):
         return -(-max(1, int(n_nodes)) // self.n_shards) * self.n_shards
 
     def _build(self, n_nodes: int, capacity: int, lead: int, treedef,
-               shapes_dtypes):
+               shapes_dtypes, n_flat: int):
         from .distributed import shard_map, shuffle_alltoall
 
         axis = self.axis_name
         n_shards = self.n_shards
         local_v = n_nodes // n_shards
+
+        local_shuffle = self._local_shuffle
+        if self.shuffle_impl == "kernel":
+            # Per-shape kernel guard (DESIGN.md §9): the phase-2 scatter
+            # sees n_shards * n_local = n_flat arrivals per shard buffer —
+            # lowerings whose shape exceeds the kernel's int32-keyspace /
+            # VMEM-tile budget take the bit-identical dense scatter instead.
+            from .kshuffle import kernel_fits
+            if not kernel_fits(n_flat, n_nodes // n_shards):
+                local_shuffle = _dense_shuffle
 
         def body(dests, *leaves):
             flat_dest = dests.reshape(-1).astype(jnp.int32)
@@ -425,16 +474,18 @@ class ShardedEngine(MREngine):
                                    recv_dest.reshape(-1) - shard * local_v,
                                    -1)
             recv_flat = [rl.reshape((-1,) + rl.shape[2:]) for rl in recv_leaves]
-            box, st = self._local_shuffle(local_dest, recv_flat, local_v,
-                                          capacity)
+            box, st = local_shuffle(local_dest, recv_flat, local_v,
+                                    capacity)
             # Global stats: identical on every shard after the collectives.
             items_sent = lax.psum(jnp.sum(flat_dest >= 0), axis)
-            if lead > 1:
+            if lead > 1 and n_local > 0:
                 sent_per_node = jnp.sum(
                     (flat_dest >= 0).reshape(dests.shape[0], -1), axis=1)
                 max_sent = lax.pmax(jnp.max(sent_per_node), axis)
             else:
-                max_sent = jnp.array(1, jnp.int32)
+                # Empty (V, M) sends have no source nodes: max_sent = 0,
+                # matching the dense and reference backends.
+                max_sent = jnp.array(0 if lead > 1 else 1, jnp.int32)
             stats = RoundStats(
                 items_sent=items_sent.astype(jnp.int32),
                 max_sent=jnp.asarray(max_sent, jnp.int32),
@@ -485,7 +536,8 @@ class ShardedEngine(MREngine):
         if fn is None:
             fn = cache.store(key, self._build(
                 n_nodes, capacity, dests.ndim, treedef,
-                [(l.shape, l.dtype) for l in leaves]))
+                [(l.shape, l.dtype) for l in leaves],
+                int(np.prod(dests.shape))))
         out_leaves, valid, stats = fn(dests, *leaves)
         box = Mailbox(payload=jax.tree_util.tree_unflatten(treedef, out_leaves),
                       valid=valid)

@@ -86,7 +86,8 @@ def _combine_mailbox_slots(payload: jnp.ndarray, valid: jnp.ndarray,
 
 
 def funnel_write_plan(n_procs: int, n_cells: int, M: int, op: Semigroup, *,
-                      identity=None, dtype=jnp.float32) -> Plan:
+                      identity=None, dtype=jnp.float32,
+                      shape: bool = True) -> Plan:
     """Theorem 3.2 write funnel as a plan builder: every tree level is one
     named engine round.
 
@@ -99,12 +100,19 @@ def funnel_write_plan(n_procs: int, n_cells: int, M: int, op: Semigroup, *,
     identically (bit-for-bit mailboxes and stats) on Reference/Local/Sharded
     backends.  ``identity`` must be static (None or a concrete scalar) for
     the plan to be cacheable via ``engine.compile``.
+
+    ``shape=True`` (default) is the shape-scheduled funnel (DESIGN.md §9):
+    level l's mailbox holds its live ceil(P/d^(l+1)) * N tree nodes, so
+    the physical footprint shrinks by d per level exactly as the invisible
+    funnel's live node set does.  ``shape=False`` freezes every level at
+    the level-0 footprint — same dests, same capacities, bit-identical
+    outputs and stats; only the padding differs.
     """
     P, N, M = int(n_procs), int(n_cells), int(M)
     d = max(2, M // 2)
     L = tree_height(max(P, 2), d)
     fingerprint = ("funnel-write", P, N, M, op, _static_scalar(identity),
-                   str(jnp.dtype(dtype)))
+                   str(jnp.dtype(dtype)), bool(shape))
     n_groups_seq = []                    # groups alive after each level
     g = P
     for _ in range(L):
@@ -120,7 +128,11 @@ def funnel_write_plan(n_procs: int, n_cells: int, M: int, op: Semigroup, *,
 
     stages = []
     for level, n_groups in enumerate(n_groups_seq):
-        def make_apply(level=level, n_groups=n_groups):
+        # The level's physical footprint: its live n_groups * N tree nodes
+        # (shape-scheduled), or the frozen level-0 footprint.
+        v_level = (n_groups if shape else n_groups_seq[0]) * N
+
+        def make_apply(level=level, n_groups=n_groups, v_level=v_level):
             def apply(engine, state: PlanState) -> PlanState:
                 c = state.carry
                 idx = jnp.arange(c["vals"].shape[0], dtype=jnp.int32)
@@ -130,7 +142,7 @@ def funnel_write_plan(n_procs: int, n_cells: int, M: int, op: Semigroup, *,
                 group = idx if level == 0 else idx // N
                 parent = group // d
                 dests = jnp.where(c["live"], parent * N + c["cells"], -1)
-                V = engine.aligned_nodes(n_groups * N)
+                V = engine.aligned_nodes(v_level)
                 box, st = engine.shuffle(dests, c["vals"], V, d)
                 accum = state.accum.add_round_stats(st)
                 comb, has = _combine_mailbox_slots(box.payload, box.valid, op)
@@ -146,7 +158,7 @@ def funnel_write_plan(n_procs: int, n_cells: int, M: int, op: Semigroup, *,
                 return PlanState(state.box, carry, accum)
             return apply
         stages.append(custom_stage(f"funnel-level-{level}", 1, d,
-                                   make_apply()))
+                                   make_apply(), v_level))
 
     def root_apply(engine, state: PlanState) -> PlanState:
         # One item per cell remains, at position cell (n_groups == 1).
@@ -173,12 +185,14 @@ def funnel_write_plan(n_procs: int, n_cells: int, M: int, op: Semigroup, *,
                 input_spec=(((P,), None), ((P,), None), ((N,), None)))
 
 
-def _funnel_write_engine(addrs, values, memory, op, M, engine, identity):
+def _funnel_write_engine(addrs, values, memory, op, M, engine, identity,
+                         shape: bool = True):
     """Engine-path funnel write: build the plan and interpret it directly
     (no compile cache — ``identity`` may be a traced value here)."""
     plan = funnel_write_plan(addrs.shape[0], memory.shape[0], M, op,
                              identity=identity,
-                             dtype=getattr(values, "dtype", jnp.float32))
+                             dtype=getattr(values, "dtype", jnp.float32),
+                             shape=shape)
     return execute_plan(plan, engine, (addrs, values, memory))
 
 
@@ -340,10 +354,12 @@ def scatter_combine_opt(addrs: jnp.ndarray, values: jnp.ndarray,
 
 
 def _crcw_step(prog, proc_state, memory, t, M, op, identity, engine,
-               need_accum, accum):
+               need_accum, accum, shape: bool = True):
     """One PRAM step of the Theorem 3.2 simulation: funnel read, compute,
     funnel write.  Shared by :func:`simulate_crcw` and the geometry plans
-    (hull3d builds one plan stage per step from this)."""
+    (hull3d builds one plan stage per step from this).  ``shape`` selects
+    the engine write funnel's shape-scheduled vs frozen footprint
+    (DESIGN.md §9; results and stats are bit-identical)."""
     addrs = prog.read_addr(proc_state, t)
     if need_accum:
         vals, racc = funnel_read_accum(addrs, memory, M)
@@ -353,7 +369,7 @@ def _crcw_step(prog, proc_state, memory, t, M, op, identity, engine,
     proc_state, w_addr, w_val = prog.compute(proc_state, vals, t)
     if engine is not None:
         res = _funnel_write_engine(w_addr, w_val, memory, op, M, engine,
-                                   identity)
+                                   identity, shape=shape)
     else:
         res = _funnel_write_dense(w_addr, w_val, memory, op, M, identity)
     return proc_state, res.memory, accum.merge_sequential(res.stats)

@@ -46,7 +46,8 @@ class EngineHullResult(NamedTuple):
 
 
 def hull2d_plan(n: int, M: int, *, oversample: int = 8, slack: float = 3.0,
-                n_nodes: Optional[int] = None, align=None) -> Plan:
+                n_nodes: Optional[int] = None, align=None,
+                shape: bool = True) -> Plan:
     """2-D convex hull (CCW from the lexicographic minimum) as a plan
     builder — the module-docstring round structure as a static stage table:
     pivot-sort accounting, the x-bucket entry shuffle, one named stage per
@@ -54,6 +55,15 @@ def hull2d_plan(n: int, M: int, *, oversample: int = 8, slack: float = 3.0,
     all-points-extreme worst case, so the tree itself can never drop), and
     the finalize round.  Input at execute time: ``(points,)`` of shape
     (n, 2); PRNG slot ``"splitters"`` drives the §4.3 pivot sample.
+
+    ``shape=True`` (default) emits the *shape-scheduled* merge tree
+    (DESIGN.md §9): level k runs in its own physical mailbox of
+    V_k = ceil(V / a^k) compactly-numbered nodes, so the footprint shrinks
+    geometrically with the live node set and the peak physical mailbox
+    stays O(a * slack * n) slots instead of V * n.  ``shape=False`` keeps
+    the frozen entry shape (V, cap_k) at every level.  The two variants
+    are bit-identical — same outputs, same per-round RoundStats/CostAccum
+    (only physical padding differs) — on every backend.
 
     ``n_nodes`` overrides the reducer count — pass it when comparing
     backends whose ``aligned_nodes`` granularities differ, so both run the
@@ -82,7 +92,7 @@ def hull2d_plan(n: int, M: int, *, oversample: int = 8, slack: float = 3.0,
     s = pivot_sample_size(n, V, oversample)      # static, = runtime sample
     piv_rounds = max(1, log_M(max(s, 2), M_eff))
     cap0 = min(n, max(1, int(math.ceil(slack * n / V))))
-    fingerprint = ("hull2d", n, M, V, oversample, float(slack))
+    fingerprint = ("hull2d", n, M, V, oversample, float(slack), bool(shape))
 
     def prologue(inputs, keys):
         pts = jnp.asarray(inputs[0], jnp.float32)
@@ -97,11 +107,17 @@ def hull2d_plan(n: int, M: int, *, oversample: int = 8, slack: float = 3.0,
             0, V - 1).astype(jnp.int32)
         return bucket, pts
 
-    def make_chain_and_send(block: int):
+    def make_chain_and_send(block: int, compact: bool):
+        # Every active node reduces its run with the monotone chain and
+        # sends its partial hull to its a-block's leader.  Frozen numbering:
+        # the leader keeps its original id (ids // block) * block; compact
+        # (shape-scheduled) numbering: level k+1's node j' receives from
+        # level k's nodes [j'*a, (j'+1)*a) — same groups, same stats, the
+        # mailbox just has no dead rows.
         def make_fn(carry):
             def fn(r, ids, b):
                 hulls, h = hull_of_runs(b.payload, b.valid)
-                leader = (ids // block) * block
+                leader = ids // a if compact else (ids // block) * block
                 slot = jnp.arange(hulls.shape[1], dtype=jnp.int32)
                 dests = jnp.where(slot[None, :] < h[:, None],
                                   leader[:, None], -1)
@@ -121,12 +137,16 @@ def hull2d_plan(n: int, M: int, *, oversample: int = 8, slack: float = 3.0,
                             ((s, min(s, M_eff)),) * piv_rounds),
               entry_stage("entry", V, cap0, emit_entry)]
     cap = cap0
+    v_level = V                                  # live nodes entering level k
     for k in range(n_levels):
         cap = min(n, a * cap)
+        v_level = -(-v_level // a)               # live nodes after the merge
         stages.append(round_stage(f"merge-{k}",
-                                  make_chain_and_send(a ** (k + 1)), 1,
-                                  capacity=cap))
-    stages.append(round_stage("finalize", make_finalize, 1, capacity=cap))
+                                  make_chain_and_send(a ** (k + 1), shape), 1,
+                                  capacity=cap,
+                                  n_nodes=v_level if shape else None))
+    stages.append(round_stage("finalize", make_finalize, 1, capacity=cap,
+                              n_nodes=v_level if shape else None))
 
     def epilogue(state):
         box = state.box

@@ -66,14 +66,19 @@ _HULL3D_PROG = PRAMProgram(
 )
 
 
-def hull3d_plan(n: int, M: int, *, eps: float = 1e-4) -> Plan:
+def hull3d_plan(n: int, M: int, *, eps: float = 1e-4,
+                shape: bool = True) -> Plan:
     """3-D convex hull as a plan builder: the Theorem 3.2 CRCW simulation
     with one named stage per PRAM step (three Max-CRCW steps, one per
     triple vertex), each running its invisible funnels as engine rounds.
     Input at execute time: ``(points,)`` of shape (n, 3).
+
+    ``shape`` selects the write funnels' shape-scheduled (default) vs
+    frozen per-level footprint (DESIGN.md §9) — bit-identical results and
+    stats either way.
     """
     n, M = int(n), int(M)
-    fingerprint = ("hull3d", n, M, float(eps))
+    fingerprint = ("hull3d", n, M, float(eps), bool(shape))
     if n < 4:                      # degenerate: every point is extreme
         return Plan(
             name="hull3d", fingerprint=fingerprint, n_nodes=1, stages=(),
@@ -98,14 +103,17 @@ def hull3d_plan(n: int, M: int, *, eps: float = 1e-4) -> Plan:
                 c = state.carry
                 proc_state, memory, accum = _crcw_step(
                     _HULL3D_PROG, c["state"], c["memory"], t, M,
-                    jnp.maximum, jnp.float32(0), engine, True, state.accum)
+                    jnp.maximum, jnp.float32(0), engine, True, state.accum,
+                    shape=shape)
                 return PlanState(state.box,
                                  {"state": proc_state, "memory": memory},
                                  accum)
             return apply
-        # per step: 2L+1 funnel-read rounds + L+1 engine write-funnel rounds
+        # per step: 2L+1 funnel-read rounds + L+1 engine write-funnel
+        # rounds; the declared footprint is the write funnel's level-0
+        # (peak) shape: ceil(P/d) groups x n cells.
         stages.append(custom_stage(f"pram-step-{t}", 3 * L + 2, d,
-                                   make_apply()))
+                                   make_apply(), -(-P // d) * n))
 
     def epilogue(state):
         return Hull3DResult(mask=state.carry["memory"] > 0.5,

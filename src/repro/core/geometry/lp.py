@@ -52,18 +52,21 @@ def _solve_bases(c, A, bv, bases, feas_eps):
     return xs, feas, obj
 
 
-def lp_plan(n: int, d: int, M: int = 64, *, feas_eps: float = 1e-5) -> Plan:
+def lp_plan(n: int, d: int, M: int = 64, *, feas_eps: float = 1e-5,
+            shape: bool = True) -> Plan:
     """Fixed-dimensional LP as a plan builder: the C(n, d) candidate bases
     solve and feasibility-test in the prologue (per-processor work), then
     one named Min-CRCW funnel stage combines the best feasible objective
     into a single cell as engine rounds (O(log_M C(n, d)) of them).  Inputs
-    at execute time: ``(c, A, b)``.
+    at execute time: ``(c, A, b)``.  ``shape`` selects the funnel's
+    shape-scheduled (default) vs frozen footprint (DESIGN.md §9) —
+    bit-identical optimum and stats either way.
     """
     n, d = int(n), int(d)
     bases = combinations_array(n, d)                    # (Q, d) static
     Q = int(bases.shape[0])
     L = tree_height(max(Q, 2), max(2, M // 2))
-    fingerprint = ("lp", n, d, int(M), float(feas_eps))
+    fingerprint = ("lp", n, d, int(M), float(feas_eps), bool(shape))
 
     def prologue(inputs, keys):
         c = jnp.asarray(inputs[0], jnp.float32)
@@ -79,11 +82,14 @@ def lp_plan(n: int, d: int, M: int = 64, *, feas_eps: float = 1e-5) -> Plan:
         addrs = jnp.where(carry["feas"], 0, -1).astype(jnp.int32)
         res = _funnel_write_engine(addrs, carry["obj"], carry["memory"],
                                    jnp.minimum, M, engine,
-                                   jnp.float32(jnp.inf))
+                                   jnp.float32(jnp.inf), shape=shape)
         return PlanState(state.box, {**carry, "memory": res.memory},
                          state.accum.merge_sequential(res.stats))
 
-    stages = (custom_stage("min-funnel", L + 1, max(2, M // 2), min_funnel),)
+    # Declared footprint: the funnel's level-0 (peak) shape — ceil(Q/f)
+    # groups x 1 cell.
+    stages = (custom_stage("min-funnel", L + 1, max(2, M // 2), min_funnel,
+                           -(-Q // max(2, M // 2))),)
 
     def epilogue(state):
         carry = state.carry

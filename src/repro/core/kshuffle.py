@@ -42,12 +42,32 @@ _INT32_MAX = 2**31 - 1
 _MAX_SORT_N = 1 << 18
 
 
-def _check_key_space(n: int, n_nodes: int) -> None:
+def _keyspace_overflows(n: int, n_nodes: int) -> bool:
     # The stable sort runs on composite int32 keys dest * n + source; the
     # invalid-item sentinel uses dest = n_nodes, so the largest key is
     # n_nodes * n + (n - 1).  It must also stay below the int32 padding
     # sentinel the bitonic network appends.
-    if n and n_nodes * n + (n - 1) >= _INT32_MAX:
+    return bool(n) and n_nodes * n + (n - 1) >= _INT32_MAX
+
+
+def kernel_fits(n: int, n_nodes: int) -> bool:
+    """Whether a shuffle of ``n`` flattened items into ``n_nodes`` nodes fits
+    the kernel path's guards: the composite int32 (dest, source) key space
+    and the bitonic network's single-VMEM-tile budget.
+
+    Both guards are functions of one *call's* shape, so in a shape-scheduled
+    program (DESIGN.md §9) they are re-derived per stage from that stage's
+    (V_r, M_r) footprint — ``LocalEngine(shuffle_impl="kernel")`` uses this
+    predicate to route late levels that fit a single VMEM tile through the
+    kernel even when the entry level must take the dense shuffle.  The
+    strict :func:`kernel_shuffle` guards raise on exactly ``not
+    kernel_fits(...)`` — one predicate, two policies.
+    """
+    return not _keyspace_overflows(n, n_nodes) and n <= _MAX_SORT_N
+
+
+def _check_key_space(n: int, n_nodes: int) -> None:
+    if _keyspace_overflows(n, n_nodes):
         raise ValueError(
             f"kernel_shuffle: composite (dest, source) key space "
             f"n_nodes*n={n_nodes}*{n} overflows int32; use the dense "

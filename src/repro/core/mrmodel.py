@@ -85,11 +85,14 @@ def materialize_mailbox(dests: jnp.ndarray, payload: Payload,
     new_payload = jax.tree_util.tree_map(place, payload)
     new_valid = jnp.zeros((n_nodes, capacity), bool).at[dest_idx, slot_idx].set(
         in_range, mode="drop")
-    if dests.ndim >= 2:
+    if dests.ndim >= 2 and n:
         sent_per_node = jnp.sum(valid.reshape(dests.shape[0], -1), axis=1)
         max_sent = jnp.max(sent_per_node)
     else:
-        max_sent = jnp.array(1, jnp.int32)
+        # Empty (V, M) sends have no source nodes (reshape(-1) over a
+        # zero-size leading dim is ill-posed anyway): max_sent = 0, matching
+        # the reference backend's max(initial=0).
+        max_sent = jnp.array(0 if dests.ndim >= 2 else 1, jnp.int32)
     return Mailbox(payload=new_payload, valid=new_valid), max_sent
 
 

@@ -130,7 +130,8 @@ def multisearch(queries: jnp.ndarray, pivots: jnp.ndarray, M: int,
 
 def multisearch_plan(n_queries: int, n_pivots: int, M: int, *,
                      dtype=jnp.float32, capacity: Optional[int] = None,
-                     pipelined: bool = True, align=None) -> Plan:
+                     pipelined: bool = True, align=None,
+                     shape: bool = True) -> Plan:
     """Theorem 4.1 as a plan builder (DESIGN.md §3 and §8).
 
     The search tree is laid out as mailbox nodes: K batch-source nodes
@@ -146,6 +147,15 @@ def multisearch_plan(n_queries: int, n_pivots: int, M: int, *,
     is capacity ~ M: per-node congestion is w.h.p. <= M thanks to the
     random batching (PRNG slot ``"batches"``), and ``stats.dropped``
     reports the w.h.p. failure event instead of crashing a reducer.
+
+    ``shape=True`` (default) shape-schedules the DAG's warm-up (DESIGN.md
+    §9): the node layout is prefix-ordered (sources, then tree levels
+    top-down), and before round r nothing can occupy levels deeper than r —
+    so the entry mailbox holds the K sources only and round r's physical
+    footprint grows as T[r+1] nodes until the pipeline reaches the leaves
+    at round L, after which the remaining K rounds run shape-uniform at
+    the full V (one ``lax.scan`` segment on LocalEngine).  ``shape=False``
+    freezes every round at (V, capacity).  Bit-identical either way.
     """
     n_q, m, M = int(n_queries), int(n_pivots), int(M)
     n = n_q + m
@@ -162,7 +172,8 @@ def multisearch_plan(n_queries: int, n_pivots: int, M: int, *,
     if align is not None:
         V = int(align(V))
     cap = int(capacity) if capacity is not None else max(1, n_q)
-    fingerprint = ("multisearch", n_q, m, M, str(dtype), cap, pipelined, V)
+    fingerprint = ("multisearch", n_q, m, M, str(dtype), cap, pipelined, V,
+                   bool(shape))
 
     def prologue(inputs, keys):
         queries = jnp.asarray(inputs[0])
@@ -176,41 +187,63 @@ def multisearch_plan(n_queries: int, n_pivots: int, M: int, *,
             batch = jnp.zeros((n_q,), jnp.int32)
         return {"queries": queries, "padded": padded, "batch": batch}
 
-    def make_step(carry):
-        padded = carry["padded"]
+    def make_step(offset: int):
+        # ``offset`` is the global round index of the stage's first round —
+        # the shape-scheduled variant splits the descent into per-round
+        # stages, so the source-release clock offset + r must keep counting
+        # across stage boundaries.
+        def make_fn(carry):
+            padded = carry["padded"]
 
-        def step(r, ids, b):
-            q, qi = b.payload
-            ids2 = ids[:, None]
-            is_src = ids2 < K
-            # tree descent, selected by the (static) level of each node id
-            dest = jnp.broadcast_to(ids2, q.shape).astype(jnp.int32)   # keep
-            for l in range(L):
-                k_local = ids2 - T[l]
-                stride = f_br ** (L - l - 1)
-                child_base = k_local * f_br
-                j = jnp.arange(f_br)
-                bound_idx = (child_base[..., None] + j + 1) * stride - 1
-                bounds = padded[jnp.clip(bound_idx, 0, padded.shape[0] - 1)]
-                c = jnp.minimum(jnp.sum(q[..., None] > bounds, axis=-1),
-                                f_br - 1)
-                at_l = (ids2 >= T[l]) & (ids2 < T[l] + f_br ** l)
-                dest = jnp.where(at_l, T[l + 1] + child_base + c, dest)
-            # source b releases its batch into the root at round b
-            dest = jnp.where(is_src, jnp.where(ids2 == r, T[0], ids2), dest)
-            dest = jnp.where(b.valid, dest, -1)
-            return dest.astype(jnp.int32), (q, qi)
-        return step
+            def step(r, ids, b):
+                q, qi = b.payload
+                ids2 = ids[:, None]
+                is_src = ids2 < K
+                # tree descent, selected by the (static) level of each node
+                dest = jnp.broadcast_to(ids2, q.shape).astype(jnp.int32)  # keep
+                for l in range(L):
+                    k_local = ids2 - T[l]
+                    stride = f_br ** (L - l - 1)
+                    child_base = k_local * f_br
+                    j = jnp.arange(f_br)
+                    bound_idx = (child_base[..., None] + j + 1) * stride - 1
+                    bounds = padded[jnp.clip(bound_idx, 0,
+                                             padded.shape[0] - 1)]
+                    c = jnp.minimum(jnp.sum(q[..., None] > bounds, axis=-1),
+                                    f_br - 1)
+                    at_l = (ids2 >= T[l]) & (ids2 < T[l] + f_br ** l)
+                    dest = jnp.where(at_l, T[l + 1] + child_base + c, dest)
+                # source b releases its batch into the root at round b
+                dest = jnp.where(is_src,
+                                 jnp.where(ids2 == offset + r, T[0], ids2),
+                                 dest)
+                dest = jnp.where(b.valid, dest, -1)
+                return dest.astype(jnp.int32), (q, qi)
+            return step
+        return make_fn
 
-    stages = (
-        # Entry round: query j is thrown into its batch's source node.
-        entry_stage("entry", V, cap,
-                    lambda c: (c["batch"],
-                               (c["queries"],
-                                jnp.arange(n_q, dtype=jnp.int32)))),
-        round_stage("descend", make_step, K + L),
-        account_stage("output", ((n_q, 1),)),
-    )
+    def emit_entry(c):
+        return (c["batch"], (c["queries"], jnp.arange(n_q, dtype=jnp.int32)))
+
+    if shape:
+        # Warm-up rounds r < L reach at most tree level r: physical
+        # footprint T[r+1] = end of level r's range (prefix-ordered layout,
+        # so destination ids are unchanged).  Steady state: K rounds at V.
+        stages = [entry_stage("entry", K, cap, emit_entry)]
+        stages += [round_stage(f"descend-{r}", make_step(r), 1,
+                               n_nodes=T[r + 1])
+                   for r in range(L)]
+        stages.append(round_stage("descend-steady", make_step(L), K,
+                                  n_nodes=V))
+        stages.append(account_stage("output", ((n_q, 1),)))
+        stages = tuple(stages)
+    else:
+        stages = (
+            # Entry round: query j is thrown into its batch's source node.
+            entry_stage("entry", V, cap, emit_entry),
+            round_stage("descend", make_step(0), K + L),
+            account_stage("output", ((n_q, 1),)),
+        )
 
     def epilogue(state):
         # Leaves -> output: scatter each query's leaf index by original id.

@@ -37,17 +37,28 @@ from .mrmodel import Mailbox
 class PlanStage(NamedTuple):
     """One named step of a plan's static schedule.
 
-    ``rounds`` and ``capacity`` are the *declared* schedule (what
-    ``Plan.schedule()`` prints and ``Plan.total_rounds`` sums); ``apply``
-    is the executable body ``(engine, PlanState) -> PlanState`` and must
-    account exactly ``rounds`` rounds into the state's accumulator.
-    ``capacity=None`` means the stage inherits the current mailbox capacity
-    (or does not shuffle at all)."""
+    ``rounds``, ``capacity`` and ``n_nodes`` are the *declared* schedule
+    (what ``Plan.schedule()`` prints and ``Plan.total_rounds`` sums);
+    ``apply`` is the executable body ``(engine, PlanState) -> PlanState``
+    and must account exactly ``rounds`` rounds into the state's
+    accumulator.  ``(n_nodes, capacity)`` is the stage's declared mailbox
+    footprint ``(V_r, M_r)`` — the physical shape its shuffles target
+    (Theorem 2.1 charges each round only its live communication, so
+    shrinking programs declare shrinking footprints; DESIGN.md §9).
+    ``capacity=None`` / ``n_nodes=None`` mean the stage inherits the
+    current mailbox shape (or does not shuffle at all); backends apply
+    their layout granularity via ``engine.aligned_nodes`` at execute
+    time, so small late levels may collapse to one shard."""
 
     name: str
     rounds: int
     capacity: Optional[int]
     apply: Callable
+    n_nodes: Optional[int] = None
+    #: whether the stage physically shuffles (entry/round/custom stages) —
+    #: accounting-only and compute stages set False so footprint metrics
+    #: (peak/total_mailbox_slots) skip them even when both dims inherit
+    shuffles: bool = True
 
 
 class PlanState(NamedTuple):
@@ -87,17 +98,70 @@ class Plan(NamedTuple):
         """Rounds the declared schedule executes (must be <= round_bound)."""
         return sum(s.rounds for s in self.stages)
 
-    def schedule(self) -> Tuple[Tuple[str, int, Optional[int]], ...]:
-        """The static round schedule as (stage name, rounds, capacity) rows."""
-        return tuple((s.name, s.rounds, s.capacity) for s in self.stages)
+    def schedule(self) -> Tuple[Tuple[str, int, Optional[int],
+                                      Optional[int]], ...]:
+        """The static shape schedule as (stage name, rounds, capacity,
+        n_nodes) rows — ``(n_nodes, capacity)`` is the declared per-stage
+        mailbox footprint ``(V_r, M_r)``; None inherits."""
+        return tuple((s.name, s.rounds, s.capacity, s.n_nodes)
+                     for s in self.stages)
+
+    @property
+    def shape_fingerprint(self) -> Tuple:
+        """The declared shape schedule as a hashable token; folded into the
+        plan-cache key next to ``fingerprint`` so two plans that differ only
+        in per-stage footprints never share a compiled executable."""
+        return tuple((s.rounds, s.capacity, s.n_nodes) for s in self.stages)
+
+    def _resolved_footprints(self):
+        """(rounds, V_r, M_r) per *shuffling* stage with inherited dims
+        resolved from the last declaring stage; accounting-only stages
+        (``shuffles=False``) never touch a mailbox and are skipped — a
+        shuffling stage that inherits both dims still counts at the
+        inherited footprint (e.g. a frozen program's steady rounds)."""
+        v, m = self.n_nodes, None
+        rows = []
+        for s in self.stages:
+            v = s.n_nodes if s.n_nodes is not None else v
+            m = s.capacity if s.capacity is not None else m
+            if s.shuffles and v is not None and m is not None:
+                rows.append((s.rounds, int(v), int(m)))
+        return rows
+
+    def peak_mailbox_slots(self) -> int:
+        """Max declared physical footprint V_r * M_r over the schedule."""
+        return max((v * m for _, v, m in self._resolved_footprints()),
+                   default=0)
+
+    def total_mailbox_slots(self) -> int:
+        """Sum over rounds of the declared footprint V_r * M_r — the
+        geometric series Theorem 2.1 actually charges a shrinking program
+        for (vs rounds * peak for a frozen one)."""
+        return sum(max(r, 1) * v * m
+                   for r, v, m in self._resolved_footprints())
 
     def describe(self) -> str:
+        """Render the shape schedule, one row per stage.
+
+        >>> p = Plan(name="demo", fingerprint=("demo",), n_nodes=8,
+        ...          stages=(PlanStage("entry", 1, 4, None, 8),
+        ...                  PlanStage("merge", 1, 8, None, 2),
+        ...                  PlanStage("finalize", 1, None, None)),
+        ...          prologue=None, epilogue=None, round_bound=3)
+        >>> print(p.describe())
+        Plan 'demo': V=8, rounds=3 (bound 3), prng=[]
+          entry            rounds=1   capacity=4        n_nodes=8
+          merge            rounds=1   capacity=8        n_nodes=2
+          finalize         rounds=1   capacity=inherit  n_nodes=inherit
+        """
         rows = [f"Plan {self.name!r}: V={self.n_nodes}, "
                 f"rounds={self.total_rounds} (bound {self.round_bound}), "
                 f"prng={list(self.prng_slots)}"]
-        for name, rounds, cap in self.schedule():
+        for name, rounds, cap, nodes in self.schedule():
+            cap_s = "inherit" if cap is None else cap
+            nodes_s = "inherit" if nodes is None else nodes
             rows.append(f"  {name:<16} rounds={rounds:<3} "
-                        f"capacity={'inherit' if cap is None else cap}")
+                        f"capacity={cap_s:<8} n_nodes={nodes_s}")
         return "\n".join(rows)
 
     def split_key(self, key) -> dict:
@@ -177,7 +241,7 @@ def account_stage(name: str,
             acc = acc.add_round(items_sent=items, max_io=io)
         return state._replace(accum=acc)
 
-    return PlanStage(name, len(costs), None, apply)
+    return PlanStage(name, len(costs), None, apply, shuffles=False)
 
 
 def entry_stage(name: str, n_nodes: int, capacity: int,
@@ -187,26 +251,35 @@ def entry_stage(name: str, n_nodes: int, capacity: int,
 
     def apply(engine, state: PlanState) -> PlanState:
         dests, payload = emit(state.carry)
-        box, st = engine.shuffle(dests, payload, n_nodes, capacity)
+        box, st = engine.shuffle(dests, payload,
+                                 engine.aligned_nodes(n_nodes), capacity)
         return PlanState(box, state.carry, state.accum.add_round_stats(st))
 
-    return PlanStage(name, 1, capacity, apply)
+    return PlanStage(name, 1, capacity, apply, n_nodes)
 
 
 def round_stage(name: str, make_fn: Callable, n_rounds: int,
-                capacity: Optional[int] = None) -> PlanStage:
+                capacity: Optional[int] = None,
+                n_nodes: Optional[int] = None) -> PlanStage:
     """``n_rounds`` applications of one round function over the current
     mailbox.  ``make_fn(carry) -> RoundFn`` binds the carry (splitters,
     padded pivots, ...) at execute time; uniform capacity means
-    ``LocalEngine`` rolls the rounds into a single ``lax.scan``."""
+    ``LocalEngine`` rolls the rounds into a single ``lax.scan``.
+
+    ``n_nodes`` declares the stage's target mailbox footprint V_r: each
+    round shuffles into a ``(n_nodes, capacity)`` mailbox (a *shape-change
+    round* when it differs from the current box shape; DESIGN.md §9) —
+    the backend's layout granularity is applied at execute time via
+    ``engine.aligned_nodes``.  None inherits the current node count."""
 
     def apply(engine, state: PlanState) -> PlanState:
+        V = None if n_nodes is None else engine.aligned_nodes(n_nodes)
         box, accum = engine.run_rounds(make_fn(state.carry), state.box,
                                        n_rounds, capacity=capacity,
-                                       accum=state.accum)
+                                       accum=state.accum, n_nodes=V)
         return state._replace(box=box, accum=accum)
 
-    return PlanStage(name, n_rounds, capacity, apply)
+    return PlanStage(name, n_rounds, capacity, apply, n_nodes)
 
 
 def compute_stage(name: str, fn: Callable) -> PlanStage:
@@ -217,12 +290,22 @@ def compute_stage(name: str, fn: Callable) -> PlanStage:
         box, carry = fn(state.box, state.carry)
         return state._replace(box=box, carry=carry)
 
-    return PlanStage(name, 0, None, apply)
+    return PlanStage(name, 0, None, apply, shuffles=False)
 
 
 def custom_stage(name: str, rounds: int, capacity: Optional[int],
-                 apply: Callable) -> PlanStage:
+                 apply: Callable,
+                 n_nodes: Optional[int] = None) -> PlanStage:
     """Escape hatch for stages that drive the engine directly (invisible
     funnels, PRAM steps, BSP supersteps); ``apply(engine, state) -> state``
-    must account exactly ``rounds`` rounds."""
-    return PlanStage(name, rounds, capacity, apply)
+    must account exactly ``rounds`` rounds.  ``n_nodes`` declares the
+    stage's peak physical footprint for the shape schedule (purely
+    declarative here — the body drives its own shuffles)."""
+    return PlanStage(name, rounds, capacity, apply, n_nodes)
+
+
+__all__ = [
+    "Plan", "PlanStage", "PlanState", "execute_plan",
+    "account_stage", "compute_stage", "custom_stage",
+    "entry_stage", "round_stage",
+]

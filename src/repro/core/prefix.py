@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from .costmodel import CostAccum, MRCost, tree_height
-from .plan import Plan, account_stage
+from .plan import Plan, account_stage, entry_stage, round_stage
 
 
 def _pad_to_tree(x: jnp.ndarray, d: int, height: int) -> jnp.ndarray:
@@ -39,7 +39,8 @@ class PrefixResult(NamedTuple):
 
 
 def prefix_plan(n: int, M: int, *, dtype=jnp.int32,
-                inclusive: bool = True) -> Plan:
+                inclusive: bool = True, physical: bool = False,
+                shape: bool = True) -> Plan:
     """Lemma 2.2 all-prefix-sums as a plan builder, d = M/2.
 
     The round schedule — 1 (input -> leaves) + (L-1) bottom-up + L top-down
@@ -47,11 +48,25 @@ def prefix_plan(n: int, M: int, *, dtype=jnp.int32,
     depends only on (n, M) — is entirely static, so the stage table carries
     the exact accounting while the prologue performs the dense level-by-
     level tree computation on the data (``(values,)`` at execute time).
+
+    ``physical=True`` instead runs the tree as *engine rounds*: the entry
+    shuffle groups d items per leaf-parent node, each bottom-up round sums
+    a mailbox row and routes the subtree sum to its parent ``ids // d``,
+    and each top-down round fans a node's offset out to its d children
+    (child excl-prefixes are gathered from the carry's level sums — the
+    same values, bit-for-bit, that the bottom-up rounds produced).  With
+    ``shape=True`` (default) every level runs in its own physical mailbox
+    of ceil(n/d^(l+1)) nodes — the footprint shrinks geometrically up the
+    funnel and regrows down it (DESIGN.md §9); ``shape=False`` freezes the
+    entry footprint (ceil(n/d), d) for the whole program.  The two
+    variants are bit-identical in outputs and per-round stats.
     """
     n, M = int(n), int(M)
     dtype = jnp.dtype(dtype)
     d = max(2, M // 2)
     L = tree_height(max(n, 2), d)
+    if physical:
+        return _physical_prefix_plan(n, M, d, dtype, inclusive, shape)
     fingerprint = ("prefix", n, M, str(dtype), bool(inclusive))
 
     # Static accounting: only non-empty nodes communicate (implicit tree).
@@ -98,6 +113,113 @@ def prefix_plan(n: int, M: int, *, dtype=jnp.int32,
     return Plan(name="prefix", fingerprint=fingerprint, n_nodes=d ** L,
                 stages=stages, prologue=prologue, epilogue=epilogue,
                 round_bound=2 * L + 1, input_spec=(((n,), dtype),))
+
+
+def _physical_prefix_plan(n: int, M: int, d: int, dtype, inclusive: bool,
+                          shape: bool) -> Plan:
+    """Engine-round realization of the Lemma 2.2 tree (see prefix_plan)."""
+    if n < 1:
+        raise ValueError("physical prefix_plan requires n >= 1")
+    # sizes[j] = node count at funnel level j (level 0 = leaf-parents).
+    sizes = [-(-n // d)]
+    while sizes[-1] > 1:
+        sizes.append(-(-sizes[-1] // d))
+    J = len(sizes) - 1                     # up rounds beyond the entry
+    fingerprint = ("prefix-physical", n, M, str(dtype), bool(inclusive),
+                   bool(shape))
+
+    def pad_groups(x, n_groups):
+        pad = n_groups * d - x.shape[0]
+        if pad:
+            x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+        return x.reshape(n_groups, d)
+
+    def prologue(inputs, keys):
+        values = jnp.asarray(inputs[0])
+        # Level sums, computed with the same axis-1 summation (and the same
+        # source order) the bottom-up mailbox rounds perform — bit-equal to
+        # the physically routed sums, so the top-down gathers cannot drift.
+        lv, cur = [], values
+        for n_groups in sizes:
+            cur = jnp.sum(pad_groups(cur, n_groups), axis=1)
+            lv.append(cur)
+        return {"values": values, "lv": tuple(lv)}
+
+    def emit_entry(carry):
+        vals = carry["values"]
+        return jnp.arange(n, dtype=jnp.int32) // d, vals
+
+    def make_up(j):
+        def make_fn(carry):
+            def fn(r, ids, b):
+                sums = jnp.sum(jnp.where(b.valid, b.payload, 0), axis=1)
+                live = jnp.any(b.valid, axis=1)
+                slot = jnp.arange(b.capacity, dtype=jnp.int32)[None, :]
+                dests = jnp.where((slot == 0) & live[:, None],
+                                  (ids // d)[:, None], -1)
+                payload = jnp.where(slot == 0, sums[:, None],
+                                    jnp.zeros_like(sums)[:, None])
+                return dests.astype(jnp.int32), payload
+            return fn
+        return make_fn
+
+    def make_down(j, from_root):
+        # Parents at level j+1 fan their offset out to children at level j:
+        # child k*d + c receives offset_k + excl-prefix of its left
+        # siblings' sums (gathered from the carry's level-j sums).
+        n_parents, n_children = sizes[j + 1], sizes[j]
+
+        def make_fn(carry):
+            child_sums = pad_groups(carry["lv"][j], n_parents)
+            excl = jnp.cumsum(child_sums, axis=1) - child_sums
+
+            def fn(r, ids, b):
+                if from_root:
+                    offs = jnp.zeros((ids.shape[0],), child_sums.dtype)
+                    live = ids == 0
+                else:
+                    offs = jnp.where(b.valid[:, 0], b.payload[:, 0], 0)
+                    live = b.valid[:, 0] & (ids < n_parents)
+                rows = jnp.clip(ids, 0, n_parents - 1)
+                col = jnp.arange(d, dtype=jnp.int32)[None, :]
+                child = ids[:, None] * d + col
+                dests = jnp.where(live[:, None] & (child < n_children),
+                                  child, -1)
+                payload = offs[:, None] + excl[rows]
+                return dests.astype(jnp.int32), payload
+            return fn
+        return make_fn
+
+    stages = [entry_stage("up-0", sizes[0], d, emit_entry)]
+    for j in range(1, J + 1):
+        stages.append(round_stage(f"up-{j}", make_up(j), 1, capacity=d,
+                                  n_nodes=sizes[j] if shape else None))
+    for j in range(J - 1, -1, -1):
+        stages.append(round_stage(f"down-{j}", make_down(j, j == J - 1), 1,
+                                  capacity=1,
+                                  n_nodes=sizes[j] if shape else None))
+    stages.append(account_stage("output", ((n, 1),)))
+
+    def epilogue(state):
+        box = state.box
+        values = state.carry["values"]
+        if J == 0:
+            group_off = jnp.zeros((sizes[0],), values.dtype)
+        else:
+            group_off = jnp.where(box.valid[:sizes[0], 0],
+                                  box.payload[:sizes[0], 0], 0)
+        grouped = pad_groups(values, sizes[0])
+        within = (jnp.cumsum(grouped, axis=1) - grouped).reshape(-1)[:n]
+        out = group_off[jnp.arange(n) // d] + within
+        if inclusive:
+            out = out + values
+        return PrefixResult(values=out.astype(values.dtype),
+                            stats=state.accum)
+
+    return Plan(name="prefix-physical", fingerprint=fingerprint,
+                n_nodes=sizes[0], stages=tuple(stages), prologue=prologue,
+                epilogue=epilogue, round_bound=2 * J + 2,
+                input_spec=(((n,), dtype),))
 
 
 def tree_prefix_sum(values: jnp.ndarray, M: int,

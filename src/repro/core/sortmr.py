@@ -149,7 +149,8 @@ def quantile_splitters(x: jnp.ndarray, n_buckets: int, oversample: int,
 
 def sort_plan(n: int, M: int, *, dtype=jnp.float32, levels: int = 1,
               oversample: int = 8, slack: float = 3.0,
-              n_nodes: Optional[int] = None, align=None) -> Plan:
+              n_nodes: Optional[int] = None, align=None,
+              shape: bool = True) -> Plan:
     """§4.3 sample sort as a plan builder (DESIGN.md §3 and §8).
 
     The recursion is flattened into a static radix schedule of ``levels``
@@ -167,6 +168,14 @@ def sort_plan(n: int, M: int, *, dtype=jnp.float32, levels: int = 1,
     default reducer count to a backend's layout granularity.  The executed
     result is valid iff ``stats.dropped == 0`` (the paper's w.h.p. event —
     raise ``slack`` or ``oversample`` if it fires).
+
+    ``shape=True`` (default) shape-schedules the merge ladder (DESIGN.md
+    §9): refinement level d runs in a physical mailbox of
+    V_d = min(V, B^(d+1)) compactly-numbered group nodes (one per live
+    bucket group) instead of the frozen V — so every level's footprint is
+    ~slack*n slots rather than V * group_cap(0).  With ``levels=1`` there
+    is no ladder and the two variants coincide; they are bit-identical
+    (outputs and per-round stats) in all cases.
     """
     n, M = int(n), int(M)
     dtype = jnp.dtype(dtype)
@@ -190,19 +199,27 @@ def sort_plan(n: int, M: int, *, dtype=jnp.float32, levels: int = 1,
     s = pivot_sample_size(n, V, oversample)       # static, = runtime sample
     piv_rounds = max(1, log_M(max(s, 2), M_eff))
     fingerprint = ("sort", n, M, str(dtype), levels, oversample,
-                   float(slack), V)
+                   float(slack), V, bool(shape))
+
+    def group_nodes(d):
+        return min(V, B ** (d + 1))
 
     def group_cap(d):
-        groups = min(V, B ** (d + 1))
-        return max(1, int(math.ceil(slack * n / groups)))
+        return max(1, int(math.ceil(slack * n / group_nodes(d))))
 
     def bucket_of(splitters, v):
         b = jnp.searchsorted(splitters, v, side="left")
         return jnp.clip(b, 0, V - 1).astype(jnp.int32)
 
     def level_dest(splitters, vals, valid, d):
+        # Frozen numbering sends bucket group g to its leader node
+        # g * width; the shape-scheduled ladder numbers level d's
+        # min(V, B^(d+1)) live groups compactly (node g = group g) so the
+        # mailbox carries no dead rows.  Same grouping either way — the
+        # per-round stats are identical.
         width = B ** (levels - 1 - d)
-        dest = (bucket_of(splitters, vals) // width) * width
+        group = bucket_of(splitters, vals) // width
+        dest = group if shape else group * width
         return jnp.where(valid, dest, -1)
 
     def prologue(inputs, keys):
@@ -214,7 +231,7 @@ def sort_plan(n: int, M: int, *, dtype=jnp.float32, levels: int = 1,
         # pivot sort: O(log_M s) rounds moving the s samples
         account_stage("pivot-sort", ((s, min(s, M_eff)),) * piv_rounds),
         # level 0 routes straight from the input collection
-        entry_stage("entry", V, group_cap(0),
+        entry_stage("entry", group_nodes(0) if shape else V, group_cap(0),
                     lambda c: (level_dest(c["splitters"], c["x"],
                                           jnp.ones_like(c["x"], bool), 0),
                                c["x"])),
@@ -227,7 +244,8 @@ def sort_plan(n: int, M: int, *, dtype=jnp.float32, levels: int = 1,
                 return level_dest(spl, b.payload, b.valid, _d), b.payload
             return refine
         stages.append(round_stage(f"refine-{d}", make_refine, 1,
-                                  capacity=group_cap(d)))
+                                  capacity=group_cap(d),
+                                  n_nodes=group_nodes(d) if shape else None))
 
     big = (jnp.finfo(dtype).max if jnp.issubdtype(dtype, jnp.floating)
            else jnp.iinfo(dtype).max)

@@ -105,6 +105,40 @@ class TestRandomRoundProgramConformance:
                     assert int(fa) == int(fb), e.name
 
 
+class TestEmptyAndDegenerateShuffles:
+    """n = 0 flattened items and V = 1 mailboxes — the degenerate shapes
+    shape-scheduled programs produce at their smallest levels — must
+    shuffle identically (and without crashing) on every backend."""
+
+    @pytest.mark.parametrize("dests_shape,V,cap", [
+        ((0,), 1, 2),          # empty 1-D entry send into one node
+        ((0,), 4, 2),          # empty 1-D entry send, several nodes
+        ((0, 3), 1, 2),        # empty (V, M) mailbox send (zero source rows)
+        ((0, 3), 4, 3),
+        ((5,), 1, 2),          # V = 1: everything funnels into one node
+    ], ids=["n0-V1", "n0-V4", "2d-empty-V1", "2d-empty-V4", "V1-overflow"])
+    def test_empty_and_single_node_parity(self, dests_shape, V, cap):
+        n = int(np.prod(dests_shape))
+        dests = np.zeros(dests_shape, np.int32)
+        payload = np.arange(float(n), dtype=np.float32).reshape(dests_shape)
+        ref_box = ref_st = None
+        for e in engines():
+            box, st = e.shuffle(dests, payload, V, cap)
+            assert np.asarray(box.valid).shape == (V, cap), e.name
+            if ref_box is None:
+                ref_box, ref_st = box, st
+            else:
+                assert_same_box(ref_box, box, ctx=f"{e.name} {dests_shape}")
+                for name, fa, fb in zip(ref_st._fields, ref_st, st):
+                    assert int(fa) == int(fb), (e.name, name)
+        # V=1 oversubscription keeps the FIFO prefix and counts the drops
+        if n and V == 1:
+            assert int(ref_st.dropped) == n - cap
+            np.testing.assert_array_equal(
+                np.asarray(ref_box.payload)[0], np.arange(cap,
+                                                          dtype=np.float32))
+
+
 class TestAlgorithmConformance:
     @pytest.mark.parametrize("seed,n,M", [(0, 300, 16), (1, 500, 32)])
     def test_sort_instances(self, seed, n, M):

@@ -192,12 +192,14 @@ class TestSchedule:
             jnp.asarray(RNG.normal(size=256).astype(np.float32)))
         assert int(res.stats.rounds) == plan.total_rounds
         assert plan.total_rounds <= plan.round_bound
-        names = [name for name, _, _ in plan.schedule()]
+        names = [name for name, _, _, _ in plan.schedule()]
         assert names[0] == "pivot-sort" and names[1] == "entry"
         assert "local-sort" in names
 
     def test_describe_mentions_every_stage(self):
         plan = multisearch_plan(100, 10, 8)
         text = plan.describe()
-        for name, _, _ in plan.schedule():
+        for name, _, _, _ in plan.schedule():
             assert name in text
+        # the shape schedule is inspectable like the round schedule
+        assert "n_nodes=" in text and "inherit" in text

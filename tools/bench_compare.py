@@ -1,0 +1,85 @@
+#!/usr/bin/env python
+"""Benchmark regression gate: current BENCH_*.json vs the committed baseline.
+
+Every benchmark that writes a machine-readable ``BENCH_*.json`` may carry a
+``"series"`` object — named scalar figures of merit (speedup ratios, byte
+ratios) that are comparable across machines, unlike absolute wall times.
+This tool compares the series of a current run against the committed
+baseline file and **fails on a > ``--threshold`` (default 1.3x) regression
+of any named series** (every series is higher-is-better).
+
+Series present in only one of the two files are reported but do not fail
+the gate (a new benchmark adds series; the baseline gains them on the next
+commit).  Improvements are reported, never gated.
+
+CI usage (the benchmark job): stash the committed baseline before the
+bench run overwrites it, then::
+
+    git show HEAD:BENCH_shape.json > BENCH_shape.baseline.json
+    python -m benchmarks.run --quick
+    python tools/bench_compare.py --baseline BENCH_shape.baseline.json \
+                                  --current BENCH_shape.json
+"""
+import argparse
+import json
+import pathlib
+import sys
+
+
+def load_series(path: str) -> dict:
+    data = json.loads(pathlib.Path(path).read_text(encoding="utf-8"))
+    series = data.get("series", {})
+    if not isinstance(series, dict):
+        raise SystemExit(f"{path}: 'series' must be an object")
+    return {k: float(v) for k, v in series.items()}
+
+
+def compare(baseline: dict, current: dict, threshold: float):
+    """Returns (failures, report_lines)."""
+    failures, lines = [], []
+    for name in sorted(set(baseline) | set(current)):
+        if name not in current:
+            lines.append(f"  {name}: missing from current run "
+                         f"(baseline {baseline[name]:.3f}) — not gated")
+            continue
+        if name not in baseline:
+            lines.append(f"  {name}: new series {current[name]:.3f} "
+                         f"(no baseline) — not gated")
+            continue
+        base, cur = baseline[name], current[name]
+        ratio = base / cur if cur > 0 else float("inf")
+        verdict = "OK"
+        if ratio > threshold:
+            verdict = f"REGRESSION (>{threshold:.2f}x)"
+            failures.append(name)
+        elif cur > base:
+            verdict = "improved"
+        lines.append(f"  {name}: baseline {base:.3f} -> current {cur:.3f} "
+                     f"[{verdict}]")
+    return failures, lines
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_shape.baseline.json")
+    ap.add_argument("--current", default="BENCH_shape.json")
+    ap.add_argument("--threshold", type=float, default=1.3,
+                    help="fail when baseline/current exceeds this ratio")
+    args = ap.parse_args()
+    baseline = load_series(args.baseline)
+    current = load_series(args.current)
+    failures, lines = compare(baseline, current, args.threshold)
+    print(f"bench_compare: {args.current} vs {args.baseline} "
+          f"(threshold {args.threshold:.2f}x)")
+    for line in lines:
+        print(line)
+    if failures:
+        print(f"bench_compare: FAIL — {len(failures)} series regressed: "
+              f"{', '.join(failures)}", file=sys.stderr)
+        return 1
+    print(f"bench_compare: OK ({len(current)} series)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,15 +1,24 @@
 #!/usr/bin/env python
-"""API-surface guard: ``repro.core.__all__`` must match the pinned list.
+"""API-surface guard: pinned ``__all__`` lists must match the modules.
 
 The plan/compile/execute split made ``repro.core`` the public query surface
-(DESIGN.md §8), so accidental drift — a re-export dropped in a refactor, a
-private helper leaking into ``__all__`` — is an API break.  This tool pins
-the exact surface: it fails when ``repro.core.__all__`` gains or loses
-names relative to EXPECTED below, and when any advertised name does not
-actually resolve.  Deliberate changes update EXPECTED in the same commit
-(the diff then documents the API change).  CI runs this in the docs job.
+(DESIGN.md §8), and the shape schedule made ``repro.core.plan`` a public
+module in its own right (PlanStage carries the documented per-stage
+``n_nodes`` footprint field; DESIGN.md §9) — so accidental drift on either
+— a re-export dropped in a refactor, a private helper leaking into
+``__all__`` — is an API break.  This tool pins both surfaces exactly: it
+fails when an ``__all__`` gains or loses names relative to the EXPECTED
+lists below, and when any advertised name does not actually resolve.
+Deliberate changes update EXPECTED in the same commit (the diff then
+documents the API change).  CI runs this in the docs job.
 """
 import sys
+
+EXPECTED_PLAN = frozenset([
+    "Plan", "PlanStage", "PlanState", "execute_plan",
+    "account_stage", "compute_stage", "custom_stage",
+    "entry_stage", "round_stage",
+])
 
 EXPECTED = frozenset([
     # cost model
@@ -56,25 +65,33 @@ EXPECTED = frozenset([
 ])
 
 
-def main() -> int:
-    import repro.core
-
-    actual = set(repro.core.__all__)
-    missing = sorted(EXPECTED - actual)
-    unexpected = sorted(actual - EXPECTED)
-    broken = sorted(n for n in actual if not hasattr(repro.core, n))
+def check_surface(module, expected) -> int:
+    actual = set(module.__all__)
+    missing = sorted(expected - actual)
+    unexpected = sorted(actual - expected)
+    broken = sorted(n for n in actual if not hasattr(module, n))
+    mod = module.__name__
     for name in missing:
-        print(f"repro.core.__all__ lost: {name}", file=sys.stderr)
+        print(f"{mod}.__all__ lost: {name}", file=sys.stderr)
     for name in unexpected:
-        print(f"repro.core.__all__ gained (update tools/check_api_surface.py "
+        print(f"{mod}.__all__ gained (update tools/check_api_surface.py "
               f"if deliberate): {name}", file=sys.stderr)
     for name in broken:
-        print(f"repro.core.__all__ advertises unresolvable name: {name}",
+        print(f"{mod}.__all__ advertises unresolvable name: {name}",
               file=sys.stderr)
     ok = not (missing or unexpected or broken)
-    print(f"check_api_surface: {len(actual)} names, "
+    print(f"check_api_surface: {mod} {len(actual)} names, "
           f"{'OK' if ok else 'DRIFT DETECTED'}")
     return 0 if ok else 1
+
+
+def main() -> int:
+    import repro.core
+    import repro.core.plan
+
+    rc = check_surface(repro.core, EXPECTED)
+    rc |= check_surface(repro.core.plan, EXPECTED_PLAN)
+    return rc
 
 
 if __name__ == "__main__":
