@@ -457,18 +457,148 @@ def bench_shape(quick):
     print(f"shape_bench_json,0,wrote BENCH_shape.json ({len(rows)} rows)")
 
 
+def bench_serve(quick):
+    """Coalescing query service vs sequential calls (DESIGN.md §10).
+
+    One seeded mixed workload (sort/multisearch/hull2d/lp traffic from
+    ``repro.serve.loadgen``) is run three ways: (1) the sequential
+    baseline — one compiled ``exe(*inputs, key=...)`` call per query; (2)
+    a warmed ``QueryService`` in a backlogged closed loop at
+    ``max_batch=16`` — the coalesced-throughput claim, with an **in-bench
+    bit-identity assert** against the baseline, a flat-``trace_count``
+    assert (steady traffic never retraces after ``warmup``), and the
+    acceptance floor ``>= 3x`` sequential QPS; (3) an open-loop offered-
+    load sweep on a :class:`VirtualClock`, whose latency/occupancy rows
+    are pure queueing behavior — deterministic across machines, so those
+    (plus the same-machine QPS/p99 ratios) are the ``"series"`` the CI
+    regression gate holds.  Workload sizes are fixed (no ``--quick``
+    variation) so BENCH_serve.json stays comparable across runs.
+    """
+    import json
+    from repro.core import LocalEngine
+    from repro.serve import QueryService, VirtualClock
+    from repro.serve.loadgen import (TrafficConfig, assert_results_equal,
+                                     make_suite, make_workload,
+                                     run_closed_loop, run_open_loop,
+                                     run_sequential)
+    engine = LocalEngine()
+    cfg = TrafficConfig()
+    suite = make_suite(engine, cfg)
+    workload = make_workload(suite, cfg)
+    plans = [plan for plan, _ in suite.values()]
+    B = 16
+
+    seq_results, seq_wall, seq_lat = run_sequential(engine, workload)
+    qps_seq = len(workload) / seq_wall
+
+    svc = QueryService(engine, max_batch=B, max_wait_ms=5.0,
+                       max_pending=256)
+    warm = svc.warmup(plans)
+    svc_results, svc_wall = run_closed_loop(svc, workload, concurrency=64)
+    # The acceptance assertions: identical bits, no steady-state retraces.
+    assert_results_equal(seq_results, svc_results, "bench_serve")
+    assert svc.trace_counts() == warm, \
+        f"steady traffic retraced: {warm} -> {svc.trace_counts()}"
+    qps_svc = len(workload) / svc_wall
+    speedup = qps_svc / qps_seq
+    assert speedup >= 3.0, \
+        f"coalescing must be >= 3x sequential QPS at B={B}, got {speedup:.2f}x"
+    st = svc.stats()
+    print(f"serve_closed_loop_B{B},{svc_wall/len(workload)*1e6:.0f},"
+          f"qps={qps_svc:.0f}|sequential_qps={qps_seq:.0f}"
+          f"|speedup={speedup:.1f}x|occupancy={st['mean_occupancy']:.1f}"
+          f"|dispatches={st['dispatches']}|identity=True")
+
+    # Offered-load sweep: arrivals on a virtual clock, so the measured
+    # p50/p99 waits and occupancy isolate the batching window (the
+    # deadline floor at low load, window fills at high load).
+    open_rows = []
+    for qps in (200.0, 2000.0, 20000.0, 200000.0):
+        clock = VirtualClock()
+        svc_o = QueryService(engine, max_batch=B, max_wait_ms=5.0,
+                             max_pending=64, clock=clock)
+        svc_o.warmup(plans)
+        c0 = engine.cache_info()
+        row = run_open_loop(svc_o, make_workload(suite, cfg), qps, clock)
+        c1 = engine.cache_info()
+        looked_up = (c1.hits - c0.hits) + (c1.misses - c0.misses)
+        # hit rate of plan-cache lookups during traffic (warmed: no lookups
+        # at all is reported as 1.0 — nothing ever compiled mid-flight)
+        row["cache_hit_rate"] = ((c1.hits - c0.hits) / looked_up
+                                 if looked_up else 1.0)
+        open_rows.append(row)
+        print(f"serve_open_qps{qps:.0f},{row['p99_wait_ms']*1e3:.0f},"
+              f"p50_wait_ms={row['p50_wait_ms']:.2f}"
+              f"|p99_wait_ms={row['p99_wait_ms']:.2f}"
+              f"|occupancy={row['mean_occupancy']:.2f}"
+              f"|accepted={row['accepted']}|rejected={row['rejected']}")
+
+    lo, hi = open_rows[0], open_rows[-1]
+    series = {
+        # Gated series must be deterministic across machines and runs, so
+        # only the virtual-time queueing figures qualify: occupancy and
+        # p99 headroom at the highest offered load, and the p99 *collapse*
+        # from deadline-bound (low load) to window-bound (high load) — the
+        # continuous-batching latency claim.  The wall-clock QPS speedup
+        # is asserted >= 3x in-bench above (every run, every machine) and
+        # reported under "info"; gating its run-to-run noise at 1.3x would
+        # make CI flaky, the same reason bench_shape keeps wall speedups
+        # out of its series.
+        "serve_occupancy_hiload": hi["mean_occupancy"],
+        "serve_p99_headroom_hiload": cfg_headroom(hi, 5.0),
+        "serve_p99_collapse": lo["p99_wait_ms"] / hi["p99_wait_ms"],
+    }
+    info = {"qps_speedup": speedup,
+            "qps_sequential": qps_seq, "qps_service": qps_svc,
+            "p50_latency_s": st["p50_latency_s"],
+            "p99_latency_s": st["p99_latency_s"],
+            "p99_sequential_s": float(np.percentile(seq_lat, 99)),
+            "pad_fraction": st["pad_fraction"]}
+    payload = {"bench": "serve_continuous_batching", "max_batch": B,
+               "max_wait_ms": 5.0, "n_queries": cfg.n_queries,
+               "families": list(cfg.families),
+               "backend": jax.default_backend(),
+               "cache": engine.cache_info()._asdict(),
+               "closed_loop": {"wall_s_sequential": seq_wall,
+                               "wall_s_service": svc_wall,
+                               "dispatches": st["dispatches"],
+                               "mean_occupancy": st["mean_occupancy"]},
+               "open_loop": open_rows, "series": series, "info": info}
+    with open("BENCH_serve.json", "w", encoding="utf-8") as f:
+        json.dump(payload, f, indent=2)
+    print(f"serve_bench_json,0,wrote BENCH_serve.json "
+          f"({len(open_rows)} open-loop rows)")
+
+
+def cfg_headroom(row, max_wait_ms):
+    """How far under the deadline the p99 wait sits at this load (>= 1 is
+    'windows fill before the deadline'); higher is better, deterministic."""
+    return max_wait_ms / max(row["p99_wait_ms"], 1e-9)
+
+
 BENCHES = [bench_prefix_sums, bench_random_indexing, bench_multisearch,
            bench_sorting, bench_funnel, bench_queues, bench_shuffle,
            bench_kernels, bench_moe_dispatch, bench_geometry,
-           bench_cost_model, bench_plan, bench_shape]
+           bench_cost_model, bench_plan, bench_shape, bench_serve]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="run a single benchmark by name, e.g. "
+                         "--only serve (matches bench_<name>)")
     args, _ = ap.parse_known_args()
+    benches = BENCHES
+    if args.only:
+        want = args.only if args.only.startswith("bench_") \
+            else f"bench_{args.only}"
+        benches = [b for b in BENCHES if b.__name__ == want]
+        if not benches:
+            raise SystemExit(f"no benchmark named {want}; have "
+                             f"{[b.__name__ for b in BENCHES]}")
     print("name,us_per_call,derived")
-    for b in BENCHES:
+    for b in benches:
         b(args.quick)
 
 

@@ -20,6 +20,7 @@ from .plan import (Plan, PlanStage, PlanState, execute_plan,
                    account_stage, compute_stage, custom_stage,
                    entry_stage, round_stage)
 from .api import (BoundedCache, CacheInfo, Executable, compile_plan,
+                  pad_batch,
                   sort_plan, multisearch_plan, prefix_plan, PrefixResult,
                   funnel_write_plan, bsp_plan, BSPResult,
                   hull2d_plan, hull3d_plan, lp_plan)
@@ -56,7 +57,7 @@ __all__ = [
     "Plan", "PlanStage", "PlanState", "execute_plan",
     "account_stage", "compute_stage", "custom_stage",
     "entry_stage", "round_stage",
-    "BoundedCache", "CacheInfo", "Executable", "compile_plan",
+    "BoundedCache", "CacheInfo", "Executable", "compile_plan", "pad_batch",
     "sort_plan", "multisearch_plan", "prefix_plan", "PrefixResult",
     "funnel_write_plan", "bsp_plan", "BSPResult",
     "hull2d_plan", "hull3d_plan", "lp_plan",

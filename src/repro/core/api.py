@@ -96,6 +96,14 @@ class BoundedCache:
                          evictions=self.evictions, currsize=len(self._data),
                          maxsize=self.maxsize)
 
+    def keys(self) -> tuple:
+        """Snapshot of the cached keys, LRU-first.  Read-only introspection:
+        unlike :meth:`lookup` it perturbs neither the recency order nor the
+        hit/miss counters — what a serving layer's admission control needs
+        to ask "would compiling this plan evict live work?" without lying
+        to the eviction policy."""
+        return tuple(self._data.keys())
+
     def __len__(self) -> int:
         return len(self._data)
 
@@ -187,6 +195,60 @@ class Executable:
         return self._batched.store(B, call)
 
 
+def pad_batch(inputs: tuple, n_queries: int, keys=None):
+    """Pad ``k`` stacked queries up to a fixed batch of ``n_queries``.
+
+    The serving path runs every coalesced batch through one
+    ``Executable.batch(B)`` callable at a **fixed** B: lowering a separate
+    program per occupancy k would retrace on every partial batch (each
+    distinct k is a distinct vmap lowering).  This helper makes the pad
+    explicit: each leaf of ``inputs`` (stacked on a leading axis of size
+    ``k``, with ``1 <= k <= B``) is padded to B rows by replicating its
+    last row — real, in-distribution data, so the padded tail can never
+    poison vmapped lanes with NaNs — and ``keys`` (a (k, 2) stack of PRNG
+    keys, optional) is padded the same way.
+
+    Returns ``(padded_inputs, padded_keys, valid)`` where ``valid`` is the
+    boolean numpy mask of the k live rows: callers slice every output leaf
+    with it (equivalently ``leaf[:k]``) to demultiplex, which restores
+    bit-identity with k sequential single-query calls — vmapped lanes are
+    independent, so the pad rows cannot perturb the live ones.
+    ``padded_keys`` is None when ``keys`` is None.
+
+    Padding runs on the **host** (numpy) by design: it sits on the serving
+    hot path, where per-leaf device concats would each be their own tiny
+    dispatch (and, per new shape, their own compile).  The padded arrays
+    enter the device once, inside the jitted ``batch(B)`` call.
+    """
+    import numpy as np
+    B = int(n_queries)
+    leaves = jax.tree_util.tree_leaves(tuple(inputs))
+    if not leaves:
+        raise ValueError("pad_batch: empty inputs")
+    k = int(np.shape(leaves[0])[0])
+    if k < 1:
+        raise ValueError("pad_batch: nothing to pad (k == 0)")
+    if k > B:
+        raise ValueError(f"pad_batch: {k} queries exceed the batch bound "
+                         f"B={B}")
+
+    def pad(leaf):
+        leaf = np.asarray(leaf)
+        if leaf.shape[0] != k:
+            raise ValueError(
+                f"pad_batch: inconsistent leading axis "
+                f"{leaf.shape[0]} != {k}")
+        if k == B:
+            return leaf
+        tail = np.broadcast_to(leaf[-1:], (B - k,) + leaf.shape[1:])
+        return np.concatenate([leaf, tail], axis=0)
+
+    padded = jax.tree_util.tree_map(pad, tuple(inputs))
+    padded_keys = None if keys is None else pad(keys)
+    valid = np.arange(B) < k
+    return padded, padded_keys, valid
+
+
 def compile_plan(plan: Plan, engine=None) -> Executable:
     """Module-level convenience for ``engine.compile(plan)`` (default
     engine = the shared LocalEngine)."""
@@ -218,7 +280,7 @@ from .geometry.hull3d import hull3d_plan                         # noqa: E402
 from .geometry.lp import lp_plan                                 # noqa: E402
 
 __all__ = [
-    "CacheInfo", "BoundedCache", "Executable", "compile_plan",
+    "CacheInfo", "BoundedCache", "Executable", "compile_plan", "pad_batch",
     "sort_plan", "multisearch_plan", "prefix_plan", "PrefixResult",
     "funnel_write_plan", "bsp_plan", "BSPResult",
     "hull2d_plan", "hull3d_plan", "lp_plan",

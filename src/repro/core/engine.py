@@ -127,6 +127,21 @@ class MREngine:
             self._cache = BoundedCache(self.cache_size)
         return self._cache
 
+    @staticmethod
+    def plan_key(plan):
+        """The cache key a plan compiles under.  The declared shape
+        schedule is part of the identity: two plans that differ only in
+        per-stage (V_r, M_r) footprints must not share a compiled
+        executable (DESIGN.md §9)."""
+        return ("plan", plan.fingerprint, plan.shape_fingerprint)
+
+    def plan_cached(self, plan) -> bool:
+        """Whether ``compile(plan)`` would be a cache hit right now — a
+        read-only probe (no counters, no LRU touch) for admission control:
+        the serving layer asks it before admitting a cold fingerprint that
+        would evict a hot executable (DESIGN.md §10)."""
+        return self.plan_key(plan) in self._ensure_cache()
+
     def compile(self, plan):
         """Lower a :class:`~repro.core.plan.Plan` onto this backend.
 
@@ -137,10 +152,7 @@ class MREngine:
         """
         from .api import Executable
         cache = self._ensure_cache()
-        # The declared shape schedule is part of the identity: two plans
-        # that differ only in per-stage (V_r, M_r) footprints must not
-        # share a compiled executable (DESIGN.md §9).
-        key = ("plan", plan.fingerprint, plan.shape_fingerprint)
+        key = self.plan_key(plan)
         exe = cache.lookup(key)
         if exe is None:
             exe = cache.store(key, Executable(plan, self))

@@ -1,1 +1,17 @@
+"""The serving layer: token-level continuous batching over decode slots
+(:class:`ServeEngine`) and query-level continuous batching over the plan
+cache (:class:`QueryService`; DESIGN.md §10).  Both apply the paper's
+Theorem 4.2 FIFO/bounded-I/O discipline — to tokens and to queries
+respectively — and share the injectable-clock protocol (any zero-arg
+callable returning float seconds; :class:`VirtualClock` for determinism).
+
+The load generator lives one import deeper (``repro.serve.loadgen``): it is
+a benchmark harness, not part of the serving API surface.
+"""
 from .engine import ServeEngine, Request, ServeConfig
+from .mr import QueryService, Ticket, QueueFull, VirtualClock
+
+__all__ = [
+    "ServeEngine", "Request", "ServeConfig",
+    "QueryService", "Ticket", "QueueFull", "VirtualClock",
+]

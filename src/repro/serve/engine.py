@@ -21,7 +21,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional
 
 import numpy as np
 import jax
@@ -53,12 +54,22 @@ class ServeConfig:
 
 
 class ServeEngine:
-    def __init__(self, cfg: ArchConfig, params, scfg: ServeConfig):
+    """Token-level continuous batching (see module docstring).
+
+    ``clock`` is the injectable time source shared with
+    :class:`repro.serve.mr.QueryService` — any zero-arg callable returning
+    float seconds (``time.time`` in production, a
+    :class:`~repro.serve.mr.VirtualClock` under test), so latency stats
+    are deterministic when the test controls the clock."""
+
+    def __init__(self, cfg: ArchConfig, params, scfg: ServeConfig,
+                 clock: Callable[[], float] = time.time):
         self.cfg = cfg
         self.scfg = scfg
+        self.clock = clock
         self.model = build_model(cfg)
         self.params = params
-        self.queue: List[Request] = []          # Thm 4.2 FIFO input buffer
+        self.queue: Deque[Request] = deque()    # Thm 4.2 FIFO input buffer
         self.active: List[Optional[Request]] = [None] * scfg.max_batch
         self.state = self.model.init_decode_state(scfg.max_batch,
                                                   scfg.max_len)
@@ -69,7 +80,7 @@ class ServeEngine:
         self._jit_decode = jax.jit(self.model.decode_step)
 
     def submit(self, req: Request) -> None:
-        req.submitted_at = time.time()
+        req.submitted_at = self.clock()
         req.output = []
         req._prompt_pos = 0
         self.queue.append(req)                  # FIFO order preserved
@@ -77,7 +88,7 @@ class ServeEngine:
     def _admit(self) -> None:
         for slot in range(self.scfg.max_batch):
             if self.active[slot] is None and self.queue:
-                req = self.queue.pop(0)
+                req = self.queue.popleft()      # O(1), unlike list.pop(0)
                 self.active[slot] = req
                 self.state = _zero_slot(self.state, slot)
                 self.cur_tok[slot] = int(req.prompt[0])
@@ -93,7 +104,7 @@ class ServeEngine:
             self.params, jnp.asarray(self.cur_tok), self.state)
         logits_np = np.asarray(logits)
         emitted = 0
-        now = time.time()
+        now = self.clock()
         for slot in live:
             req = self.active[slot]
             if req._prompt_pos < len(req.prompt):

@@ -1,0 +1,244 @@
+"""Closed- and open-loop load generation for :class:`QueryService`.
+
+The benchmark harness of DESIGN.md §10, modeled on the cs260r MR cluster
+simulator's benchmark style (SNIPPETS.md #1): a deterministic, config-driven
+traffic mix, a sequential one-query-per-call baseline, and an offered-load
+sweep — emitting the machine-readable rows `benchmarks/run.py bench_serve`
+writes to ``BENCH_serve.json``.
+
+Three drivers over one seeded workload:
+
+- :func:`run_sequential` — the baseline: every query is one
+  ``exe(*inputs, key=...)`` call on a compiled executable, in arrival
+  order.  What a caller without the service pays.
+- :func:`run_closed_loop` — a backlogged closed loop: up to
+  ``concurrency`` queries are outstanding at once; on :class:`QueueFull`
+  the client performs the protocol's recovery action
+  (``dispatch_oldest``) and resubmits.  Measures coalesced throughput.
+- :func:`run_open_loop` — arrivals at a fixed offered rate on a
+  :class:`VirtualClock`; batch execution is instantaneous in virtual
+  time, so the measured latencies isolate the *queueing* behavior of the
+  batching window (deadline waits vs window fills) and are deterministic
+  across machines — the series the regression gate can hold.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .mr import QueryService, QueueFull, VirtualClock
+
+
+@dataclasses.dataclass
+class Query:
+    """One generated request: which plan family, its inputs, its key."""
+
+    uid: int
+    family: str
+    plan: Any
+    inputs: Tuple
+    key: Any
+
+
+@dataclasses.dataclass
+class TrafficConfig:
+    """The deterministic workload knobs (all static, all in the JSON).
+
+    Sizes are fixed — not scaled by ``--quick`` — so the series written to
+    ``BENCH_serve.json`` stay comparable across runs and machines, the
+    same policy ``bench_shape`` follows."""
+
+    families: Tuple[str, ...] = ("sort", "multisearch", "hull2d", "lp")
+    n_queries: int = 192
+    seed: int = 0
+    # Sizes sit in the dispatch-bound regime (small per-query programs,
+    # many of them) — the regime a query service exists for, and the one
+    # where coalescing into ``batch(B)`` pays for itself.
+    sort_n: int = 128
+    sort_M: int = 64
+    ms_queries: int = 32
+    ms_pivots: int = 8
+    ms_M: int = 8
+    hull_n: int = 32
+    hull_M: int = 8
+    lp_n: int = 8
+    lp_d: int = 2
+    lp_M: int = 16
+
+
+def make_suite(engine, cfg: TrafficConfig) -> Dict[str, Tuple[Any, Callable]]:
+    """Build one plan per family plus its seeded input sampler.
+
+    Returns ``{family: (plan, sample(rng) -> inputs)}``; the plan is built
+    once (static parameters only), the sampler draws fresh query data per
+    request — the shape every request of a family shares is exactly what
+    makes them coalescible."""
+    from ..core.api import (hull2d_plan, lp_plan, multisearch_plan,
+                            sort_plan)
+    suite: Dict[str, Tuple[Any, Callable]] = {}
+    if "sort" in cfg.families:
+        plan = sort_plan(cfg.sort_n, cfg.sort_M, align=engine.aligned_nodes)
+        suite["sort"] = (plan, lambda rng: (
+            jnp.asarray(rng.normal(size=cfg.sort_n).astype(np.float32)),))
+    if "multisearch" in cfg.families:
+        plan = multisearch_plan(cfg.ms_queries, cfg.ms_pivots, cfg.ms_M,
+                                align=engine.aligned_nodes)
+        suite["multisearch"] = (plan, lambda rng: (
+            jnp.asarray(rng.normal(size=cfg.ms_queries).astype(np.float32)),
+            jnp.sort(jnp.asarray(
+                rng.normal(size=cfg.ms_pivots).astype(np.float32)))))
+    if "hull2d" in cfg.families:
+        plan = hull2d_plan(cfg.hull_n, cfg.hull_M, align=engine.aligned_nodes)
+        suite["hull2d"] = (plan, lambda rng: (
+            jnp.asarray(rng.normal(size=(cfg.hull_n, 2)).astype(np.float32)),))
+    if "lp" in cfg.families:
+        plan = lp_plan(cfg.lp_n, cfg.lp_d, cfg.lp_M)
+        suite["lp"] = (plan, lambda rng: (
+            jnp.asarray(np.arange(1, cfg.lp_d + 1, dtype=np.float32)),
+            jnp.asarray(rng.normal(size=(cfg.lp_n, cfg.lp_d))
+                        .astype(np.float32)),
+            jnp.asarray(rng.uniform(1.0, 2.0, cfg.lp_n).astype(np.float32))))
+    missing = set(cfg.families) - set(suite)
+    if missing:
+        raise ValueError(f"unknown traffic families: {sorted(missing)}")
+    return suite
+
+
+def make_workload(suite: Dict[str, Tuple[Any, Callable]],
+                  cfg: TrafficConfig) -> List[Query]:
+    """The seeded request stream: families interleaved by a seeded draw
+    (every run of the same config replays the identical arrival mix)."""
+    rng = np.random.default_rng(cfg.seed)
+    fams = sorted(suite)
+    root = jax.random.PRNGKey(cfg.seed)
+    keys = jax.random.split(root, cfg.n_queries)
+    out = []
+    for i in range(cfg.n_queries):
+        fam = fams[int(rng.integers(0, len(fams)))]
+        plan, sample = suite[fam]
+        out.append(Query(uid=i, family=fam, plan=plan,
+                         inputs=sample(rng), key=keys[i]))
+    return out
+
+
+def _flatten(result) -> List[np.ndarray]:
+    return [np.asarray(leaf) for leaf in jax.tree_util.tree_leaves(result)]
+
+
+def assert_results_equal(a: Dict[int, Any], b: Dict[int, Any],
+                         what: str) -> None:
+    """Bit-identity check between two uid -> result maps (the in-bench
+    assertion of the acceptance criteria)."""
+    if sorted(a) != sorted(b):
+        raise AssertionError(f"{what}: uid sets differ")
+    for uid in a:
+        for la, lb in zip(_flatten(a[uid]), _flatten(b[uid])):
+            if not np.array_equal(la, lb):
+                raise AssertionError(
+                    f"{what}: query {uid} diverged from the baseline")
+
+
+def run_sequential(engine, workload: Sequence[Query],
+                   timer: Callable[[], float] = time.perf_counter):
+    """The one-query-per-call baseline: compiled executables, no batching.
+
+    Returns ``(results, wall_s, latencies_s)`` — results keyed by query
+    uid, per-query wall latencies in submission order.  Executables are
+    primed (compile excluded) before timing, mirroring a warmed service."""
+    exes = {fam: engine.compile(plan)
+            for fam, (plan, _) in _suite_of(workload).items()}
+    for q in workload[:len(exes) * 2]:       # prime each family's lowering
+        jax.block_until_ready(jax.tree_util.tree_leaves(
+            exes[q.family](*q.inputs, key=q.key)))
+    results, lat = {}, []
+    t0 = timer()
+    for q in workload:
+        t1 = timer()
+        out = exes[q.family](*q.inputs, key=q.key)
+        jax.block_until_ready(jax.tree_util.tree_leaves(out))
+        lat.append(timer() - t1)
+        results[q.uid] = out
+    return results, timer() - t0, lat
+
+
+def run_closed_loop(service: QueryService, workload: Sequence[Query],
+                    concurrency: int = 64,
+                    timer: Callable[[], float] = time.perf_counter):
+    """Backlogged closed loop: keep up to ``concurrency`` queries
+    outstanding; recover from :class:`QueueFull` by dispatching the oldest
+    queue (then retrying the submit).  Returns ``(results, wall_s)``."""
+    tickets = []
+    t0 = timer()
+    for q in workload:
+        while service.pending >= concurrency:
+            service.dispatch_oldest()
+        while True:
+            try:
+                tickets.append(service.submit(q.plan, *q.inputs, key=q.key))
+                break
+            except QueueFull:
+                if service.dispatch_oldest() == 0:
+                    raise          # nothing to free: a config error
+    service.drain()
+    wall = timer() - t0
+    results = {q.uid: t.value for q, t in zip(workload, tickets)}
+    return results, wall
+
+
+def run_open_loop(service: QueryService, workload: Sequence[Query],
+                  offered_qps: float, clock: VirtualClock) -> Dict[str, Any]:
+    """Open-loop arrivals at ``offered_qps`` on the service's virtual
+    clock; rejected arrivals are dropped (counted), not retried.
+
+    Execution is instantaneous in virtual time, so per-query latency is
+    pure batching-window queueing delay — the deterministic
+    latency-vs-offered-load curve: low load saturates at the
+    ``max_wait_ms`` deadline, high load fills windows before the deadline
+    and latency collapses.  Returns the row dict for ``BENCH_serve.json``."""
+    if service.clock is not clock:
+        raise ValueError("run_open_loop needs the service to run on the "
+                         "given VirtualClock")
+    accepted, rejected = [], 0
+    for i, q in enumerate(workload):
+        t_arr = i / float(offered_qps)
+        if t_arr > clock():
+            clock.advance(t_arr - clock())
+        service.step()
+        try:
+            accepted.append(service.submit(q.plan, *q.inputs, key=q.key))
+        except QueueFull:
+            rejected += 1
+    # Let the last deadlines expire, then flush.
+    clock.advance(service.max_wait_ms / 1e3)
+    service.step()
+    service.drain()
+    lat_ms = np.asarray([t.latency for t in accepted], np.float64) * 1e3
+    occ = [t.batch_occupancy for t in accepted]
+    return {
+        "offered_qps": float(offered_qps),
+        "accepted": len(accepted), "rejected": rejected,
+        "p50_wait_ms": float(np.percentile(lat_ms, 50)) if len(lat_ms)
+        else None,
+        "p99_wait_ms": float(np.percentile(lat_ms, 99)) if len(lat_ms)
+        else None,
+        "mean_occupancy": float(np.mean(occ)) if occ else None,
+    }
+
+
+def _suite_of(workload: Sequence[Query]) -> Dict[str, Tuple[Any, Callable]]:
+    """Recover {family: (plan, None)} from a workload (plans are shared
+    per family by construction)."""
+    suite: Dict[str, Tuple[Any, Callable]] = {}
+    for q in workload:
+        suite.setdefault(q.family, (q.plan, None))
+    return suite
+
+
+__all__ = ["Query", "TrafficConfig", "make_suite", "make_workload",
+           "run_sequential", "run_closed_loop", "run_open_loop",
+           "assert_results_equal"]

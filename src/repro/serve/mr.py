@@ -1,0 +1,421 @@
+"""Continuous-batching query service over the plan cache (DESIGN.md §10).
+
+`ServeEngine` applies the paper's Theorem 4.2 invisible-funnel discipline
+to *token* rounds; this module applies the same discipline to *queries*
+over the plan/compile/execute stack (DESIGN.md §8): every algorithm family
+the engine serves — sort, multisearch, hull2d/hull3d, LP, prefix, funnel —
+is a cached `Executable` whose ``batch(B)`` runs B independent queries as
+one device program, and the service turns concurrent single-query traffic
+into those batched calls.
+
+The Thm 4.2 mapping, piece by piece:
+
+- **FIFO admission** — requests join a per-plan-fingerprint FIFO queue in
+  arrival order and leave it in arrival order (the queue discipline's
+  "unbounded receive");
+- **bounded per-round I/O** — each dispatch feeds at most ``max_batch``
+  queries (the M analogue) into one ``Executable.batch(max_batch)`` call,
+  padding partial batches with :func:`repro.core.api.pad_batch` so the
+  lowered program is traced once and reused at every occupancy;
+- **round boundaries** — dispatch happens when a queue reaches
+  ``max_batch`` (the window fills) or its oldest request has waited
+  ``max_wait_ms`` (the latency deadline) — the continuous-batching knob
+  the BSP-vs-MapReduce comparison says is the real cost separator;
+- **deferred queueing / backpressure** — admission is itself bounded:
+  when ``max_pending`` requests already wait, or admitting a cold plan
+  fingerprint would thrash the engine's LRU plan cache, ``submit`` raises
+  :class:`QueueFull` with a ``retry_after_ms`` hint instead of growing an
+  invisible backlog.
+
+Everything is synchronous and deterministic: there is no event loop, the
+caller pumps :meth:`QueryService.step` (or lets ``submit`` auto-dispatch
+full windows and :meth:`Ticket.wait` flush stragglers), and time comes
+from an injectable ``clock`` — ``time.monotonic`` in production,
+:class:`VirtualClock` under test — so latency accounting is exact and
+replayable on every backend (Reference/Local/Sharded/Pallas alike).
+
+>>> import numpy as np
+>>> import jax.numpy as jnp
+>>> from repro.core import LocalEngine, sort_plan
+>>> from repro.serve import QueryService, VirtualClock
+>>> clock = VirtualClock()
+>>> svc = QueryService(LocalEngine(), max_batch=2, max_wait_ms=5.0,
+...                    clock=clock)
+>>> plan = sort_plan(4, 4)
+>>> t1 = svc.submit(plan, jnp.array([3., 1., 2., 0.]))
+>>> t1.done                              # window not full: still queued
+False
+>>> t2 = svc.submit(plan, jnp.array([9., 8., 7., 6.]))   # fills the window
+>>> t1.done and t2.done                  # -> one batched dispatch of both
+True
+>>> np.asarray(t1.wait().values).tolist()
+[0.0, 1.0, 2.0, 3.0]
+>>> t3 = svc.submit(plan, jnp.array([5., 4., 6., 7.]))   # partial window
+>>> _ = clock.advance(0.005)             # ... the 5 ms deadline passes
+>>> svc.step()                           # deadline sweep dispatches it
+1
+>>> float(t3.latency) == 0.005
+True
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict, deque
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..core.api import pad_batch
+from ..core.plan import Plan
+
+
+class VirtualClock:
+    """A deterministic, manually-advanced clock (seconds).
+
+    Drop-in for the ``clock`` slot of :class:`QueryService` and
+    ``ServeEngine``: calling it returns the current virtual time and
+    :meth:`advance` moves it forward — nothing else does, so latency and
+    deadline behavior under test is exact, not wall-clock-flaky.
+    """
+
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+
+    def __call__(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> float:
+        """Move time forward by ``dt`` seconds and return the new time."""
+        if dt < 0:
+            raise ValueError(f"clocks do not run backwards (dt={dt})")
+        self._t += float(dt)
+        return self._t
+
+
+class QueueFull(RuntimeError):
+    """Admission rejected: the service is at its Thm 4.2 window bound.
+
+    Carries ``retry_after_ms`` — the client-facing hint for when capacity
+    should free (one batching window), and ``reason`` — which bound fired
+    (``"pending"`` for the inflight budget, ``"plan-cache"`` for the LRU
+    thrash guard)."""
+
+    def __init__(self, reason: str, detail: str, retry_after_ms: float):
+        super().__init__(f"{detail} (retry after {retry_after_ms:.1f} ms)")
+        self.reason = reason
+        self.retry_after_ms = float(retry_after_ms)
+
+
+@dataclasses.dataclass
+class Ticket:
+    """One submitted query: its identity, payload, and timing trace.
+
+    ``submitted_at`` / ``dispatched_at`` / ``completed_at`` are stamps of
+    the service clock; ``batch_occupancy`` records how many live queries
+    shared its dispatch (the coalescing win); ``value`` is the per-query
+    result, demultiplexed bit-identically to a sequential call."""
+
+    uid: int
+    plan_name: str
+    submitted_at: float
+    inputs: Tuple = ()
+    key: Any = None
+    dispatched_at: Optional[float] = None
+    completed_at: Optional[float] = None
+    batch_occupancy: Optional[int] = None
+    value: Any = None
+    done: bool = False
+    _service: Any = dataclasses.field(default=None, repr=False)
+    _plan_key: Any = dataclasses.field(default=None, repr=False)
+
+    @property
+    def latency(self) -> Optional[float]:
+        """completion - submission in clock seconds (None while pending)."""
+        if self.completed_at is None:
+            return None
+        return self.completed_at - self.submitted_at
+
+    @property
+    def queue_delay(self) -> Optional[float]:
+        """dispatch - submission in clock seconds (None while queued)."""
+        if self.dispatched_at is None:
+            return None
+        return self.dispatched_at - self.submitted_at
+
+    def wait(self):
+        """Synchronously force completion and return the result value.
+
+        The no-event-loop driver: if the ticket is still queued, dispatch
+        its plan's queue (repeatedly, if others are ahead) until this
+        query has run — the sync-client analogue of awaiting a future."""
+        while not self.done:
+            self._service._dispatch(self._plan_key)
+        return self.value
+
+
+class QueryService:
+    """Continuous-batching front end over ``engine.compile`` (DESIGN.md §10).
+
+    ``submit(plan, *inputs, key=...)`` enqueues one query and returns a
+    :class:`Ticket`; concurrent same-fingerprint queries coalesce into a
+    single ``Executable.batch(max_batch)`` call, dispatched when the
+    window fills or the oldest request exceeds ``max_wait_ms`` (pumped by
+    :meth:`step`).  Partial windows are padded — never re-lowered — via
+    :func:`repro.core.api.pad_batch`, and per-query outputs are
+    demultiplexed bit-identically to sequential calls.
+
+    Admission control is the Theorem 4.2 bound made explicit: at most
+    ``max_pending`` queries wait across all queues, and a query for a
+    *cold* plan fingerprint is rejected while the distinct plans in
+    flight would thrash the engine's LRU plan cache.  Both rejections
+    raise :class:`QueueFull` with a retry-after hint.  ``warmup(plans)``
+    pre-compiles and pre-traces hot fingerprints so steady traffic runs
+    with zero retraces.
+    """
+
+    def __init__(self, engine, *, max_batch: int = 16,
+                 max_wait_ms: float = 5.0, max_pending: int = 256,
+                 clock: Callable[[], float] = time.monotonic):
+        if int(max_batch) < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if int(max_pending) < int(max_batch):
+            raise ValueError(
+                f"max_pending={max_pending} below max_batch={max_batch}: "
+                f"the admission window could never fill one batch")
+        self.engine = engine
+        self.max_batch = int(max_batch)
+        self.max_wait_ms = float(max_wait_ms)
+        self.max_pending = int(max_pending)
+        self.clock = clock
+        self._queues: "OrderedDict[Any, deque]" = OrderedDict()
+        self._plans: Dict[Any, Plan] = {}
+        self._exes: Dict[Any, Any] = {}
+        self._uid = 0
+        self.finished: List[Ticket] = []
+        # service-level counters (host ints; stats() summarizes them)
+        self.submitted = 0
+        self.completed = 0
+        self.rejected = 0
+        self.dispatches = 0
+        self.coalesced = 0           # live queries over all dispatches
+        self.pad_slots = 0           # wasted lanes over all dispatches
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def pending(self) -> int:
+        """Queries admitted but not yet dispatched, across all queues."""
+        return sum(len(q) for q in self._queues.values())
+
+    def _active_plan_keys(self) -> List:
+        return [pk for pk, q in self._queues.items() if q]
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, plan: Plan, *inputs, key=None) -> Ticket:
+        """Admit one query for ``plan`` (FIFO per fingerprint) or raise
+        :class:`QueueFull`.
+
+        ``key`` is the query's PRNG key; None resolves to the plan's
+        ``default_seed`` key *here* (not at batch time), so a coalesced
+        query sees exactly the key a sequential ``exe(*inputs, key=None)``
+        would — bit-identity includes the randomness.  A queue that
+        reaches ``max_batch`` dispatches immediately from inside
+        ``submit`` (the window-full path); deadline dispatch of partial
+        windows happens in :meth:`step`."""
+        now = self.clock()
+        if self.pending >= self.max_pending:
+            self.rejected += 1
+            raise QueueFull(
+                "pending",
+                f"admission window full: {self.pending} queries pending "
+                f">= max_pending={self.max_pending}", self.max_wait_ms)
+        pk = self.engine.plan_key(plan)
+        if pk not in self._queues and not self.engine.plan_cached(plan):
+            # LRU thrash guard: compiling a cold fingerprint while this
+            # many distinct plans have queued work would evict an
+            # executable another admitted query is about to run.
+            cap = self.engine.cache_info().maxsize
+            active = len(self._active_plan_keys())
+            if active + 1 > max(1, cap):
+                self.rejected += 1
+                raise QueueFull(
+                    "plan-cache",
+                    f"plan-cache thrash: {active} distinct plans already "
+                    f"queued, cache holds {cap}", self.max_wait_ms)
+        if key is None:
+            key = jax.random.PRNGKey(plan.default_seed)
+        self._uid += 1
+        ticket = Ticket(uid=self._uid, plan_name=plan.name,
+                        submitted_at=now, inputs=tuple(inputs), key=key,
+                        _service=self, _plan_key=pk)
+        self._plans[pk] = plan
+        self._queues.setdefault(pk, deque()).append(ticket)
+        self.submitted += 1
+        if len(self._queues[pk]) >= self.max_batch:
+            self._dispatch(pk)
+        return ticket
+
+    def warmup(self, plans: Sequence[Plan],
+               examples: Optional[Sequence[Tuple]] = None) -> Dict[str, int]:
+        """Pre-trace the hot fingerprints so steady traffic never retraces.
+
+        For each plan: compile it (populating the engine's plan cache) and
+        run one padded ``batch(max_batch)`` call — the exact callable every
+        later dispatch reuses — on example inputs (``examples[i]``, or
+        synthesized from the plan's ``input_spec``).  Returns
+        ``{plan.name: trace_count}`` so callers can assert the counts stay
+        flat afterwards."""
+        report = {}
+        for i, plan in enumerate(plans):
+            ex = (examples[i] if examples is not None
+                  else _synthesize_inputs(plan))
+            pk = self.engine.plan_key(plan)
+            exe = self.engine.compile(plan)
+            self._plans.setdefault(pk, plan)
+            self._exes[pk] = exe
+            stacked = tuple(jnp.asarray(x)[None] for x in ex)
+            keys = jax.random.PRNGKey(plan.default_seed)[None]
+            padded, pkeys, _ = pad_batch(stacked, self.max_batch, keys=keys)
+            out = exe.batch(self.max_batch)(*padded, keys=pkeys)
+            jax.block_until_ready(jax.tree_util.tree_leaves(out))
+            report[plan.name] = exe.trace_count
+        return report
+
+    # -- dispatch ------------------------------------------------------------
+    def step(self, now: Optional[float] = None) -> int:
+        """One driver tick: dispatch every queue that is due.
+
+        Due means the window is full (``>= max_batch`` queued — normally
+        already dispatched by ``submit``, but a caller-managed backlog can
+        accumulate) or the oldest request has waited ``max_wait_ms``.
+        Returns the number of queries completed this tick."""
+        now = self.clock() if now is None else now
+        done = 0
+        for pk in list(self._queues):
+            q = self._queues[pk]
+            while len(q) >= self.max_batch:
+                done += self._dispatch(pk)
+            if q and (now - q[0].submitted_at) * 1e3 >= self.max_wait_ms:
+                done += self._dispatch(pk)
+        return done
+
+    def drain(self) -> int:
+        """Dispatch everything queued, deadlines notwithstanding (the
+        end-of-traffic flush).  Returns the number completed."""
+        done = 0
+        while self.pending:
+            for pk in self._active_plan_keys():
+                done += self._dispatch(pk)
+        return done
+
+    def dispatch_oldest(self) -> int:
+        """Dispatch the queue whose head has waited longest (the
+        closed-loop client's recovery action after :class:`QueueFull`).
+        Returns the number completed (0 when idle)."""
+        heads = [(q[0].submitted_at, pk)
+                 for pk, q in self._queues.items() if q]
+        if not heads:
+            return 0
+        _, pk = min(heads)
+        return self._dispatch(pk)
+
+    def _dispatch(self, pk) -> int:
+        """Coalesce up to ``max_batch`` queries from one queue into a
+        single padded ``Executable.batch`` call and demultiplex.
+
+        Stacking, padding and demultiplexing all run on the host (numpy):
+        the device sees exactly one jitted call per dispatch.  Doing any
+        of it with device ops would issue dozens of tiny dispatches per
+        batch — and a fresh compile per new slice shape — which in the
+        dispatch-bound serving regime costs more than the batch itself."""
+        q = self._queues.get(pk)
+        if not q:
+            return 0
+        k = min(len(q), self.max_batch)
+        batch = [q.popleft() for _ in range(k)]
+        dispatched_at = self.clock()
+        exe = self._exes.get(pk)
+        if exe is None:
+            exe = self._exes[pk] = self.engine.compile(self._plans[pk])
+        n_inputs = len(batch[0].inputs)
+        stacked = tuple(
+            np.stack([np.asarray(t.inputs[i]) for t in batch])
+            for i in range(n_inputs))
+        keys = np.stack([np.asarray(t.key) for t in batch])
+        padded, pkeys, _ = pad_batch(stacked, self.max_batch, keys=keys)
+        out = exe.batch(self.max_batch)(*padded, keys=pkeys)
+        leaves, treedef = jax.tree_util.tree_flatten(out)
+        host = [np.asarray(leaf) for leaf in leaves]   # one transfer each
+        completed_at = self.clock()
+        for i, t in enumerate(batch):
+            t.value = jax.tree_util.tree_unflatten(
+                treedef, [leaf[i] for leaf in host])
+            t.dispatched_at = dispatched_at
+            t.completed_at = completed_at
+            t.batch_occupancy = k
+            t.done = True
+        self.finished.extend(batch)
+        self.dispatches += 1
+        self.coalesced += k
+        self.pad_slots += self.max_batch - k
+        self.completed += k
+        return k
+
+    # -- reporting -----------------------------------------------------------
+    def trace_counts(self) -> Dict[str, int]:
+        """Per-plan lowering counts of the executables this service has
+        driven — flat across steady traffic iff warmup covered it."""
+        return {self._plans[pk].name: exe.trace_count
+                for pk, exe in self._exes.items()}
+
+    def stats(self) -> Dict[str, Any]:
+        """Service-level counters plus latency percentiles (clock seconds)
+        over finished queries and the engine's plan-cache counters."""
+        lat = np.asarray([t.latency for t in self.finished], np.float64)
+        out = {
+            "submitted": self.submitted, "completed": self.completed,
+            "rejected": self.rejected, "pending": self.pending,
+            "dispatches": self.dispatches,
+            "mean_occupancy": (self.coalesced / self.dispatches
+                               if self.dispatches else None),
+            "pad_fraction": (self.pad_slots
+                             / (self.dispatches * self.max_batch)
+                             if self.dispatches else None),
+            "p50_latency_s": float(np.percentile(lat, 50)) if lat.size
+            else None,
+            "p99_latency_s": float(np.percentile(lat, 99)) if lat.size
+            else None,
+            "cache": self.engine.cache_info()._asdict(),
+            "traces": self.trace_counts(),
+        }
+        return out
+
+
+def _synthesize_inputs(plan: Plan) -> Tuple:
+    """Deterministic example inputs for :meth:`QueryService.warmup`, built
+    from the plan's declared ``input_spec`` (shape, dtype) pairs: a small
+    non-negative ramp per input — valid for every builder in this repo
+    (sorts of duplicates, degenerate hulls and singular LP bases trace
+    fine; tracing is shape-driven).  Plans without a spec need explicit
+    ``examples``."""
+    if plan.input_spec is None:
+        raise ValueError(
+            f"plan {plan.name!r} declares no input_spec; pass warmup "
+            f"examples explicitly")
+    out = []
+    for i, spec in enumerate(plan.input_spec):
+        if spec is None:
+            raise ValueError(
+                f"plan {plan.name!r} input {i} is unspecified; pass warmup "
+                f"examples explicitly")
+        shape, dtype = spec
+        dtype = jnp.dtype(jnp.float32 if dtype is None else dtype)
+        size = int(np.prod(shape)) if len(shape) else 1
+        ramp = (jnp.arange(size, dtype=jnp.int32) % 7).astype(dtype)
+        out.append(ramp.reshape(shape))
+    return tuple(out)
+
+
+__all__ = ["QueryService", "Ticket", "QueueFull", "VirtualClock"]

@@ -1,0 +1,389 @@
+"""The query-serving layer: coalescing, admission control, determinism.
+
+Pins the DESIGN.md §10 contracts:
+
+- a coalesced ``QueryService`` dispatch returns results **bit-identical**
+  to sequential ``exe(*inputs, key=...)`` calls, across all seven plan
+  families (sort / multisearch / hull2d / hull3d / lp / prefix / funnel)
+  on Reference and Local;
+- both dispatch triggers fire: window-full (inside ``submit``) and
+  deadline (``step`` on an expired ``max_wait_ms``), driven by a
+  deterministic :class:`VirtualClock`;
+- ``pad_batch`` pads partial windows by tail replication and never causes
+  a retrace — every occupancy k < B reuses the one ``batch(B)`` lowering;
+- admission control rejects with :class:`QueueFull` + ``retry_after_ms``
+  on both bounds (inflight budget, plan-LRU thrash guard), and
+  ``warmup`` leaves steady traffic at zero retraces;
+- latency accounting on an injected clock is exact, and ``ServeEngine``
+  shares the clock protocol (its FIFO is a ``deque``).
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (LocalEngine, ReferenceEngine, funnel_write_plan,
+                        hull2d_plan, hull3d_plan, lp_plan, multisearch_plan,
+                        pad_batch, prefix_plan, sort_plan)
+from repro.serve import QueryService, QueueFull, VirtualClock
+
+RNG = np.random.default_rng(7)
+
+
+# -- the seven families: (plan builder, per-query input sampler) -------------
+
+def _families(engine):
+    """{family: (plan, sample() -> inputs)} at test-tiny sizes."""
+    al = engine.aligned_nodes
+    return {
+        "sort": (sort_plan(32, 8, align=al),
+                 lambda: (jnp.asarray(RNG.normal(size=32)
+                                      .astype(np.float32)),)),
+        "multisearch": (multisearch_plan(16, 8, 8, align=al),
+                        lambda: (jnp.asarray(RNG.normal(size=16)
+                                             .astype(np.float32)),
+                                 jnp.sort(jnp.asarray(
+                                     RNG.normal(size=8)
+                                     .astype(np.float32))))),
+        "hull2d": (hull2d_plan(24, 8, align=al),
+                   lambda: (jnp.asarray(RNG.normal(size=(24, 2))
+                                        .astype(np.float32)),)),
+        "hull3d": (hull3d_plan(8, 8),
+                   lambda: (jnp.asarray(RNG.normal(size=(8, 3))
+                                        .astype(np.float32)),)),
+        "lp": (lp_plan(8, 2, 8),
+               lambda: (jnp.asarray([1.0, 2.0], dtype=jnp.float32),
+                        jnp.asarray(RNG.normal(size=(8, 2))
+                                    .astype(np.float32)),
+                        jnp.asarray(RNG.uniform(1.0, 2.0, 8)
+                                    .astype(np.float32)))),
+        "prefix": (prefix_plan(32, 8, physical=True),
+                   lambda: (jnp.asarray(RNG.integers(0, 9, 32)
+                                        .astype(np.int32)),)),
+        "funnel": (funnel_write_plan(16, 8, 8, jnp.add, identity=0.0),
+                   lambda: (jnp.asarray(RNG.integers(0, 8, 16)
+                                        .astype(np.int32)),
+                            jnp.asarray(RNG.normal(size=16)
+                                        .astype(np.float32)),
+                            jnp.zeros(8, jnp.float32))),
+    }
+
+
+def _leaves(result):
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(result)]
+
+
+def assert_tree_equal(a, b, ctx=""):
+    la, lb = _leaves(a), _leaves(b)
+    assert len(la) == len(lb), ctx
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(x, y, err_msg=ctx)
+
+
+# -- pad_batch (the no-retrace helper) ---------------------------------------
+
+class TestPadBatch:
+    def test_mask_and_tail_replication(self):
+        x = jnp.arange(3, dtype=jnp.float32)[:, None] * jnp.ones((3, 4))
+        padded, keys, valid = pad_batch((x,), 5)
+        assert padded[0].shape == (5, 4)
+        assert keys is None
+        np.testing.assert_array_equal(valid, [True, True, True, False,
+                                              False])
+        # padding rows replicate the last real row: in-distribution lanes
+        np.testing.assert_array_equal(np.asarray(padded[0][3]),
+                                      np.asarray(x[2]))
+        np.testing.assert_array_equal(np.asarray(padded[0][4]),
+                                      np.asarray(x[2]))
+
+    def test_full_batch_is_noop(self):
+        x = jnp.arange(4, dtype=jnp.float32)
+        padded, _, valid = pad_batch((x,), 4)
+        np.testing.assert_array_equal(np.asarray(padded[0]), np.asarray(x))
+        assert valid.all()
+
+    def test_keys_padded_alongside(self):
+        keys = jax.random.split(jax.random.PRNGKey(0), 2)
+        padded, pkeys, _ = pad_batch((jnp.zeros((2, 3)),), 4, keys=keys)
+        assert pkeys.shape == (4, 2)
+        np.testing.assert_array_equal(np.asarray(pkeys[2]),
+                                      np.asarray(keys[1]))
+
+    def test_overflow_and_empty_raise(self):
+        with pytest.raises(ValueError, match="exceed"):
+            pad_batch((jnp.zeros((5,)),), 4)
+        with pytest.raises(ValueError, match="nothing to pad"):
+            pad_batch((jnp.zeros((0, 3)),), 4)
+
+    def test_every_occupancy_reuses_one_lowering(self):
+        """k = 1..B-1 padded dispatches add **zero** traces beyond the
+        first batch(B) lowering — the whole point of padding."""
+        eng = LocalEngine()
+        B = 4
+        exe = eng.compile(sort_plan(32, 8, align=eng.aligned_nodes))
+        batched = exe.batch(B)
+        key = jax.random.PRNGKey(0)
+        full = jnp.stack([jnp.asarray(RNG.normal(size=32)
+                                      .astype(np.float32))
+                          for _ in range(B)])
+        keys = jax.random.split(key, B)
+        jax.block_until_ready(jax.tree_util.tree_leaves(
+            batched(full, keys=keys)))
+        traces = exe.trace_count
+        for k in range(1, B):
+            padded, pkeys, _ = pad_batch((full[:k],), B, keys=keys[:k])
+            jax.block_until_ready(jax.tree_util.tree_leaves(
+                batched(*padded, keys=pkeys)))
+        assert exe.trace_count == traces
+
+
+# -- coalesced == sequential, all seven families -----------------------------
+
+class TestCoalescedBitIdentity:
+    @pytest.mark.parametrize("make_engine", [ReferenceEngine, LocalEngine],
+                             ids=["ref", "local"])
+    @pytest.mark.parametrize("family", ["sort", "multisearch", "hull2d",
+                                        "hull3d", "lp", "prefix", "funnel"])
+    def test_matches_sequential(self, make_engine, family):
+        eng = make_engine()
+        plan, sample = _families(eng)[family]
+        B, extra = 3, 2                      # one full window + stragglers
+        queries = [sample() for _ in range(B + extra)]
+        keys = jax.random.split(jax.random.PRNGKey(11), B + extra)
+
+        exe = eng.compile(plan)
+        seq = [exe(*q, key=k) for q, k in zip(queries, keys)]
+
+        clock = VirtualClock()
+        svc = QueryService(eng, max_batch=B, max_wait_ms=5.0, clock=clock)
+        tickets = [svc.submit(plan, *q, key=k)
+                   for q, k in zip(queries, keys)]
+        assert all(t.done for t in tickets[:B])      # window-full dispatch
+        clock.advance(0.005)
+        svc.step()                                    # deadline flush
+        assert all(t.done for t in tickets)
+        for i, (t, s) in enumerate(zip(tickets, seq)):
+            assert_tree_equal(t.value, s, ctx=f"{family} query {i}")
+        assert tickets[0].batch_occupancy == B
+        assert tickets[-1].batch_occupancy == extra
+
+    def test_default_key_matches_sequential_default(self):
+        """key=None resolves at submit to the plan's default_seed key —
+        the sequential exe(*inputs, key=None) behavior, not batch's."""
+        eng = LocalEngine()
+        plan = sort_plan(32, 8, align=eng.aligned_nodes)
+        x = jnp.asarray(RNG.normal(size=32).astype(np.float32))
+        seq = eng.compile(plan)(x, key=None)
+        svc = QueryService(eng, max_batch=2, clock=VirtualClock())
+        t = svc.submit(plan, x)
+        svc.drain()
+        assert_tree_equal(t.value, seq, ctx="default key")
+
+
+# -- dispatch triggers and the driver loop -----------------------------------
+
+class TestDispatchPaths:
+    def _svc(self, B=4, wait_ms=5.0, **kw):
+        eng = LocalEngine()
+        clock = VirtualClock()
+        svc = QueryService(eng, max_batch=B, max_wait_ms=wait_ms,
+                           clock=clock, **kw)
+        plan = sort_plan(32, 8, align=eng.aligned_nodes)
+        x = lambda: jnp.asarray(RNG.normal(size=32).astype(np.float32))
+        return svc, clock, plan, x
+
+    def test_window_full_dispatches_inside_submit(self):
+        svc, clock, plan, x = self._svc(B=4)
+        ts = [svc.submit(plan, x()) for _ in range(4)]
+        assert all(t.done for t in ts)
+        assert svc.dispatches == 1 and svc.pending == 0
+
+    def test_deadline_dispatches_partial_window(self):
+        svc, clock, plan, x = self._svc(B=4, wait_ms=5.0)
+        t = svc.submit(plan, x())
+        assert svc.step() == 0               # deadline not reached: holds
+        assert not t.done
+        clock.advance(0.004999)
+        assert svc.step() == 0               # still 1 us early
+        clock.advance(0.000001)
+        assert svc.step() == 1               # exactly at the deadline
+        assert t.done and t.batch_occupancy == 1
+
+    def test_wait_forces_completion(self):
+        svc, clock, plan, x = self._svc(B=4)
+        t = svc.submit(plan, x())
+        out = t.wait()
+        assert t.done and out is t.value
+
+    def test_drain_flushes_multiple_queues(self):
+        svc, clock, plan, x = self._svc(B=4)
+        eng = svc.engine
+        plan2 = sort_plan(64, 8, align=eng.aligned_nodes)
+        svc.submit(plan, x())
+        svc.submit(plan2, jnp.asarray(RNG.normal(size=64)
+                                      .astype(np.float32)))
+        assert svc.pending == 2
+        assert svc.drain() == 2
+        assert svc.pending == 0
+
+    def test_dispatch_oldest_picks_longest_waiting_head(self):
+        svc, clock, plan, x = self._svc(B=4)
+        eng = svc.engine
+        plan2 = sort_plan(64, 8, align=eng.aligned_nodes)
+        t_old = svc.submit(plan, x())
+        clock.advance(0.001)
+        t_new = svc.submit(plan2, jnp.asarray(RNG.normal(size=64)
+                                              .astype(np.float32)))
+        svc.dispatch_oldest()
+        assert t_old.done and not t_new.done
+
+
+# -- admission control (the Thm 4.2 bounds) ----------------------------------
+
+class TestBackpressure:
+    def test_pending_budget_rejects_with_retry_hint(self):
+        eng = LocalEngine()
+        svc = QueryService(eng, max_batch=4, max_wait_ms=7.5,
+                           max_pending=4, clock=VirtualClock())
+        # two plans so neither queue fills its window
+        p1 = sort_plan(32, 8, align=eng.aligned_nodes)
+        p2 = sort_plan(64, 8, align=eng.aligned_nodes)
+        for plan, n in ((p1, 32), (p2, 64), (p1, 32), (p2, 64)):
+            svc.submit(plan, jnp.asarray(RNG.normal(size=n)
+                                         .astype(np.float32)))
+        with pytest.raises(QueueFull) as ei:
+            svc.submit(p1, jnp.asarray(RNG.normal(size=32)
+                                       .astype(np.float32)))
+        assert ei.value.reason == "pending"
+        assert ei.value.retry_after_ms == 7.5
+        assert svc.rejected == 1
+        # capacity frees after a dispatch; the retry then succeeds
+        svc.dispatch_oldest()
+        t = svc.submit(p1, jnp.asarray(RNG.normal(size=32)
+                                       .astype(np.float32)))
+        assert t is not None
+
+    def test_cold_plan_thrash_guard(self):
+        eng = LocalEngine()
+        eng.cache_size = 1                   # before first compile
+        svc = QueryService(eng, max_batch=4, clock=VirtualClock())
+        p1 = sort_plan(32, 8, align=eng.aligned_nodes)
+        p2 = sort_plan(64, 8, align=eng.aligned_nodes)
+        svc.submit(p1, jnp.asarray(RNG.normal(size=32)
+                                   .astype(np.float32)))
+        with pytest.raises(QueueFull) as ei:
+            svc.submit(p2, jnp.asarray(RNG.normal(size=64)
+                                       .astype(np.float32)))
+        assert ei.value.reason == "plan-cache"
+        # a *warm* fingerprint is always admissible: drain, compile p2
+        # sequentially, resubmit — no rejection
+        svc.drain()
+        eng.compile(p2)
+        t = svc.submit(p2, jnp.asarray(RNG.normal(size=64)
+                                       .astype(np.float32)))
+        assert not t.done
+
+    def test_config_validation(self):
+        eng = LocalEngine()
+        with pytest.raises(ValueError, match="max_batch"):
+            QueryService(eng, max_batch=0)
+        with pytest.raises(ValueError, match="max_pending"):
+            QueryService(eng, max_batch=8, max_pending=4)
+
+
+# -- warmup: steady traffic at zero retraces ---------------------------------
+
+class TestWarmup:
+    def test_steady_traffic_never_retraces(self):
+        eng = LocalEngine()
+        clock = VirtualClock()
+        svc = QueryService(eng, max_batch=3, clock=clock)
+        fams = _families(eng)
+        plans = [fams[f][0] for f in ("sort", "multisearch", "prefix")]
+        warm = svc.warmup(plans)
+        assert set(warm) == {p.name for p in plans}
+        misses0 = eng.cache_info().misses
+        for _ in range(3):                   # three full windows per plan
+            for f in ("sort", "multisearch", "prefix"):
+                plan, sample = fams[f]
+                for _ in range(3):
+                    svc.submit(plan, *sample())
+        clock.advance(0.005)
+        svc.step()
+        assert svc.pending == 0
+        assert svc.trace_counts() == warm    # flat: zero retraces
+        assert eng.cache_info().misses == misses0   # and zero new compiles
+
+    def test_synthesizes_examples_for_all_seven_families(self):
+        """Every builder declares an input_spec warmup can synthesize from
+        (shapes and dtypes match the spec); actually pre-tracing each
+        family's batch lowering is covered by the bit-identity matrix, so
+        only one representative family runs the full warmup here."""
+        from repro.serve.mr import _synthesize_inputs
+        eng = LocalEngine()
+        plans = [p for p, _ in _families(eng).values()]
+        for plan in plans:
+            ex = _synthesize_inputs(plan)
+            assert len(ex) == len(plan.input_spec)
+            for got, (shape, dtype) in zip(ex, plan.input_spec):
+                assert tuple(got.shape) == tuple(shape), plan.name
+                if dtype is not None:
+                    assert got.dtype == jnp.dtype(dtype), plan.name
+        svc = QueryService(eng, max_batch=2, clock=VirtualClock())
+        report = svc.warmup(plans[-1:])      # funnel: the N >= 7 ramp case
+        assert all(c >= 1 for c in report.values())
+
+
+# -- exact latency accounting on the injected clock --------------------------
+
+class TestClockDeterminism:
+    def test_latency_and_queue_delay_are_exact(self):
+        eng = LocalEngine()
+        clock = VirtualClock(start=100.0)
+        svc = QueryService(eng, max_batch=2, max_wait_ms=10.0, clock=clock)
+        plan = sort_plan(32, 8, align=eng.aligned_nodes)
+        t1 = svc.submit(plan, jnp.asarray(RNG.normal(size=32)
+                                          .astype(np.float32)))
+        assert t1.latency is None and t1.queue_delay is None
+        clock.advance(0.003)
+        t2 = svc.submit(plan, jnp.asarray(RNG.normal(size=32)
+                                          .astype(np.float32)))
+        assert t1.done and t2.done           # window of 2 filled
+        assert t1.submitted_at == 100.0
+        assert t1.latency == pytest.approx(0.003)
+        assert t2.latency == 0.0             # dispatched on arrival
+        assert t1.queue_delay == pytest.approx(0.003)
+        st = svc.stats()
+        assert st["completed"] == 2 and st["mean_occupancy"] == 2.0
+
+    def test_virtual_clock_refuses_to_rewind(self):
+        clock = VirtualClock()
+        with pytest.raises(ValueError):
+            clock.advance(-1.0)
+
+
+# -- ServeEngine shares the protocol (satellite 1) ---------------------------
+
+class TestServeEngineProtocol:
+    def test_fifo_is_a_deque_with_injected_clock(self):
+        from collections import deque
+        from repro.configs import get_config
+        from repro.models import build_model
+        from repro.serve import Request, ServeConfig, ServeEngine
+        cfg = get_config("tinyllama-1.1b", reduced=True)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        clock = VirtualClock(start=5.0)
+        eng = ServeEngine(cfg, params, ServeConfig(max_batch=2, max_len=64),
+                          clock=clock)
+        assert isinstance(eng.queue, deque)
+        rng = np.random.default_rng(0)
+        eng.submit(Request(uid=0,
+                           prompt=rng.integers(0, cfg.vocab_size, 4)
+                           .astype(np.int32),
+                           max_new_tokens=2))
+        assert eng.queue[0].submitted_at == 5.0     # stamped off the clock
+        clock.advance(1.0)
+        done = eng.run_until_drained()
+        assert len(done) == 1
+        assert done[0].finished_at == 6.0           # deterministic stamps

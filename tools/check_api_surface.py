@@ -4,15 +4,23 @@
 The plan/compile/execute split made ``repro.core`` the public query surface
 (DESIGN.md §8), and the shape schedule made ``repro.core.plan`` a public
 module in its own right (PlanStage carries the documented per-stage
-``n_nodes`` footprint field; DESIGN.md §9) — so accidental drift on either
+``n_nodes`` footprint field; DESIGN.md §9), and the query service made
+``repro.serve`` the serving surface (DESIGN.md §10) — so accidental drift
 — a re-export dropped in a refactor, a private helper leaking into
-``__all__`` — is an API break.  This tool pins both surfaces exactly: it
+``__all__`` — is an API break.  This tool pins all three surfaces exactly: it
 fails when an ``__all__`` gains or loses names relative to the EXPECTED
 lists below, and when any advertised name does not actually resolve.
 Deliberate changes update EXPECTED in the same commit (the diff then
 documents the API change).  CI runs this in the docs job.
 """
 import sys
+
+EXPECTED_SERVE = frozenset([
+    # token-level continuous batching (decode slots)
+    "ServeEngine", "Request", "ServeConfig",
+    # query-level continuous batching over the plan cache (DESIGN.md §10)
+    "QueryService", "Ticket", "QueueFull", "VirtualClock",
+])
 
 EXPECTED_PLAN = frozenset([
     "Plan", "PlanStage", "PlanState", "execute_plan",
@@ -34,7 +42,7 @@ EXPECTED = frozenset([
     "Plan", "PlanStage", "PlanState", "execute_plan",
     "account_stage", "compute_stage", "custom_stage",
     "entry_stage", "round_stage",
-    "BoundedCache", "CacheInfo", "Executable", "compile_plan",
+    "BoundedCache", "CacheInfo", "Executable", "compile_plan", "pad_batch",
     "sort_plan", "multisearch_plan", "prefix_plan", "PrefixResult",
     "funnel_write_plan", "bsp_plan", "BSPResult",
     "hull2d_plan", "hull3d_plan", "lp_plan",
@@ -88,9 +96,11 @@ def check_surface(module, expected) -> int:
 def main() -> int:
     import repro.core
     import repro.core.plan
+    import repro.serve
 
     rc = check_surface(repro.core, EXPECTED)
     rc |= check_surface(repro.core.plan, EXPECTED_PLAN)
+    rc |= check_surface(repro.serve, EXPECTED_SERVE)
     return rc
 
 
