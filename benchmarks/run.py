@@ -570,6 +570,105 @@ def bench_serve(quick):
           f"({len(open_rows)} open-loop rows)")
 
 
+def bench_faults(quick):
+    """Recovery overhead and time-to-recover vs checkpoint interval
+    (DESIGN.md §11).
+
+    One seeded sort program is killed mid-flight by an injected shard
+    failure (``FaultConfig.fail_at`` pins the shuffle attempt, so the
+    scenario is identical on every machine) and recovered from its last
+    round-boundary checkpoint at ``checkpoint_every`` ∈ {1, 2, 4}.  Every
+    row carries an **in-bench bit-identity assert** — recovered outputs
+    and CostAccum must equal the fault-free run exactly.  The gated
+    ``"series"`` are deterministic and higher-is-better: replay efficiency
+    ``total_rounds / (total + replayed)`` at dense and sparse checkpoint
+    intervals (degrades if recovery starts replaying more completed
+    rounds) and checkpoint density (checkpoints per MB written — degrades
+    if the round-boundary snapshot bloats).  Wall-clock recovery overhead
+    is reported per row and under ``"info"``, never gated (same policy as
+    bench_shape/bench_serve).
+    """
+    import json
+    import tempfile
+    from repro.core import LocalEngine, execute_plan, sort_plan
+    from repro.core.recovery import (Checkpointer, FaultConfig,
+                                     run_plan_with_recovery)
+    engine = LocalEngine()
+    n, M = 512, 32             # fixed: the series must compare across runs
+    plan = sort_plan(n, M, align=engine.aligned_nodes)
+    x = jnp.asarray(np.random.default_rng(0).permutation(n)
+                    .astype(np.float32))
+    ref = jax.block_until_ready(execute_plan(plan, engine, (x,)))
+    us_free = _timeit(lambda: jax.block_until_ready(
+        execute_plan(plan, engine, (x,)).values), n=2 if quick else 3)
+
+    # Count the program's shuffle attempts, then kill the last one — the
+    # worst case for replay (maximum completed work at stake).
+    from repro.core.recovery import with_faults
+    probe = with_faults(engine, FaultConfig())
+    execute_plan(plan, probe, (x,))
+    kill_at = probe.injector.calls - 1
+
+    rows = []
+    for every in (1, 2, 4):
+        def recover(every=every, record=None):
+            with tempfile.TemporaryDirectory() as d:
+                ck = Checkpointer(d, plan=plan, every=every)
+                out, rep = run_plan_with_recovery(
+                    plan, engine, (x,),
+                    faults=FaultConfig(fail_at=(kill_at,)),
+                    checkpointer=ck)
+                jax.block_until_ready(out.values)
+                if record is not None:
+                    record.append((out, rep))
+            return out
+
+        recorded = []
+        recover(record=recorded)
+        out, rep = recorded[0]
+        assert rep.restarts == 1, "the injected failure must fire once"
+        for la, lb in zip(jax.tree_util.tree_leaves(ref),
+                          jax.tree_util.tree_leaves(out)):
+            assert np.array_equal(np.asarray(la), np.asarray(lb)), \
+                f"bench_faults: recovery at every={every} diverged"
+        us_rec = _timeit(recover, n=1 if quick else 2)
+        total = plan.total_rounds
+        rows.append({
+            "checkpoint_every": every,
+            "us_recovered": us_rec, "us_fault_free": us_free,
+            "recovery_overhead": us_rec / us_free,
+            "rounds_total": total,
+            "rounds_replayed": rep.rounds_replayed,
+            "checkpoints_written": rep.checkpoints_written,
+            "checkpoint_bytes": rep.checkpoint_bytes,
+            "parity": True,
+        })
+        print(f"faults_recover_e{every},{us_rec:.0f},"
+              f"overhead={us_rec/us_free:.2f}x"
+              f"|replayed={rep.rounds_replayed}/{total}"
+              f"|ckpts={rep.checkpoints_written}"
+              f"|ckpt_bytes={rep.checkpoint_bytes}|parity=True")
+
+    by_every = {r["checkpoint_every"]: r for r in rows}
+    eff = lambda r: r["rounds_total"] / (r["rounds_total"]
+                                         + r["rounds_replayed"])
+    series = {
+        "faults_replay_efficiency_e1": eff(by_every[1]),
+        "faults_replay_efficiency_e4": eff(by_every[4]),
+        "faults_ckpt_density": (by_every[1]["checkpoints_written"] * 1e6
+                                / by_every[1]["checkpoint_bytes"]),
+    }
+    info = {f"recovery_overhead_e{r['checkpoint_every']}":
+            r["recovery_overhead"] for r in rows}
+    payload = {"bench": "fault_recovery", "n": n, "M": M,
+               "kill_at_shuffle": kill_at,
+               "backend": jax.default_backend(),
+               "rows": rows, "series": series, "info": info}
+    with open("BENCH_faults.json", "w", encoding="utf-8") as f:
+        json.dump(payload, f, indent=2)
+    print(f"faults_bench_json,0,wrote BENCH_faults.json ({len(rows)} rows)")
+
+
 def cfg_headroom(row, max_wait_ms):
     """How far under the deadline the p99 wait sits at this load (>= 1 is
     'windows fill before the deadline'); higher is better, deterministic."""
@@ -579,7 +678,8 @@ def cfg_headroom(row, max_wait_ms):
 BENCHES = [bench_prefix_sums, bench_random_indexing, bench_multisearch,
            bench_sorting, bench_funnel, bench_queues, bench_shuffle,
            bench_kernels, bench_moe_dispatch, bench_geometry,
-           bench_cost_model, bench_plan, bench_shape, bench_serve]
+           bench_cost_model, bench_plan, bench_shape, bench_serve,
+           bench_faults]
 
 
 def main() -> None:

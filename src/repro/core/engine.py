@@ -201,13 +201,23 @@ class MREngine:
     def run_rounds(self, f: RoundFn, box: Mailbox, n_rounds: int,
                    capacity: Optional[int] = None,
                    accum: Optional[CostAccum] = None,
-                   n_nodes: Optional[int] = None
+                   n_nodes: Optional[int] = None,
+                   checkpointer=None, round_offset: int = 0
                    ) -> Tuple[Mailbox, CostAccum]:
-        """Drive R rounds, returning the final mailbox and accumulated cost."""
+        """Drive R rounds, returning the final mailbox and accumulated cost.
+
+        ``checkpointer`` (a :class:`repro.core.recovery.Checkpointer`)
+        activates the ``checkpoint_every`` policy: after each round the
+        ``{"box", "accum"}`` state is offered to ``maybe_save`` under the
+        global round index ``round_offset + r + 1`` — the round-boundary
+        snapshot recovery replays from (DESIGN.md §11)."""
         acc = accum if accum is not None else CostAccum.zero()
         for r in range(n_rounds):
             box, stats = self.run_round(f, box, r, capacity, n_nodes=n_nodes)
             acc = acc.add_round_stats(stats)
+            if checkpointer is not None:
+                checkpointer.maybe_save(round_offset + r + 1,
+                                        {"box": box, "accum": acc})
         return box, acc
 
     def run_program(self, prog: RoundProgram, box: Mailbox,
@@ -218,7 +228,8 @@ class MREngine:
                                n_nodes=prog.n_nodes)
 
     def run_stages(self, stages, box: Mailbox,
-                   accum: Optional[CostAccum] = None
+                   accum: Optional[CostAccum] = None,
+                   checkpointer=None, round_offset: int = 0
                    ) -> Tuple[Mailbox, CostAccum]:
         """Drive a heterogeneous round schedule: ``stages`` is a sequence of
         ``(round_fn, capacity)`` pairs or ``(round_fn, capacity, n_nodes)``
@@ -237,6 +248,9 @@ class MREngine:
             V = stage[2] if len(stage) > 2 else None
             box, stats = self.run_round(fn, box, r, capacity=cap, n_nodes=V)
             acc = acc.add_round_stats(stats)
+            if checkpointer is not None:
+                checkpointer.maybe_save(round_offset + r + 1,
+                                        {"box": box, "accum": acc})
         return box, acc
 
     # -- host-side validity check -------------------------------------------
@@ -364,12 +378,15 @@ class LocalEngine(MREngine):
     def run_rounds(self, f: RoundFn, box: Mailbox, n_rounds: int,
                    capacity: Optional[int] = None,
                    accum: Optional[CostAccum] = None,
-                   n_nodes: Optional[int] = None
+                   n_nodes: Optional[int] = None,
+                   checkpointer=None, round_offset: int = 0
                    ) -> Tuple[Mailbox, CostAccum]:
         acc = accum if accum is not None else CostAccum.zero()
         if not self.use_scan or n_rounds <= 1:
             return super().run_rounds(f, box, n_rounds, capacity, acc,
-                                      n_nodes=n_nodes)
+                                      n_nodes=n_nodes,
+                                      checkpointer=checkpointer,
+                                      round_offset=round_offset)
         cap = capacity if capacity is not None else box.capacity
         V = n_nodes if n_nodes is not None else box.n_nodes
         start = 0
@@ -381,16 +398,32 @@ class LocalEngine(MREngine):
             box, stats = self.run_round(f, box, 0, cap, n_nodes=V)
             acc = acc.add_round_stats(stats)
             start = 1
+            if checkpointer is not None:
+                checkpointer.maybe_save(round_offset + 1,
+                                        {"box": box, "accum": acc})
 
         def step(carry, r):
             b, a = carry
             b2, stats = self.run_round(f, b, r, cap, n_nodes=V)
             return (b2, a.add_round_stats(stats)), None
 
-        if n_rounds - start > 0:
-            (box, acc), _ = lax.scan(
-                step, (box, acc),
-                jnp.arange(start, n_rounds, dtype=jnp.int32))
+        # A checkpointer segments the scan at checkpoint boundaries
+        # (checkpoints are host-side I/O, invisible inside a trace); the
+        # shape-uniform spans between boundaries still scan, so the
+        # per-span compile caches across identical span lengths.
+        span = (n_rounds - start if checkpointer is None
+                else max(1, checkpointer.every))
+        r = start
+        while r < n_rounds:
+            stop = min(n_rounds, r + span)
+            if stop > r:
+                (box, acc), _ = lax.scan(
+                    step, (box, acc),
+                    jnp.arange(r, stop, dtype=jnp.int32))
+            if checkpointer is not None:
+                checkpointer.maybe_save(round_offset + stop,
+                                        {"box": box, "accum": acc})
+            r = stop
         return box, acc
 
 

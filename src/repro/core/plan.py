@@ -209,19 +209,33 @@ def _check_inputs(plan: Plan, inputs: Tuple) -> None:
                 f"{np.dtype(got_dtype)} — rebuild the plan for this dtype")
 
 
-def execute_plan(plan: Plan, engine, inputs: Tuple, key=None):
+def execute_plan(plan: Plan, engine, inputs: Tuple, key=None,
+                 checkpointer=None):
     """Run a plan's stages in order on ``engine`` and return its outputs.
 
     Pure whenever the plan's stage bodies are (every builder in this repo):
     safe under ``jax.jit`` / ``jax.vmap`` on array backends, which is what
     :class:`~repro.core.api.Executable` relies on for caching and batching.
-    """
+
+    ``checkpointer`` (a :class:`repro.core.recovery.Checkpointer`) turns on
+    the ``checkpoint_every`` policy: after each stage the full
+    ``{"box", "carry", "accum"}`` state is offered to ``maybe_save`` at that
+    stage's cumulative round index, producing the round-boundary snapshots
+    :func:`repro.core.recovery.run_plan_with_recovery` /
+    :func:`~repro.core.recovery.resume_plan` replay from (DESIGN.md §11).
+    Checkpointing is host-side I/O, so it is only meaningful on an eager
+    (un-jitted) execution — the compiled ``Executable`` path never passes
+    one."""
     _check_inputs(plan, inputs)
     keys = plan.split_key(key)
     carry = plan.prologue(tuple(inputs), keys)
     state = PlanState(box=None, carry=carry, accum=CostAccum.zero())
-    for stage in plan.stages:
-        state = stage.apply(engine, state)
+    if checkpointer is not None:
+        from .recovery import _apply_stages
+        state = _apply_stages(plan, engine, state, 0, checkpointer)
+    else:
+        for stage in plan.stages:
+            state = stage.apply(engine, state)
     return plan.epilogue(state)
 
 

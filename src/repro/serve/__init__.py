@@ -9,9 +9,9 @@ The load generator lives one import deeper (``repro.serve.loadgen``): it is
 a benchmark harness, not part of the serving API surface.
 """
 from .engine import ServeEngine, Request, ServeConfig
-from .mr import QueryService, Ticket, QueueFull, VirtualClock
+from .mr import DispatchError, QueryService, Ticket, QueueFull, VirtualClock
 
 __all__ = [
     "ServeEngine", "Request", "ServeConfig",
-    "QueryService", "Ticket", "QueueFull", "VirtualClock",
+    "DispatchError", "QueryService", "Ticket", "QueueFull", "VirtualClock",
 ]

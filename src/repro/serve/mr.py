@@ -109,6 +109,24 @@ class QueueFull(RuntimeError):
         self.retry_after_ms = float(retry_after_ms)
 
 
+class DispatchError(RuntimeError):
+    """A query's dispatch failed terminally (its retry budget is spent).
+
+    Carried on :attr:`Ticket.error` and raised by :meth:`Ticket.wait`;
+    ``__cause__`` is the underlying engine exception (e.g. an injected
+    :class:`repro.core.recovery.ShardFailure`), ``attempts`` how many
+    dispatches were tried."""
+
+    def __init__(self, plan_name: str, attempts: int,
+                 cause: BaseException):
+        super().__init__(
+            f"dispatch of plan {plan_name!r} failed after {attempts} "
+            f"attempt(s): {cause!r}")
+        self.plan_name = plan_name
+        self.attempts = int(attempts)
+        self.__cause__ = cause
+
+
 @dataclasses.dataclass
 class Ticket:
     """One submitted query: its identity, payload, and timing trace.
@@ -116,7 +134,11 @@ class Ticket:
     ``submitted_at`` / ``dispatched_at`` / ``completed_at`` are stamps of
     the service clock; ``batch_occupancy`` records how many live queries
     shared its dispatch (the coalescing win); ``value`` is the per-query
-    result, demultiplexed bit-identically to a sequential call."""
+    result, demultiplexed bit-identically to a sequential call.  A failed
+    dispatch requeues the ticket (``retries`` counts attempts so far) until
+    the service's ``max_retries`` budget is spent, after which the ticket
+    completes exceptionally: ``done`` with ``error`` a
+    :class:`DispatchError` instead of a ``value``."""
 
     uid: int
     plan_name: str
@@ -128,8 +150,15 @@ class Ticket:
     batch_occupancy: Optional[int] = None
     value: Any = None
     done: bool = False
+    error: Optional[BaseException] = None
+    retries: int = 0
     _service: Any = dataclasses.field(default=None, repr=False)
     _plan_key: Any = dataclasses.field(default=None, repr=False)
+
+    @property
+    def failed(self) -> bool:
+        """Completed exceptionally (``error`` holds the DispatchError)."""
+        return self.error is not None
 
     @property
     def latency(self) -> Optional[float]:
@@ -150,9 +179,14 @@ class Ticket:
 
         The no-event-loop driver: if the ticket is still queued, dispatch
         its plan's queue (repeatedly, if others are ahead) until this
-        query has run — the sync-client analogue of awaiting a future."""
+        query has run — the sync-client analogue of awaiting a future.
+        Terminates even under persistent dispatch failures (each attempt
+        burns retry budget; the ticket then completes exceptionally) and
+        raises the :class:`DispatchError` of a failed ticket."""
         while not self.done:
             self._service._dispatch(self._plan_key)
+        if self.error is not None:
+            raise self.error
         return self.value
 
 
@@ -178,6 +212,7 @@ class QueryService:
 
     def __init__(self, engine, *, max_batch: int = 16,
                  max_wait_ms: float = 5.0, max_pending: int = 256,
+                 max_retries: int = 2,
                  clock: Callable[[], float] = time.monotonic):
         if int(max_batch) < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
@@ -185,10 +220,13 @@ class QueryService:
             raise ValueError(
                 f"max_pending={max_pending} below max_batch={max_batch}: "
                 f"the admission window could never fill one batch")
+        if int(max_retries) < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
         self.engine = engine
         self.max_batch = int(max_batch)
         self.max_wait_ms = float(max_wait_ms)
         self.max_pending = int(max_pending)
+        self.max_retries = int(max_retries)
         self.clock = clock
         self._queues: "OrderedDict[Any, deque]" = OrderedDict()
         self._plans: Dict[Any, Plan] = {}
@@ -199,6 +237,8 @@ class QueryService:
         self.submitted = 0
         self.completed = 0
         self.rejected = 0
+        self.failed = 0              # tickets completed exceptionally
+        self.requeued = 0            # retry requeues after failed dispatches
         self.dispatches = 0
         self.coalesced = 0           # live queries over all dispatches
         self.pad_slots = 0           # wasted lanes over all dispatches
@@ -303,7 +343,18 @@ class QueryService:
 
     def drain(self) -> int:
         """Dispatch everything queued, deadlines notwithstanding (the
-        end-of-traffic flush).  Returns the number completed."""
+        end-of-traffic flush).  Returns the number resolved — successes
+        plus tickets that completed exceptionally.
+
+        Termination is guaranteed even when the engine fails every
+        dispatch: a failed ``_dispatch`` never raises out of the service —
+        it burns one retry per affected ticket and requeues (or, past
+        ``max_retries``, fails the ticket with a :class:`DispatchError`),
+        so ``pending`` strictly decreases within ``max_retries + 1``
+        attempts per ticket.  (Previously an engine exception propagated
+        out of ``_dispatch`` with the tickets already popped-then-lost or,
+        if re-submitted, ``pending`` frozen — this loop then spun
+        forever.)"""
         done = 0
         while self.pending:
             for pk in self._active_plan_keys():
@@ -336,18 +387,21 @@ class QueryService:
         k = min(len(q), self.max_batch)
         batch = [q.popleft() for _ in range(k)]
         dispatched_at = self.clock()
-        exe = self._exes.get(pk)
-        if exe is None:
-            exe = self._exes[pk] = self.engine.compile(self._plans[pk])
-        n_inputs = len(batch[0].inputs)
-        stacked = tuple(
-            np.stack([np.asarray(t.inputs[i]) for t in batch])
-            for i in range(n_inputs))
-        keys = np.stack([np.asarray(t.key) for t in batch])
-        padded, pkeys, _ = pad_batch(stacked, self.max_batch, keys=keys)
-        out = exe.batch(self.max_batch)(*padded, keys=pkeys)
-        leaves, treedef = jax.tree_util.tree_flatten(out)
-        host = [np.asarray(leaf) for leaf in leaves]   # one transfer each
+        try:
+            exe = self._exes.get(pk)
+            if exe is None:
+                exe = self._exes[pk] = self.engine.compile(self._plans[pk])
+            n_inputs = len(batch[0].inputs)
+            stacked = tuple(
+                np.stack([np.asarray(t.inputs[i]) for t in batch])
+                for i in range(n_inputs))
+            keys = np.stack([np.asarray(t.key) for t in batch])
+            padded, pkeys, _ = pad_batch(stacked, self.max_batch, keys=keys)
+            out = exe.batch(self.max_batch)(*padded, keys=pkeys)
+            leaves, treedef = jax.tree_util.tree_flatten(out)
+            host = [np.asarray(leaf) for leaf in leaves]  # one transfer each
+        except Exception as e:
+            return self._fail_or_requeue(pk, batch, e)
         completed_at = self.clock()
         for i, t in enumerate(batch):
             t.value = jax.tree_util.tree_unflatten(
@@ -363,6 +417,33 @@ class QueryService:
         self.completed += k
         return k
 
+    def _fail_or_requeue(self, pk, batch: List[Ticket],
+                         cause: Exception) -> int:
+        """Retry policy after a failed dispatch: each popped ticket burns
+        one attempt; those within budget requeue at the *front* of their
+        queue in original order (FIFO preserved — they were the oldest),
+        those past ``max_retries`` complete exceptionally with a
+        :class:`DispatchError`.  Never raises, and every call makes
+        progress (retry budgets are finite), so :meth:`drain` and
+        :meth:`Ticket.wait` provably terminate under persistent engine
+        faults.  Returns the number of tickets resolved (failed)."""
+        now = self.clock()
+        keep, dead = [], []
+        for t in batch:
+            t.retries += 1
+            if t.retries > self.max_retries:
+                t.error = DispatchError(t.plan_name, t.retries, cause)
+                t.completed_at = now
+                t.done = True
+                dead.append(t)
+            else:
+                keep.append(t)
+        self._queues[pk].extendleft(reversed(keep))
+        self.requeued += len(keep)
+        self.failed += len(dead)
+        self.finished.extend(dead)
+        return len(dead)
+
     # -- reporting -----------------------------------------------------------
     def trace_counts(self) -> Dict[str, int]:
         """Per-plan lowering counts of the executables this service has
@@ -377,6 +458,7 @@ class QueryService:
         out = {
             "submitted": self.submitted, "completed": self.completed,
             "rejected": self.rejected, "pending": self.pending,
+            "failed": self.failed, "requeued": self.requeued,
             "dispatches": self.dispatches,
             "mean_occupancy": (self.coalesced / self.dispatches
                                if self.dispatches else None),
@@ -418,4 +500,5 @@ def _synthesize_inputs(plan: Plan) -> Tuple:
     return tuple(out)
 
 
-__all__ = ["QueryService", "Ticket", "QueueFull", "VirtualClock"]
+__all__ = ["DispatchError", "QueryService", "Ticket", "QueueFull",
+           "VirtualClock"]

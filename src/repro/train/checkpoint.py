@@ -27,6 +27,8 @@ import tempfile
 import threading
 from typing import Any, Dict, Optional, Tuple
 
+from urllib.parse import quote
+
 import numpy as np
 import jax
 
@@ -40,26 +42,50 @@ def _flatten(tree) -> Dict[str, Any]:
     return flat
 
 
+def _leaf_fname(index: int, key: str) -> str:
+    """Collision-free tensor filename: an enumeration prefix plus a
+    percent-quoted (hence invertibility-irrelevant, lookup goes through the
+    manifest) slice of the key for human greppability.  The old
+    ``key.replace("/", "__")`` mangling collided whenever a leaf name
+    legitimately contained ``__`` ("a/b__c" vs "a/b/c"), silently
+    overwriting one tensor with the other."""
+    return f"{index:05d}_{quote(key, safe='')[:80]}.npy"
+
+
+def _sweep_stale_tmp(ckpt_dir: pathlib.Path) -> None:
+    """Remove ``.tmp_save_*`` directories stranded by an earlier crash
+    between mkdtemp and the atomic rename (they are never a valid
+    checkpoint — the rename is the only publish)."""
+    for p in ckpt_dir.glob(".tmp_save_*"):
+        if p.is_dir():
+            shutil.rmtree(p, ignore_errors=True)
+
+
 def save(ckpt_dir: str, step: int, tree: Any,
          extra_meta: Optional[Dict[str, Any]] = None) -> str:
     """Synchronous step-atomic save.  Returns the final directory path."""
     ckpt_dir = pathlib.Path(ckpt_dir)
     ckpt_dir.mkdir(parents=True, exist_ok=True)
+    _sweep_stale_tmp(ckpt_dir)
     final = ckpt_dir / f"step_{step:08d}"
     tmp = pathlib.Path(tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_save_"))
-    flat = _flatten(tree)
-    manifest = {"step": step, "tensors": {}, "meta": extra_meta or {}}
-    for key, leaf in flat.items():
-        arr = np.asarray(jax.device_get(leaf))
-        fname = key.replace("/", "__") + ".npy"
-        np.save(tmp / fname, arr)
-        manifest["tensors"][key] = {"file": fname,
-                                    "shape": list(arr.shape),
-                                    "dtype": str(arr.dtype)}
-    (tmp / "manifest.json").write_text(json.dumps(manifest))
-    if final.exists():
-        shutil.rmtree(final)
-    os.replace(tmp, final)               # atomic publish
+    try:
+        flat = _flatten(tree)
+        manifest = {"step": step, "tensors": {}, "meta": extra_meta or {}}
+        for i, (key, leaf) in enumerate(flat.items()):
+            arr = np.asarray(jax.device_get(leaf))
+            fname = _leaf_fname(i, key)
+            np.save(tmp / fname, arr)
+            manifest["tensors"][key] = {"file": fname,
+                                        "shape": list(arr.shape),
+                                        "dtype": str(arr.dtype)}
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)           # atomic publish
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
     return str(final)
 
 

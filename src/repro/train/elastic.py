@@ -30,6 +30,15 @@ def plan_mesh(n_devices: Optional[int] = None,
     devices -> 1x31x16 mesh, 15 spares idle)."""
     devs = jax.devices()
     n = n_devices if n_devices is not None else len(devs)
+    if n > len(devs):
+        # A "resume on 512" request must not quietly resume on 8: slicing
+        # devs[:dp*mp] below would silently clamp to the healthy count.
+        raise ValueError(
+            f"plan_mesh: requested n_devices={n} but only {len(devs)} "
+            f"devices are healthy — pass n_devices<={len(devs)} (or None "
+            f"to use all healthy devices)")
+    if n < 1:
+        raise ValueError(f"plan_mesh: n_devices must be >= 1, got {n}")
     mp = min(model_parallel, n)
     while n % mp and mp > 1:
         mp -= 1

@@ -1,0 +1,475 @@
+"""Fault injection, round-boundary checkpointing, and bit-identical
+recovery (repro.core.recovery; DESIGN.md §11).
+
+The contract under test: a round program that gets killed mid-flight by an
+injected shard failure and recovers from the last round-boundary checkpoint
+must produce outputs AND cost accounting bit-identical to the fault-free
+run — on every backend, and even when the resume lands on a different
+backend or shard count (elastic recovery).  Multi-shard elastic cases run
+in a subprocess (jax locks the device count at first init); the in-process
+rows use ShardedEngine at axis size 1 like the conformance suite.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (LocalEngine, ReferenceEngine, ShardedEngine,
+                        execute_plan, funnel_write_plan, get_engine,
+                        hull2d_plan, hull3d_plan, lp_plan, multisearch_plan,
+                        prefix_plan, sort_plan)
+from repro.core.recovery import (Checkpointer, FaultConfig, FaultInjector,
+                                 FaultInjectingEngine, RecoveryReport,
+                                 ShardFailure, elastic_engine, plan_digest,
+                                 realign_mailbox, resume_plan,
+                                 run_plan_with_recovery, with_faults)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_with_devices(code: str, n_devices: int = 8) -> str:
+    """Run ``code`` in a subprocess with n fake CPU devices (jax locks the
+    device count at first init; same helper as test_distributed.py)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, env=env,
+                          timeout=600)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    return proc.stdout
+
+
+RNG = np.random.default_rng(11)
+
+
+def _families(engine):
+    """The seven plan families at test-tiny sizes, with fixed inputs."""
+    al = engine.aligned_nodes
+    return {
+        "sort": (sort_plan(32, 8, align=al),
+                 (jnp.asarray(RNG.normal(size=32).astype(np.float32)),)),
+        "multisearch": (multisearch_plan(16, 8, 8, align=al),
+                        (jnp.asarray(RNG.normal(size=16)
+                                     .astype(np.float32)),
+                         jnp.sort(jnp.asarray(RNG.normal(size=8)
+                                              .astype(np.float32))))),
+        "hull2d": (hull2d_plan(24, 8, align=al),
+                   (jnp.asarray(RNG.normal(size=(24, 2))
+                                .astype(np.float32)),)),
+        "hull3d": (hull3d_plan(8, 8),
+                   (jnp.asarray(RNG.normal(size=(8, 3))
+                                .astype(np.float32)),)),
+        "lp": (lp_plan(8, 2, 8),
+               (jnp.asarray([1.0, 2.0], dtype=jnp.float32),
+                jnp.asarray(RNG.normal(size=(8, 2)).astype(np.float32)),
+                jnp.asarray(RNG.uniform(1.0, 2.0, 8).astype(np.float32)))),
+        "prefix": (prefix_plan(32, 8, physical=True),
+                   (jnp.asarray(RNG.integers(0, 9, 32).astype(np.int32)),)),
+        "funnel": (funnel_write_plan(16, 8, 8, jnp.add, identity=0.0),
+                   (jnp.asarray(RNG.integers(0, 8, 16).astype(np.int32)),
+                    jnp.asarray(RNG.normal(size=16).astype(np.float32)),
+                    jnp.zeros(8, jnp.float32))),
+    }
+
+
+def assert_tree_equal(a, b, ctx=""):
+    la = [np.asarray(x) for x in jax.tree_util.tree_leaves(a)]
+    lb = [np.asarray(x) for x in jax.tree_util.tree_leaves(b)]
+    assert len(la) == len(lb), ctx
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(x, y, err_msg=ctx)
+
+
+def _count_shuffles(plan, engine, inputs):
+    """Total shuffle attempts the plan issues on this backend."""
+    probe = with_faults(engine, FaultConfig())
+    execute_plan(plan, probe, inputs)
+    return probe.injector.calls
+
+
+# ---------------------------------------------------------------------------
+# Fault injection layer
+# ---------------------------------------------------------------------------
+
+class TestFaultInjection:
+    def test_deterministic_events(self):
+        """Same config -> the same failure/straggler schedule, replayable."""
+        cfg = FaultConfig(failure_probability=0.3,
+                          straggler_probability=0.3, seed=4,
+                          max_failures=100)
+        logs = []
+        for _ in range(2):
+            inj = FaultInjector(cfg)
+            for _ in range(50):
+                try:
+                    inj.on_shuffle(4)
+                except ShardFailure:
+                    pass
+            logs.append(tuple(inj.events))
+        assert logs[0] == logs[1]
+        assert any(k == "failure" for k, _, _ in logs[0])
+        assert any(k == "straggler" for k, _, _ in logs[0])
+
+    def test_replay_gets_fresh_draws(self):
+        """Attempt-keyed draws: a replayed round never re-fires the same
+        seeded failure forever — progress is guaranteed for p < 1."""
+        inj = FaultInjector(FaultConfig(fail_at=(0,)))
+        with pytest.raises(ShardFailure):
+            inj.on_shuffle(1)
+        inj.on_shuffle(1)                   # replay: attempt 1, no fault
+        assert inj.calls == 2 and inj.failures == 1
+
+    def test_max_failures_budget(self):
+        inj = FaultInjector(FaultConfig(failure_probability=1.0,
+                                        max_failures=2))
+        fired = 0
+        for _ in range(10):
+            try:
+                inj.on_shuffle(1)
+            except ShardFailure:
+                fired += 1
+        assert fired == 2
+
+    def test_stragglers_never_change_results(self):
+        """Stragglers accrue simulated delay only — outputs and accounting
+        stay bit-identical to the fault-free run."""
+        eng = ReferenceEngine()
+        plan, inputs = _families(eng)["sort"]
+        ref = execute_plan(plan, eng, inputs)
+        faulty = with_faults(eng, FaultConfig(straggler_probability=1.0))
+        got = execute_plan(plan, faulty, inputs)
+        assert_tree_equal(ref, got)
+        assert faulty.injector.stragglers == faulty.injector.calls
+        assert faulty.injector.simulated_delay_s > 0
+
+    def test_proxy_is_transparent_when_fault_free(self):
+        """The injection proxy must never perturb semantics: fault-free
+        wrapped execution is bit-identical on all four backends."""
+        for eng in [ReferenceEngine(), LocalEngine(), ShardedEngine(),
+                    get_engine("pallas")]:
+            plan, inputs = _families(eng)["sort"]
+            ref = execute_plan(plan, eng, inputs)
+            got = execute_plan(plan, with_faults(eng, FaultConfig()), inputs)
+            assert_tree_equal(ref, got, ctx=eng.name)
+
+    def test_proxy_delegates_backend_attrs(self):
+        eng = ShardedEngine()
+        proxy = with_faults(eng, FaultConfig())
+        assert proxy.aligned_nodes(3) == eng.aligned_nodes(3)
+        assert proxy.axis_name == eng.axis_name
+        assert proxy.n_shards == eng.n_shards
+        assert not proxy.jittable       # rounds must run eagerly
+
+
+# ---------------------------------------------------------------------------
+# Checkpointer
+# ---------------------------------------------------------------------------
+
+class TestCheckpointer:
+    def test_roundtrip_mixed_pytree(self, tmp_path):
+        """Arbitrary state trees survive: arrays, Python scalars of every
+        kind, nested containers — restored with types intact."""
+        ck = Checkpointer(tmp_path, tag="t")
+        tree = {"a": jnp.arange(6.0).reshape(2, 3),
+                "nested": {"n": 7, "f": 2.5, "b": True, "s": "splitters"},
+                "tup": (np.arange(4, dtype=np.int32), None)}
+        ck.save(3, tree, meta={"stage_index": 1})
+        got, meta = ck.load(3)
+        assert meta["stage_index"] == 1
+        np.testing.assert_array_equal(np.asarray(got["a"]),
+                                      np.asarray(tree["a"]))
+        assert got["nested"] == tree["nested"]
+        assert type(got["nested"]["n"]) is int
+        assert type(got["nested"]["b"]) is bool
+        assert got["tup"][1] is None
+        np.testing.assert_array_equal(np.asarray(got["tup"][0]),
+                                      np.asarray(tree["tup"][0]))
+
+    def test_every_policy(self, tmp_path):
+        ck = Checkpointer(tmp_path, tag="t", every=3)
+        for r in range(1, 10):
+            ck.maybe_save(r, {"r": r})
+        assert ck.rounds() == [3, 6, 9]
+        assert ck.latest() == 9
+
+    def test_keep_prunes_oldest(self, tmp_path):
+        ck = Checkpointer(tmp_path, tag="t", keep=2)
+        for r in range(1, 6):
+            ck.save(r, {"r": r})
+        assert ck.rounds() == [4, 5]
+
+    def test_plan_keyed_directories_disjoint(self, tmp_path):
+        e = ReferenceEngine()
+        fams = _families(e)
+        p1, p2 = fams["sort"][0], fams["prefix"][0]
+        assert plan_digest(p1) != plan_digest(p2)
+        c1 = Checkpointer(tmp_path, plan=p1)
+        c2 = Checkpointer(tmp_path, plan=p2)
+        c1.save(1, {"x": 1})
+        assert c2.latest() is None      # p2's key space untouched
+
+    def test_bytes_written_counted(self, tmp_path):
+        ck = Checkpointer(tmp_path, tag="t")
+        ck.save(1, {"x": np.zeros(100, np.float32)})
+        assert ck.bytes_written >= 400
+
+    def test_invalid_every(self, tmp_path):
+        with pytest.raises(ValueError):
+            Checkpointer(tmp_path, tag="t", every=0)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint_every threading through the engine drivers
+# ---------------------------------------------------------------------------
+
+def _rotate(r, ids, box):
+    V = box.n_nodes
+    dests = jnp.where(box.valid, (ids[:, None] + 1) % V, -1)
+    return dests, box.payload
+
+
+class TestDriverThreading:
+    @pytest.mark.parametrize("engine", [ReferenceEngine(), LocalEngine(),
+                                        LocalEngine(use_scan=False)],
+                             ids=["reference", "local-scan", "local-eager"])
+    def test_run_rounds_checkpointer_parity(self, engine, tmp_path):
+        """run_rounds with a checkpointer (Local: scan chunked at the
+        checkpoint boundaries) is bit-identical to without."""
+        box, _ = engine.shuffle(np.arange(16, dtype=np.int32) % 8,
+                                np.arange(16.0, dtype=np.float32), 8, 4)
+        ref_box, ref_acc = engine.run_rounds(_rotate, box, 5, capacity=4)
+        ck = Checkpointer(tmp_path / engine.name, tag="r", every=2)
+        got_box, got_acc = engine.run_rounds(_rotate, box, 5, capacity=4,
+                                             checkpointer=ck)
+        assert ck.rounds() == [2, 4]
+        assert_tree_equal((ref_box, ref_acc), (got_box, got_acc))
+        tree, _ = ck.load(4)
+        assert set(tree) == {"box", "accum"}
+
+    def test_run_rounds_round_offset(self, tmp_path):
+        eng = ReferenceEngine()
+        box, _ = eng.shuffle(np.arange(8, dtype=np.int32) % 4,
+                             np.arange(8.0, dtype=np.float32), 4, 4)
+        ck = Checkpointer(tmp_path, tag="r", every=1)
+        eng.run_rounds(_rotate, box, 2, capacity=4, checkpointer=ck,
+                       round_offset=10)
+        assert ck.rounds() == [11, 12]
+
+    def test_run_stages_checkpointer(self, tmp_path):
+        eng = ReferenceEngine()
+        box, _ = eng.shuffle(np.arange(8, dtype=np.int32) % 4,
+                             np.arange(8.0, dtype=np.float32), 4, 4)
+        ck = Checkpointer(tmp_path, tag="s", every=1)
+        stages = [(_rotate, 4), (_rotate, 4)]
+        ref = eng.run_stages(stages, box)
+        got = eng.run_stages(stages, box, checkpointer=ck)
+        assert ck.rounds() == [1, 2]
+        assert_tree_equal(ref, got)
+
+    def test_execute_plan_checkpointer(self, tmp_path):
+        eng = ReferenceEngine()
+        plan, inputs = _families(eng)["sort"]
+        ref = execute_plan(plan, eng, inputs)
+        ck = Checkpointer(tmp_path, plan=plan, every=1)
+        got = execute_plan(plan, eng, inputs, checkpointer=ck)
+        assert_tree_equal(ref, got)
+        assert ck.latest() == plan.total_rounds
+        tree, meta = ck.load(ck.latest())
+        assert set(tree) == {"box", "carry", "accum"}
+        assert meta["stage_index"] == len(plan.stages) - 1
+
+
+# ---------------------------------------------------------------------------
+# Inject-and-recover bit-identity: the conformance rows
+# ---------------------------------------------------------------------------
+
+FAMILY_NAMES = ["sort", "multisearch", "hull2d", "hull3d", "lp", "prefix",
+                "funnel"]
+
+
+class TestRecoveryConformance:
+    @pytest.mark.parametrize("engine_cls", [ReferenceEngine, ShardedEngine],
+                             ids=["reference", "sharded"])
+    @pytest.mark.parametrize("family", FAMILY_NAMES)
+    def test_inject_and_recover_bit_identity(self, engine_cls, family,
+                                             tmp_path):
+        """A mid-program shard failure recovered from the last
+        round-boundary checkpoint yields outputs and CostAccum (the fold of
+        every per-round RoundStats — a double-counted or diverging round
+        would change it) bit-identical to the fault-free run."""
+        engine = engine_cls()
+        plan, inputs = _families(engine)[family]
+        ref = execute_plan(plan, engine, inputs)
+        n = _count_shuffles(plan, engine, inputs)
+        assert n >= 1
+        ck = Checkpointer(tmp_path, plan=plan, every=1)
+        out, rep = run_plan_with_recovery(
+            plan, engine, inputs, faults=FaultConfig(fail_at=(n // 2,)),
+            checkpointer=ck)
+        assert rep.failures_injected == 1 and rep.restarts == 1
+        assert_tree_equal(ref, out, ctx=f"{engine.name}:{family}")
+
+    @pytest.mark.parametrize("name", ["reference", "local", "sharded",
+                                      "pallas"])
+    def test_all_four_backends_recover(self, name, tmp_path):
+        engine = get_engine(name)
+        plan, inputs = _families(engine)["sort"]
+        ref = execute_plan(plan, engine, inputs)
+        n = _count_shuffles(plan, engine, inputs)
+        ck = Checkpointer(tmp_path, plan=plan, every=1)
+        out, rep = run_plan_with_recovery(
+            plan, engine, inputs, faults=FaultConfig(fail_at=(n - 1,)),
+            checkpointer=ck)
+        assert rep.restarts == 1
+        assert_tree_equal(ref, out, ctx=name)
+
+    def test_probabilistic_faults_recover(self, tmp_path):
+        """Bernoulli failures at a high rate still converge (fresh draws
+        per attempt) and stay bit-identical."""
+        engine = ReferenceEngine()
+        plan, inputs = _families(engine)["sort"]
+        ref = execute_plan(plan, engine, inputs)
+        ck = Checkpointer(tmp_path, plan=plan, every=1)
+        out, rep = run_plan_with_recovery(
+            plan, engine, inputs,
+            faults=FaultConfig(failure_probability=0.4, seed=2),
+            checkpointer=ck, max_restarts=100)
+        assert rep.failures_injected >= 1      # seed 2 does fire here
+        assert_tree_equal(ref, out)
+
+    def test_recovery_without_checkpointer_replays_from_scratch(self):
+        engine = ReferenceEngine()
+        plan, inputs = _families(engine)["sort"]
+        ref = execute_plan(plan, engine, inputs)
+        out, rep = run_plan_with_recovery(
+            plan, engine, inputs, faults=FaultConfig(fail_at=(1,)))
+        assert rep.restarts == 1
+        assert_tree_equal(ref, out)
+
+    def test_max_restarts_exceeded_raises(self, tmp_path):
+        engine = ReferenceEngine()
+        plan, inputs = _families(engine)["sort"]
+        ck = Checkpointer(tmp_path, plan=plan, every=1)
+        with pytest.raises(ShardFailure):
+            run_plan_with_recovery(
+                plan, engine, inputs,
+                faults=FaultConfig(failure_probability=1.0),
+                checkpointer=ck, max_restarts=3)
+
+    def test_resume_on_other_backend(self, tmp_path):
+        """Checkpoints are topology-agnostic: killed on Local, resumed on
+        Reference — still bit-identical."""
+        local = LocalEngine()
+        plan, inputs = _families(local)["sort"]
+        ref = execute_plan(plan, local, inputs)
+        ck = Checkpointer(tmp_path, plan=plan, every=1)
+        n = _count_shuffles(plan, local, inputs)
+        with pytest.raises(ShardFailure):
+            run_plan_with_recovery(plan, local, inputs,
+                                   faults=FaultConfig(fail_at=(n - 1,)),
+                                   checkpointer=ck, max_restarts=0)
+        last = ck.latest()
+        assert last is not None
+        out, rep = resume_plan(plan, ReferenceEngine(), inputs,
+                               checkpointer=ck)
+        assert rep.resumed_at_round == last
+        assert_tree_equal(ref, out)
+
+    def test_resume_requires_checkpoint(self, tmp_path):
+        engine = ReferenceEngine()
+        plan, inputs = _families(engine)["sort"]
+        ck = Checkpointer(tmp_path, plan=plan)
+        with pytest.raises(ValueError, match="no checkpoint"):
+            resume_plan(plan, engine, inputs, checkpointer=ck)
+
+    def test_report_counts_replayed_rounds(self, tmp_path):
+        """With sparse checkpoints (every=4) a failure replays the
+        completed rounds since the last durable save."""
+        engine = ReferenceEngine()
+        plan, inputs = _families(engine)["sort"]
+        n = _count_shuffles(plan, engine, inputs)
+        ck = Checkpointer(tmp_path, plan=plan, every=plan.total_rounds + 1)
+        out, rep = run_plan_with_recovery(
+            plan, engine, inputs, faults=FaultConfig(fail_at=(n - 1,)),
+            checkpointer=ck)
+        assert rep.restarts == 1
+        assert rep.rounds_replayed > 0      # no checkpoint was due yet
+        assert_tree_equal(execute_plan(plan, engine, inputs), out)
+
+
+# ---------------------------------------------------------------------------
+# Elastic resume
+# ---------------------------------------------------------------------------
+
+class TestElastic:
+    def test_realign_mailbox_pads_invalid_rows(self):
+        eng = ReferenceEngine()
+        box, _ = eng.shuffle(np.arange(6, dtype=np.int32) % 3,
+                             np.arange(6.0, dtype=np.float32), 3, 4)
+
+        class Gran8(ReferenceEngine):
+            def aligned_nodes(self, n):
+                return -(-max(1, int(n)) // 8) * 8
+
+        padded = realign_mailbox(box, Gran8())
+        assert padded.n_nodes == 8 and padded.capacity == box.capacity
+        np.testing.assert_array_equal(np.asarray(padded.valid[:3]),
+                                      np.asarray(box.valid))
+        assert not np.asarray(padded.valid[3:]).any()
+        np.testing.assert_array_equal(np.asarray(padded.payload[:3]),
+                                      np.asarray(box.payload))
+
+    def test_realign_noop_when_aligned(self):
+        eng = ReferenceEngine()
+        box, _ = eng.shuffle(np.arange(6, dtype=np.int32) % 3,
+                             np.arange(6.0, dtype=np.float32), 3, 4)
+        assert realign_mailbox(box, eng) is box
+
+    def test_elastic_engine_overcommit_raises(self):
+        with pytest.raises(ValueError, match="healthy"):
+            elastic_engine(len(jax.devices()) + 1)
+        with pytest.raises(ValueError):
+            elastic_engine(0)
+
+    def test_elastic_resume_4_to_2(self):
+        """The acceptance case: checkpoint at shard count 4, kill, recover
+        at shard count 2 — outputs and CostAccum bit-identical to the
+        fault-free run (8 fake CPU devices, subprocess)."""
+        run_with_devices("""
+        import tempfile
+        import numpy as np
+        from repro.core import execute_plan, sort_plan
+        from repro.core.recovery import (Checkpointer, FaultConfig,
+                                         elastic_engine, resume_plan,
+                                         run_plan_with_recovery,
+                                         ShardFailure)
+        e4, e2 = elastic_engine(4), elastic_engine(2)
+        plan = sort_plan(64, 8, align=e4.aligned_nodes)
+        x = np.random.default_rng(3).permutation(64).astype(np.float32)
+        ref = execute_plan(plan, e4, (x,))
+        with tempfile.TemporaryDirectory() as d:
+            ck = Checkpointer(d, plan=plan, every=1)
+            try:
+                run_plan_with_recovery(plan, e4, (x,),
+                                       faults=FaultConfig(fail_at=(1,)),
+                                       checkpointer=ck, max_restarts=0)
+                raise AssertionError("fault did not fire")
+            except ShardFailure:
+                pass
+            last = ck.latest()
+            assert last is not None
+            out, rep = resume_plan(plan, e2, (x,),
+                                   checkpointer=Checkpointer(d, plan=plan))
+            assert rep.resumed_at_round == last
+            assert np.array_equal(np.asarray(ref.values),
+                                  np.asarray(out.values))
+            for a, b in zip(ref.stats, out.stats):
+                assert np.array_equal(np.asarray(a), np.asarray(b))
+        print("ELASTIC-OK")
+        """)

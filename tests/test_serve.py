@@ -25,7 +25,8 @@ import jax.numpy as jnp
 from repro.core import (LocalEngine, ReferenceEngine, funnel_write_plan,
                         hull2d_plan, hull3d_plan, lp_plan, multisearch_plan,
                         pad_batch, prefix_plan, sort_plan)
-from repro.serve import QueryService, QueueFull, VirtualClock
+from repro.serve import (DispatchError, QueryService, QueueFull,
+                         VirtualClock)
 
 RNG = np.random.default_rng(7)
 
@@ -387,3 +388,91 @@ class TestServeEngineProtocol:
         done = eng.run_until_drained()
         assert len(done) == 1
         assert done[0].finished_at == 6.0           # deterministic stamps
+
+
+# -- dispatch failures: retry, typed errors, guaranteed drain ----------------
+
+class TestDispatchFailures:
+    """Regression suite for the drain() infinite loop: an engine exception
+    inside _dispatch used to propagate with the popped tickets lost (and,
+    if the caller retried, ``pending`` frozen forever).  The retry path
+    requeues within ``max_retries`` and then completes tickets
+    exceptionally, so every driver loop provably terminates under injected
+    dispatch failures."""
+
+    def _faulty_svc(self, faults, B=4, **kw):
+        from repro.core.recovery import FaultConfig, with_faults
+        eng = with_faults(LocalEngine(), FaultConfig(**faults))
+        clock = VirtualClock()
+        svc = QueryService(eng, max_batch=B, clock=clock, **kw)
+        plan = sort_plan(32, 8, align=eng.aligned_nodes)
+        x = lambda: jnp.asarray(RNG.normal(size=32).astype(np.float32))
+        return svc, clock, plan, x
+
+    def test_drain_terminates_under_persistent_faults(self):
+        """Every dispatch fails forever -> drain() still returns, with all
+        tickets completed exceptionally (DispatchError), queue empty."""
+        svc, clock, plan, x = self._faulty_svc(
+            {"failure_probability": 1.0}, max_retries=2)
+        ts = [svc.submit(plan, x()) for _ in range(3)]
+        resolved = svc.drain()                       # used to spin forever
+        assert resolved == 3 and svc.pending == 0
+        assert all(t.done and t.failed for t in ts)
+        assert all(isinstance(t.error, DispatchError) for t in ts)
+        assert all(t.retries == 3 for t in ts)       # max_retries + 1
+        assert svc.failed == 3 and svc.completed == 0
+        assert svc.requeued == 6                     # 2 requeues x 3 tickets
+
+    def test_transient_fault_requeues_then_succeeds(self):
+        """The first dispatch dies (injected), the retry completes — the
+        result is bit-identical to a fault-free run."""
+        svc, clock, plan, x = self._faulty_svc({"fail_at": (0,)})
+        q = x()
+        eng = LocalEngine()
+        seq = eng.compile(plan)(q, key=None)
+        t = svc.submit(plan, q)
+        assert svc.drain() >= 1
+        assert t.done and not t.failed and t.retries == 1
+        assert svc.requeued == 1 and svc.failed == 0
+        assert_tree_equal(t.value, seq, ctx="post-retry result")
+
+    def test_wait_raises_dispatch_error_with_cause(self):
+        from repro.core.recovery import ShardFailure
+        svc, clock, plan, x = self._faulty_svc(
+            {"failure_probability": 1.0}, max_retries=1)
+        t = svc.submit(plan, x())
+        with pytest.raises(DispatchError) as ei:
+            t.wait()                                 # terminates, raises
+        assert isinstance(ei.value.__cause__, ShardFailure)
+        assert ei.value.attempts == 2
+
+    def test_failed_batch_preserves_fifo_order(self):
+        """Requeued tickets go back to the *front* in original order."""
+        svc, clock, plan, x = self._faulty_svc({"fail_at": (0,)}, B=2)
+        t1 = svc.submit(plan, x())
+        t2 = svc.submit(plan, x())       # window full -> dispatch -> fails
+        assert not t1.done and svc.pending == 2
+        q = svc._queues[svc.engine.plan_key(plan)]
+        assert [t.uid for t in q] == [t1.uid, t2.uid]
+        svc.drain()
+        assert t1.done and t2.done and not t1.failed and not t2.failed
+
+    def test_step_terminates_with_failing_backlog(self):
+        svc, clock, plan, x = self._faulty_svc(
+            {"failure_probability": 1.0}, B=2, max_retries=0)
+        ts = [svc.submit(plan, x()) for _ in range(2)]  # auto-dispatch dies
+        assert all(t.failed for t in ts)
+        assert svc.step() == 0                          # nothing pending
+
+    def test_stats_report_failures(self):
+        svc, clock, plan, x = self._faulty_svc(
+            {"failure_probability": 1.0}, max_retries=0)
+        svc.submit(plan, x())
+        svc.drain()
+        s = svc.stats()
+        assert s["failed"] == 1 and s["requeued"] == 0
+        assert s["pending"] == 0
+
+    def test_max_retries_validation(self):
+        with pytest.raises(ValueError):
+            QueryService(LocalEngine(), max_retries=-1)

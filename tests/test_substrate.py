@@ -144,6 +144,51 @@ class TestFaultTolerance:
         saver.wait()
         assert ckpt.latest_step(str(tmp_path)) == 1
 
+    def test_failed_save_cleans_tmp_dir(self, tmp_path):
+        """A crash mid-save must not strand a .tmp_save_* directory (the
+        leak accumulated forever on long-running trainers)."""
+        class Boom:
+            pass                       # np.asarray(device_get(...)) raises
+
+        with pytest.raises(Exception):
+            ckpt.save(str(tmp_path), 1, {"w": jnp.zeros(3), "bad": Boom()})
+        assert list(tmp_path.glob(".tmp_save_*")) == []
+        assert ckpt.latest_step(str(tmp_path)) is None
+
+    def test_stale_tmp_swept_on_next_save(self, tmp_path):
+        """tmp dirs stranded by a hard kill (no exception path runs) are
+        swept by the next save()."""
+        stale = tmp_path / ".tmp_save_deadbeef"
+        stale.mkdir(parents=True)
+        (stale / "w.npy").write_bytes(b"junk")
+        ckpt.save(str(tmp_path), 2, {"w": jnp.zeros(3)})
+        assert not stale.exists()
+        assert ckpt.latest_step(str(tmp_path)) == 2
+
+    def test_manifest_roundtrip_underscore_collision(self, tmp_path):
+        """'a/b__c' and 'a/b/c' used to mangle to the same filename
+        (key.replace('/', '__')) — the second np.save silently overwrote
+        the first.  Filenames are now enumerated; the manifest round-trips
+        both leaves intact."""
+        tree = {"a": {"b__c": jnp.ones(4), "b": {"c": jnp.zeros(4)}}}
+        ckpt.save(str(tmp_path), 1, tree)
+        restored, _ = ckpt.restore(str(tmp_path), 1, tree)
+        np.testing.assert_array_equal(np.asarray(restored["a"]["b__c"]),
+                                      np.ones(4))
+        np.testing.assert_array_equal(np.asarray(restored["a"]["b"]["c"]),
+                                      np.zeros(4))
+
+    def test_plan_mesh_overcommit_raises(self):
+        """Requesting more devices than are healthy must fail loudly, not
+        silently clamp ('resume on 512' quietly resuming on 8)."""
+        from repro.train import elastic
+        n = len(jax.devices())
+        with pytest.raises(ValueError, match="healthy"):
+            elastic.plan_mesh(n_devices=n + 1)
+        with pytest.raises(ValueError):
+            elastic.plan_mesh(n_devices=0)
+        assert elastic.plan_mesh(n_devices=n).devices.size == n
+
 
 class TestTrainerLoss:
     def test_loss_decreases(self):

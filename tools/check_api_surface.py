@@ -19,7 +19,18 @@ EXPECTED_SERVE = frozenset([
     # token-level continuous batching (decode slots)
     "ServeEngine", "Request", "ServeConfig",
     # query-level continuous batching over the plan cache (DESIGN.md §10)
-    "QueryService", "Ticket", "QueueFull", "VirtualClock",
+    "DispatchError", "QueryService", "Ticket", "QueueFull", "VirtualClock",
+])
+
+EXPECTED_RECOVERY = frozenset([
+    # fault injection (DESIGN.md §11)
+    "FaultConfig", "FaultError", "FaultInjector", "FaultInjectingEngine",
+    "ShardFailure", "with_faults",
+    # round-boundary checkpointing
+    "Checkpointer", "plan_digest",
+    # recovery driver + elastic resume
+    "RecoveryReport", "run_plan_with_recovery", "resume_plan",
+    "realign_mailbox", "elastic_engine",
 ])
 
 EXPECTED_PLAN = frozenset([
@@ -96,10 +107,12 @@ def check_surface(module, expected) -> int:
 def main() -> int:
     import repro.core
     import repro.core.plan
+    import repro.core.recovery
     import repro.serve
 
     rc = check_surface(repro.core, EXPECTED)
     rc |= check_surface(repro.core.plan, EXPECTED_PLAN)
+    rc |= check_surface(repro.core.recovery, EXPECTED_RECOVERY)
     rc |= check_surface(repro.serve, EXPECTED_SERVE)
     return rc
 
