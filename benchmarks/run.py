@@ -147,42 +147,101 @@ def bench_queues(quick):
 
 
 def bench_shuffle(quick):
-    """Dense vs kernel-backed shuffle over an (N, fan-in) grid.
+    """Dense vs kernel-backed shuffle over an (N, fan-in) grid — routed
+    through the engines, with the grid extended past the old kernel cliffs.
 
     The engine hot loop (DESIGN.md §7): same FIFO/drop contract, two
     implementations.  Fan-in = N / V (expected arrivals per node); capacity
-    is sized to 2x fan-in so the drop path stays exercised but rare.  Each
-    grid cell prints both timings plus a parity check — the speed claim is
-    measured, never asserted.  Off TPU the kernel path runs interpret mode,
-    so the dense/kernel ratio there tracks dispatch overhead, not Mosaic.
+    is sized to 2x fan-in so the drop path stays exercised but rare.  The
+    grid includes shapes past the old single-VMEM-tile cliff (n > 2^18);
+    off TPU the old int32-key-cliff point (n=40000, V=2^16) is skipped —
+    its count matrices are compile-heavy in interpret mode.
+
+    Three in-bench asserts per grid point:
+
+    - **route**: ``route_log`` must show the pallas engine *took* the
+      kernel path (no silent dense fallback) — the multi-tile radix
+      rewrite's acceptance claim;
+    - **parity**: kernel and dense results are bit-identical (mailbox,
+      validity, stats);
+    - **speed** (TPU only): the kernel path must not be slower than dense.
+      CPU interpret mode is semantics-only — the dense/kernel ratio there
+      tracks dispatch overhead, not Mosaic — so off TPU the ratio is
+      reported, never asserted.
+
+    The deterministic route/parity fractions go under ``"series"`` in
+    BENCH_shuffle.json (tools/bench_compare.py gates them in CI at 1.0);
+    wall times land in rows and "info", never gated.
     """
-    from repro.core.kshuffle import kernel_shuffle
-    from repro.core.mrmodel import shuffle as dense_shuffle
+    import json
+    from repro.core import kshuffle as K
+    from repro.core.engine import LocalEngine, get_engine
     rng = np.random.default_rng(0)
-    grid_n = (1024, 4096, 16384) if not quick else (256, 1024, 4096)
-    grid_v = (16, 64, 256)
-    for n in grid_n:
-        for V in grid_v:
-            fan_in = n // V
-            cap = max(2 * fan_in, 2)
-            dests = jnp.asarray(rng.integers(0, V, n).astype(np.int32))
-            payload = jnp.asarray(rng.normal(size=n).astype(np.float32))
-            d_fn = jax.jit(lambda d, p, V=V, cap=cap: dense_shuffle(
-                d, p, V, cap))
-            k_fn = jax.jit(lambda d, p, V=V, cap=cap: kernel_shuffle(
-                d, p, V, cap))
-            box_d, st_d = jax.block_until_ready(d_fn(dests, payload))
-            box_k, st_k = jax.block_until_ready(k_fn(dests, payload))
-            parity = bool(jnp.array_equal(box_d.valid, box_k.valid)
-                          & jnp.array_equal(box_d.payload, box_k.payload)
-                          & (st_d.dropped == st_k.dropped))
-            us_d = _timeit(lambda: jax.block_until_ready(d_fn(dests, payload)))
-            us_k = _timeit(lambda: jax.block_until_ready(k_fn(dests, payload)))
-            print(f"shuffle_dense_N{n}_V{V},{us_d:.0f},"
-                  f"fan_in={fan_in}|cap={cap}|dropped={int(st_d.dropped)}")
-            print(f"shuffle_kernel_N{n}_V{V},{us_k:.0f},"
-                  f"dense_vs_kernel={us_d/us_k:.2f}x|parity={parity}"
-                  f"|backend={jax.default_backend()}")
+    on_tpu = jax.default_backend() == "tpu"
+    past_cliff = (1 << 18) + 4096            # > _MAX_SORT_N: multi-tile
+    grid_n = ((1024, 4096, past_cliff) if quick
+              else (1024, 4096, 16384, past_cliff, 1 << 19))
+    grid = [(n, V) for n in grid_n for V in (16, 64, 256)]
+    if on_tpu:
+        grid.append((40000, 1 << 16))        # old int32-key cliff point
+    keng = get_engine("pallas")
+    deng = LocalEngine()
+    rows, kernel_routes, parities = [], 0, 0
+    for n, V in grid:
+        fan_in = max(n // V, 1)
+        cap = max(2 * fan_in, 2)
+        dests = jnp.asarray(rng.integers(0, V, n).astype(np.int32))
+        payload = jnp.asarray(rng.normal(size=n).astype(np.float32))
+        d_fn = jax.jit(lambda d, p, V=V, cap=cap: deng.shuffle(d, p, V, cap))
+        k_fn = jax.jit(lambda d, p, V=V, cap=cap: keng.shuffle(d, p, V, cap))
+        K.route_log.reset()
+        box_k, st_k = jax.block_until_ready(k_fn(dests, payload))
+        routed = K.route_log.snapshot() == (1, 0)
+        assert routed, \
+            f"bench_shuffle: kernel path not taken at N{n}_V{V} " \
+            f"(route_log={K.route_log.snapshot()})"
+        kernel_routes += 1
+        box_d, st_d = jax.block_until_ready(d_fn(dests, payload))
+        parity = bool(jnp.array_equal(box_d.valid, box_k.valid)
+                      & jnp.array_equal(box_d.payload, box_k.payload)) \
+            and all(int(a) == int(b) for a, b in zip(st_d, st_k))
+        assert parity, f"bench_shuffle: kernel diverged from dense at " \
+                       f"N{n}_V{V}"
+        parities += 1
+        us_d = _timeit(lambda: jax.block_until_ready(d_fn(dests, payload)))
+        us_k = _timeit(lambda: jax.block_until_ready(k_fn(dests, payload)))
+        if on_tpu:
+            assert us_k <= us_d, \
+                f"bench_shuffle: kernel slower than dense on TPU at " \
+                f"N{n}_V{V}: {us_k:.0f}us vs {us_d:.0f}us"
+        rows.append({"n": n, "V": V, "fan_in": fan_in, "cap": cap,
+                     "us_dense": us_d, "us_kernel": us_k,
+                     "dense_vs_kernel": us_d / us_k,
+                     "multi_tile": n > K._MAX_SORT_N,
+                     "kernel_route": routed, "parity": parity,
+                     "dropped": int(st_d.dropped)})
+        print(f"shuffle_dense_N{n}_V{V},{us_d:.0f},"
+              f"fan_in={fan_in}|cap={cap}|dropped={int(st_d.dropped)}")
+        print(f"shuffle_kernel_N{n}_V{V},{us_k:.0f},"
+              f"dense_vs_kernel={us_d/us_k:.2f}x|parity={parity}"
+              f"|route=kernel|backend={jax.default_backend()}")
+    # Deterministic acceptance series: every grid point must take the
+    # kernel path and match the dense oracle bit-for-bit (the asserts
+    # above already hard-fail; the series lets the CI gate see it too).
+    series = {"shuffle_kernel_route_fraction": kernel_routes / len(grid),
+              "shuffle_parity_fraction": parities / len(grid)}
+    info = {"max_dense_vs_kernel": max(r["dense_vs_kernel"] for r in rows),
+            "min_dense_vs_kernel": min(r["dense_vs_kernel"] for r in rows),
+            "points_past_old_cliff": sum(r["multi_tile"] for r in rows)}
+    payload_json = {"bench": "shuffle_kernel_vs_dense",
+                    "backend": jax.default_backend(),
+                    "tpu_speed_asserted": on_tpu,
+                    "rows": rows, "series": series, "info": info}
+    with open("BENCH_shuffle.json", "w", encoding="utf-8") as f:
+        json.dump(payload_json, f, indent=2)
+    print(f"shuffle_bench_json,0,wrote BENCH_shuffle.json "
+          f"({len(rows)} rows, route_fraction="
+          f"{series['shuffle_kernel_route_fraction']:.2f})")
 
 
 def bench_kernels(quick):
@@ -356,25 +415,33 @@ def bench_shape(quick):
     LocalEngine and timed.  Each cell carries an **in-bench parity assert**
     (bit-identical outputs and CostAccum — the shape schedule is a physical
     optimization, never a semantic one) and reports peak/total declared
-    mailbox bytes.  The grid is fixed (no --quick variation) so the series
-    in BENCH_shape.json are comparable across runs: ``tools/bench_compare.py``
-    gates regressions against the committed baseline in CI.
+    mailbox bytes.  A third **kernel column** compiles the shaped plan on
+    the pallas engine: every per-stage shuffle must route through the
+    multi-tile radix kernel (``route_log`` asserts no silent dense
+    fallback — the old size cliffs used to knock entry-level stages off
+    the kernel path) and reproduce the dense result bit-for-bit.  The grid
+    is fixed (no --quick variation) so the series in BENCH_shape.json are
+    comparable across runs: ``tools/bench_compare.py`` gates regressions
+    against the committed baseline in CI.
     """
     import json
-    from repro.core import LocalEngine, hull2d_plan, prefix_plan
+    from repro.core import LocalEngine, get_engine, hull2d_plan, prefix_plan
+    from repro.core import kshuffle as K
     from repro.core.funnel import funnel_write_plan
     from repro.core.plan import execute_plan
 
     engine = LocalEngine()
+    kengine = get_engine("pallas")
     rng = np.random.default_rng(0)
     rows = []
+    route_counts = [0, 0]                     # [kernel, dense] decisions
 
     def run_pair(family, label, make_plan_call, out_leaf, n_calls):
-        """Measure one grid point: ``make_plan_call(shape) -> (plan, call)``
-        where ``call()`` runs the program and returns its result."""
+        """Measure one grid point: ``make_plan_call(shape, eng) -> (plan,
+        call)`` where ``call()`` runs the program and returns its result."""
         t, peak, total, res = {}, {}, {}, {}
         for s in (False, True):
-            plan, call = make_plan_call(s)
+            plan, call = make_plan_call(s, engine)
             res[s] = jax.block_until_ready(call())
             t[s] = _timeit(lambda: jax.block_until_ready(out_leaf(call())),
                            n=n_calls)
@@ -386,9 +453,29 @@ def bench_shape(quick):
                           jax.tree_util.tree_leaves(res[True])):
             assert np.array_equal(np.asarray(la), np.asarray(lb)), \
                 f"bench_shape: {label} diverged between frozen and shaped"
+        # Kernel column: the shaped plan on the pallas engine.  Every
+        # per-stage routing decision (made while the first call traces)
+        # must take the kernel, and the result must match the dense column.
+        K.route_log.reset()
+        _, call_k = make_plan_call(True, kengine)
+        res_k = jax.block_until_ready(call_k())
+        routed = K.route_log.snapshot()
+        assert routed[0] > 0 and routed[1] == 0, \
+            f"bench_shape: {label} fell back to dense on the kernel " \
+            f"engine (route_log={routed})"
+        route_counts[0] += routed[0]
+        route_counts[1] += routed[1]
+        for la, lb in zip(jax.tree_util.tree_leaves(res[True]),
+                          jax.tree_util.tree_leaves(res_k)):
+            assert np.array_equal(np.asarray(la), np.asarray(lb)), \
+                f"bench_shape: {label} kernel column diverged from dense"
+        us_kernel = _timeit(lambda: jax.block_until_ready(
+            out_leaf(call_k())), n=n_calls)
         speedup = t[False] / t[True]
         rows.append({"family": family, "label": label,
                      "us_frozen": t[False], "us_shaped": t[True],
+                     "us_kernel": us_kernel,
+                     "kernel_stage_routes": routed[0],
                      "speedup": speedup,
                      "peak_bytes_frozen": peak[False],
                      "peak_bytes_shaped": peak[True],
@@ -397,21 +484,22 @@ def bench_shape(quick):
                      "parity": True})
         print(f"shape_{family}_{label},{t[True]:.0f},"
               f"frozen={t[False]:.0f}us|speedup={speedup:.2f}x"
+              f"|kernel={us_kernel:.0f}us|kernel_routes={routed[0]}"
               f"|peak_bytes={peak[False]}->{peak[True]}|parity=True")
 
     key = jax.random.PRNGKey(0)
     for n, M in ((500, 32), (1000, 32), (2000, 64)):
         pts = jnp.asarray(rng.normal(size=(n, 2)).astype(np.float32))
 
-        def hull_pc(s, n=n, M=M, pts=pts):
-            exe = engine.compile(hull2d_plan(n, M, shape=s))
+        def hull_pc(s, eng, n=n, M=M, pts=pts):
+            exe = eng.compile(hull2d_plan(n, M, shape=s))
             return exe.plan, lambda: exe(pts, key=key)
         run_pair("hull2d", f"n{n}_M{M}", hull_pc, lambda r: r.points, 2)
     for n, M in ((10000, 64), (30000, 64), (60000, 64)):
         x = jnp.asarray(rng.integers(0, 9, n).astype(np.int32))
 
-        def prefix_pc(s, n=n, M=M, x=x):
-            exe = engine.compile(prefix_plan(n, M, physical=True, shape=s))
+        def prefix_pc(s, eng, n=n, M=M, x=x):
+            exe = eng.compile(prefix_plan(n, M, physical=True, shape=s))
             return exe.plan, lambda: exe(x)
         run_pair("prefix", f"n{n}_M{M}", prefix_pc, lambda r: r.values, 3)
     for P, N, M in ((2048, 128, 32), (8192, 256, 32)):
@@ -419,12 +507,13 @@ def bench_shape(quick):
         vals = jnp.asarray(rng.normal(size=P).astype(np.float32))
         mem = jnp.zeros(N, jnp.float32)
 
-        def funnel_pc(s, P=P, N=N, M=M, addrs=addrs, vals=vals, mem=mem):
+        def funnel_pc(s, eng, P=P, N=N, M=M, addrs=addrs, vals=vals,
+                      mem=mem):
             # identity must stay static for compile(); jit execute_plan
             # directly instead.
             plan = funnel_write_plan(P, N, M, jnp.add, identity=0.0,
                                      shape=s)
-            fn = jax.jit(lambda a, v, m: execute_plan(plan, engine,
+            fn = jax.jit(lambda a, v, m: execute_plan(plan, eng,
                                                       (a, v, m)))
             return plan, lambda: fn(addrs, vals, mem)
         run_pair("funnel", f"P{P}_N{N}_M{M}", funnel_pc,
@@ -447,6 +536,11 @@ def bench_shape(quick):
     series["hull2d_peak_bytes_ratio"] = (
         largest["hull2d"]["peak_bytes_frozen"]
         / largest["hull2d"]["peak_bytes_shaped"])
+    # Deterministic kernel-column acceptance: the fraction of per-stage
+    # routing decisions that took the multi-tile radix kernel (asserted
+    # 1.0 per grid point above; the series lets the CI gate see it too).
+    series["shape_kernel_route_fraction"] = (
+        route_counts[0] / max(sum(route_counts), 1))
     info = {f"{fam}_speedup_largest": r["speedup"]
             for fam, r in largest.items()}
     payload = {"bench": "shape_schedule",

@@ -336,16 +336,18 @@ class LocalEngine(MREngine):
 
     - ``"dense"`` (default): :func:`repro.core.mrmodel.shuffle` — stable
       jnp argsort by destination + rank-addressed scatter;
-    - ``"kernel"``: :func:`repro.core.kshuffle.kernel_shuffle` — the Pallas
-      composition bincount → prefix_scan → bitonic_sort (``interpret=True``
-      off TPU).  ``get_engine("pallas")`` constructs this variant.
+    - ``"kernel"``: :func:`repro.core.kshuffle.kernel_shuffle` — the
+      multi-tile radix Pallas composition, fused bincount_tiles →
+      tile-local bitonic_sort (``interpret=True`` off TPU).
+      ``get_engine("pallas")`` constructs this variant.
 
-    The kernel path's int32-keyspace and single-VMEM-tile guards are
-    re-derived per shuffle call from that call's (n, V) shape
+    The kernel path's guards (tile width vs node count, count-matrix
+    budget — the old single-VMEM-tile and int32-keyspace cliffs are gone)
+    are re-derived per shuffle call from that call's (n, V) shape
     (:func:`repro.core.kshuffle.kernel_fits`): a call whose shape exceeds
-    them falls back to the bit-identical dense shuffle, so in a
-    shape-scheduled program (DESIGN.md §9) late levels that fit a single
-    VMEM tile take the kernel path even when the entry level cannot.
+    them falls back to the bit-identical dense shuffle.  Every routing
+    decision is counted in :data:`repro.core.kshuffle.route_log`, so tests
+    and benches can assert the kernel path was actually taken.
     """
 
     name = "local"
@@ -359,8 +361,9 @@ class LocalEngine(MREngine):
         self.use_scan = use_scan
         self.shuffle_impl = shuffle_impl
         if shuffle_impl == "kernel":
-            from .kshuffle import kernel_fits, kernel_shuffle
+            from .kshuffle import kernel_fits, kernel_shuffle, route_log
             self._kernel_fits = kernel_fits
+            self._route_log = route_log
             self._shuffle_fn = kernel_shuffle
             self.name = "pallas"
         else:
@@ -370,9 +373,12 @@ class LocalEngine(MREngine):
                 capacity: int) -> Tuple[Mailbox, RoundStats]:
         dests = jnp.asarray(dests)
         fn = self._shuffle_fn
-        if self.shuffle_impl == "kernel" and not self._kernel_fits(
-                int(np.prod(dests.shape)), n_nodes):
-            fn = _dense_shuffle          # per-stage guard: oversize -> dense
+        if self.shuffle_impl == "kernel":
+            if self._kernel_fits(int(np.prod(dests.shape)), n_nodes):
+                self._route_log.kernel += 1
+            else:
+                self._route_log.dense += 1
+                fn = _dense_shuffle      # per-stage guard: oversize -> dense
         return fn(dests, payload, n_nodes, capacity)
 
     def run_rounds(self, f: RoundFn, box: Mailbox, n_rounds: int,
@@ -453,7 +459,13 @@ class ShardedEngine(MREngine):
     ``shuffle_impl`` selects the phase-2 per-shard local scatter: ``"dense"``
     (default, :func:`repro.core.mrmodel.shuffle`) or ``"kernel"`` (the Pallas
     :func:`repro.core.kshuffle.kernel_shuffle`) — the same choice
-    :class:`LocalEngine` exposes, applied inside ``shard_map``.
+    :class:`LocalEngine` exposes, applied inside ``shard_map``.  The kernel
+    guards are re-derived **per call** through the same
+    :func:`repro.core.kshuffle.kernel_fits` predicate LocalEngine uses (not
+    baked in at ``_build`` time), so in a shape-scheduled program the late
+    shrinking levels route through the kernel scatter even when the entry
+    level cannot, and every decision lands in
+    :data:`repro.core.kshuffle.route_log`.
     """
 
     name = "sharded"
@@ -473,7 +485,9 @@ class ShardedEngine(MREngine):
         self.n_shards = mesh.shape[axis_name]
         self.shuffle_impl = shuffle_impl
         if shuffle_impl == "kernel":
-            from .kshuffle import kernel_shuffle
+            from .kshuffle import kernel_fits, kernel_shuffle, route_log
+            self._kernel_fits = kernel_fits
+            self._route_log = route_log
             self._local_shuffle = kernel_shuffle
         else:
             self._local_shuffle = _dense_shuffle
@@ -482,22 +496,14 @@ class ShardedEngine(MREngine):
         return -(-max(1, int(n_nodes)) // self.n_shards) * self.n_shards
 
     def _build(self, n_nodes: int, capacity: int, lead: int, treedef,
-               shapes_dtypes, n_flat: int):
+               shapes_dtypes, use_kernel: bool):
         from .distributed import shard_map, shuffle_alltoall
 
         axis = self.axis_name
         n_shards = self.n_shards
         local_v = n_nodes // n_shards
 
-        local_shuffle = self._local_shuffle
-        if self.shuffle_impl == "kernel":
-            # Per-shape kernel guard (DESIGN.md §9): the phase-2 scatter
-            # sees n_shards * n_local = n_flat arrivals per shard buffer —
-            # lowerings whose shape exceeds the kernel's int32-keyspace /
-            # VMEM-tile budget take the bit-identical dense scatter instead.
-            from .kshuffle import kernel_fits
-            if not kernel_fits(n_flat, n_nodes // n_shards):
-                local_shuffle = _dense_shuffle
+        local_shuffle = self._local_shuffle if use_kernel else _dense_shuffle
 
         def body(dests, *leaves):
             flat_dest = dests.reshape(-1).astype(jnp.int32)
@@ -545,7 +551,7 @@ class ShardedEngine(MREngine):
         out_specs = ([P(axis)] * n_leaves, P(axis),
                      RoundStats(P(), P(), P(), P()))
         kwargs = {}
-        if self.shuffle_impl == "kernel":
+        if use_kernel:
             # jax 0.4.x has no replication rule for pallas_call; the body's
             # outputs carry explicit per-shard specs, so skipping the check
             # is sound.
@@ -572,17 +578,29 @@ class ShardedEngine(MREngine):
             dests = jnp.concatenate([dests, jnp.full((pad,), -1, dests.dtype)])
             leaves = [jnp.concatenate(
                 [l, jnp.zeros((pad,) + l.shape[1:], l.dtype)]) for l in leaves]
+        # Per-call kernel guard (same predicate LocalEngine routes through;
+        # the phase-2 scatter sees n_shards * n_local = n_flat arrivals per
+        # shard buffer).  Re-derived on every shuffle call — not baked in at
+        # _build time — so late shrinking levels of shaped plans route
+        # through the kernel scatter, and route_log sees each decision.
+        use_kernel = False
+        if self.shuffle_impl == "kernel":
+            use_kernel = self._kernel_fits(int(np.prod(dests.shape)),
+                                           n_nodes // self.n_shards)
+            if use_kernel:
+                self._route_log.kernel += 1
+            else:
+                self._route_log.dense += 1
         # Per-shape lowerings share the engine's bounded cache with compiled
         # plans (previously an unbounded private dict — DESIGN.md §8).
         cache = self._ensure_cache()
         key = ("shuffle", n_nodes, capacity, dests.shape, dests.ndim, treedef,
-               tuple((l.shape, str(l.dtype)) for l in leaves))
+               tuple((l.shape, str(l.dtype)) for l in leaves), use_kernel)
         fn = cache.lookup(key)
         if fn is None:
             fn = cache.store(key, self._build(
                 n_nodes, capacity, dests.ndim, treedef,
-                [(l.shape, l.dtype) for l in leaves],
-                int(np.prod(dests.shape))))
+                [(l.shape, l.dtype) for l in leaves], use_kernel))
         out_leaves, valid, stats = fn(dests, *leaves)
         box = Mailbox(payload=jax.tree_util.tree_unflatten(treedef, out_leaves),
                       valid=valid)

@@ -1,32 +1,58 @@
-"""Kernel-backed Shuffle step: counts → offsets → sort → slot, on Pallas.
+"""Kernel-backed Shuffle step: a multi-tile radix route, on Pallas.
 
 Every algorithm in the paper bottoms out in the same primitive — the
 capacity-bounded shuffle round.  Theorem 4.2's queue discipline makes the
 structure explicit as a two-phase "invisible funnel": first send the *counts*
 (how many items target each reducer), then route items to reserved slots.
-:func:`kernel_shuffle` is that dataflow composed from the Pallas kernels in
-:mod:`repro.kernels`:
+:func:`kernel_shuffle` is that dataflow as a **multi-tile radix shuffle**
+composed from the Pallas kernels in :mod:`repro.kernels`:
 
-    dests ──► bincount ──────► counts        (per-node fan-in; Thm 4.2 R1)
-                   │
-                   └► prefix_scan(exclusive) ──► offsets   (slot reservation)
-    (dest, src) ──► bitonic_sort ──► arrival order         (stable routing)
-    rank = sorted position − offsets[dest]  ──► slot       (FIFO placement)
+    dests, tiled (T, tile) ──► bincount_tiles ──► C  per-tile counts
+                                              ──► P  cross-tile excl. prefix
+                                              ──► F  in-tile bucket offsets
+                                                  (ONE fused launch: the
+                                                   paper's "send the counts")
+    segmented keys dest·tile + local_src ──► bitonic_sort (T local networks,
+                                              one gridded launch)
+    rank = P[tile, dest] + (sorted position − F[tile, dest])   global FIFO
+    rank-addressed scatter ──► (V, capacity) mailbox slots
+
+The bitonic network survives only as the *within-tile* local sort (the
+paper's "one reducer sorts its bucket"), so the composite key is segmented
+per tile — ``dest * tile + local_src`` with local_src < tile — and stays
+int32 even when the old global key ``dest * n + src`` would overflow.  The
+old size cliffs (single-VMEM-tile ``n <= 2^18``; int32 key space
+``n_nodes·n + n − 1 < 2^31 − 1``) are gone: tiles shrink as ``n_nodes``
+grows and the tile count T is unbounded, so entry-level shapes route
+through the kernel (see :func:`kernel_fits` for the two remaining guards).
 
 The result is **bit-identical** to the dense :func:`repro.core.mrmodel.
 shuffle` — same mailbox payload/validity, same :class:`RoundStats` (including
 the drop count), same FIFO-within-source order — which the conformance suite
-(``tests/test_conformance.py``) and ``tests/test_kernel_shuffle.py`` pin.
+(``tests/test_conformance.py``) and the differential fuzz suite
+(``tests/test_kernel_shuffle.py``, ``tests/test_properties.py``) pin.
 
 Off-TPU (the jax 0.4.37 CPU CI) the kernels run with ``interpret=True`` —
 the kernel bodies execute as traced jnp with the identical control flow the
 Mosaic lowering compiles, so the parity tests cover the TPU code path's
 semantics; only the timing differs.  Select this path per engine with
 ``LocalEngine(shuffle_impl="kernel")`` / ``get_engine("pallas")``.
+
+    >>> import numpy as np, jax.numpy as jnp
+    >>> box, stats = kernel_shuffle(jnp.array([1, 0, 1, 1], jnp.int32),
+    ...                             jnp.arange(4.0), 2, 2, tile_n=2)
+    >>> np.asarray(box.valid).tolist()     # node 1 overflows: FIFO keeps
+    [[True, False], [True, True]]
+    >>> int(stats.dropped)                 # ...the first 2, drops the third
+    1
+    >>> kernel_fits((1 << 18) + 1, 64)     # past the old single-tile cliff
+    True
+    >>> kernel_fits(40000, 2 ** 16)        # past the old int32-key cliff
+    True
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,51 +62,121 @@ from .costmodel import RoundStats
 from .mrmodel import Mailbox, Payload, materialize_mailbox
 
 _INT32_MAX = 2**31 - 1
-# bitonic_sort runs the whole row as one VMEM tile (~512K f32 elements per
-# tile, key row + value row).  Enforced in interpret mode too, so the CPU CI
-# fails the same sizes a real TPU would instead of masking them.
+#: the OLD single-tile cliff (PR 3-7): the bitonic network ran the whole row
+#: as one VMEM tile of at most this many elements.  It survives only as the
+#: per-launch row-block budget inside kernels.bitonic_sort; kernel_fits no
+#: longer depends on n at all.
 _MAX_SORT_N = 1 << 18
+#: default within-tile sort width (one bitonic network per tile)
+_TILE_N = 4096
+#: below this derived tile width the per-tile sort degenerates — bail dense
+_MIN_TILE_N = 8
+#: per-launch budget for the (tile, n_nodes+1) one-hot count matrix — the
+#: VMEM footprint of one bincount_tiles grid step; tiles shrink to honor it
+_ONEHOT_BUDGET = 1 << 24
+#: total-element budget for each (T, n_nodes+1) count matrix in HBM
+_COUNTS_BUDGET = 1 << 25
 
 
-def _keyspace_overflows(n: int, n_nodes: int) -> bool:
-    # The stable sort runs on composite int32 keys dest * n + source; the
-    # invalid-item sentinel uses dest = n_nodes, so the largest key is
-    # n_nodes * n + (n - 1).  It must also stay below the int32 padding
-    # sentinel the bitonic network appends.
-    return bool(n) and n_nodes * n + (n - 1) >= _INT32_MAX
-
-
-def kernel_fits(n: int, n_nodes: int) -> bool:
-    """Whether a shuffle of ``n`` flattened items into ``n_nodes`` nodes fits
-    the kernel path's guards: the composite int32 (dest, source) key space
-    and the bitonic network's single-VMEM-tile budget.
-
-    Both guards are functions of one *call's* shape, so in a shape-scheduled
-    program (DESIGN.md §9) they are re-derived per stage from that stage's
-    (V_r, M_r) footprint — ``LocalEngine(shuffle_impl="kernel")`` uses this
-    predicate to route late levels that fit a single VMEM tile through the
-    kernel even when the entry level must take the dense shuffle.  The
-    strict :func:`kernel_shuffle` guards raise on exactly ``not
-    kernel_fits(...)`` — one predicate, two policies.
+class RouteLog:
+    """Host-side counters of the engine-level kernel-vs-dense routing
+    decision (``LocalEngine``/``ShardedEngine`` with ``shuffle_impl=
+    "kernel"``).  Incremented when the per-call :func:`kernel_fits`
+    predicate is evaluated — once per eager call, once per traced shape
+    under jit/scan — so tests and benches can assert the kernel path was
+    actually *taken* (``dense == 0``) rather than silently falling back.
     """
-    return not _keyspace_overflows(n, n_nodes) and n <= _MAX_SORT_N
+
+    __slots__ = ("kernel", "dense")
+
+    def __init__(self) -> None:
+        self.reset()
+
+    def reset(self) -> None:
+        self.kernel = 0
+        self.dense = 0
+
+    def snapshot(self) -> Tuple[int, int]:
+        return (self.kernel, self.dense)
 
 
-def _check_key_space(n: int, n_nodes: int) -> None:
-    if _keyspace_overflows(n, n_nodes):
+#: module-level routing introspection hook (reset() between probes)
+route_log = RouteLog()
+
+
+def _tile_width(n_nodes: int, tile_n: Optional[int] = None) -> int:
+    """Within-tile sort width for a shuffle into ``n_nodes`` buckets.
+
+    The derived width is the largest power of two honoring (a) the default
+    ``_TILE_N``, (b) the one-hot count matrix budget ``tile · (V+1) <=
+    _ONEHOT_BUDGET``, and (c) the segmented int32 key space ``(V+1) · tile
+    <= 2^31 − 1`` (the sentinel bucket V sorts last, strictly below the
+    bitonic network's int32-max padding).  An explicit ``tile_n`` overrides
+    the derivation (the differential fuzz suite uses tiny tiles to cross
+    the multi-tile boundary with small inputs).
+    """
+    if tile_n is not None:
+        if tile_n < 1:
+            raise ValueError(f"tile_n must be >= 1, got {tile_n}")
+        return tile_n
+    limit = min(_TILE_N, _ONEHOT_BUDGET // (n_nodes + 1),
+                _INT32_MAX // (n_nodes + 1))
+    t = 1
+    while t * 2 <= limit:
+        t *= 2
+    return t
+
+
+def kernel_fits(n: int, n_nodes: int, tile_n: Optional[int] = None) -> bool:
+    """Whether a shuffle of ``n`` flattened items into ``n_nodes`` nodes fits
+    the multi-tile kernel path's guards.
+
+    The old cliffs — ``n`` past one VMEM tile, composite key past int32 —
+    are gone: the sort is tiled and the keys are segmented per tile.  Two
+    guards remain, both functions of one *call's* shape:
+
+    - the derived tile width must stay >= ``_MIN_TILE_N`` (it shrinks as
+      ``n_nodes`` grows to keep one-hot counting in VMEM and segmented keys
+      in int32, so ~2M+ destination nodes bail to dense);
+    - the (T, n_nodes+1) count matrices must fit ``_COUNTS_BUDGET``
+      elements (T = ceil(n / tile)).
+
+    In a shape-scheduled program (DESIGN.md §9) the predicate is re-derived
+    per stage from that stage's (V_r, M_r) footprint — both
+    ``LocalEngine(shuffle_impl="kernel")`` and ``ShardedEngine``'s
+    per-shard scatter route each call through it.  The strict
+    :func:`kernel_shuffle` guards raise on exactly ``not kernel_fits(...)``
+    — one predicate, two policies.
+    """
+    tile = _tile_width(n_nodes, tile_n)
+    if tile < _MIN_TILE_N and tile_n is None:
+        return False
+    if (n_nodes + 1) * tile > _INT32_MAX:   # explicit tile_n past key space
+        return False
+    n_tiles = -(-n // tile) if n else 1
+    return n_tiles * (n_nodes + 1) <= _COUNTS_BUDGET
+
+
+def _check_fits(n: int, n_nodes: int, tile_n: Optional[int]) -> None:
+    tile = _tile_width(n_nodes, tile_n)
+    if ((tile < _MIN_TILE_N and tile_n is None)
+            or (n_nodes + 1) * tile > _INT32_MAX):
         raise ValueError(
-            f"kernel_shuffle: composite (dest, source) key space "
-            f"n_nodes*n={n_nodes}*{n} overflows int32; use the dense "
-            f"shuffle (LocalEngine(shuffle_impl='dense')) for this size")
-    if n > _MAX_SORT_N:
+            f"kernel_shuffle: n_nodes={n_nodes} shrinks the per-tile "
+            f"segmented key space dest*tile+src below tile={tile} < "
+            f"{_MIN_TILE_N} (or past int32); use the dense shuffle "
+            f"(LocalEngine(shuffle_impl='dense')) for this node count")
+    n_tiles = -(-n // tile) if n else 1
+    if n_tiles * (n_nodes + 1) > _COUNTS_BUDGET:
         raise ValueError(
-            f"kernel_shuffle: n={n} items exceed the bitonic network's "
-            f"single-VMEM-tile budget ({_MAX_SORT_N}); use the dense "
+            f"kernel_shuffle: tile-count matrix {n_tiles}x{n_nodes + 1} "
+            f"exceeds the counts budget ({_COUNTS_BUDGET}); use the dense "
             f"shuffle (LocalEngine(shuffle_impl='dense')) for this size")
 
 
 def kernel_shuffle(dests: jnp.ndarray, payload: Payload, n_nodes: int,
-                   capacity: int) -> Tuple[Mailbox, RoundStats]:
+                   capacity: int, *, tile_n: Optional[int] = None
+                   ) -> Tuple[Mailbox, RoundStats]:
     """Pallas-composed Shuffle: deliver item j to node ``dests[j]``.
 
     Contract identical to :func:`repro.core.mrmodel.shuffle` (the dense
@@ -90,42 +186,62 @@ def kernel_shuffle(dests: jnp.ndarray, payload: Payload, n_nodes: int,
     items ranked past ``capacity`` at their destination are dropped and
     counted.  Returns the same (Mailbox, RoundStats) bit-for-bit.
 
-    Composition (see module docstring): ``kernels.bincount`` computes the
-    per-node fan-in, ``kernels.prefix_scan`` turns counts into exclusive
-    slot offsets, and a ``kernels.bitonic_sort`` over unique composite
-    (dest, source) keys recovers each item's arrival rank at its
-    destination; a rank-addressed scatter then materializes the
-    (V, capacity) mailbox.
+    Composition (see module docstring): the flattened sources are cut into
+    T source-order tiles; one fused ``kernels.bincount_tiles`` launch
+    yields per-tile counts, the cross-tile exclusive prefix (items each
+    bucket received from earlier tiles) and in-tile bucket offsets; one
+    gridded ``kernels.bitonic_sort`` launch stably sorts every tile on the
+    segmented key ``dest·tile + local_src``; each item's global FIFO
+    arrival rank is then ``cross_tile_prefix + in-tile rank``, and a
+    rank-addressed scatter materializes the (V, capacity) mailbox.
+
+    ``tile_n`` overrides the derived tile width (testing/tuning knob; must
+    keep ``(n_nodes+1)·tile_n`` within int32).
     """
     dests = jnp.asarray(dests)
     flat_dest = dests.reshape(-1).astype(jnp.int32)
     n = flat_dest.shape[0]
-    _check_key_space(n, n_nodes)
+    _check_fits(n, n_nodes, tile_n)
     valid = flat_dest >= 0
 
-    # Phase 1 — counts: per-node fan-in (ids < 0 ignored by the kernel).
-    counts = _kops.bincount(flat_dest, n_nodes)
-    # Phase 2 — offsets: exclusive prefix of counts = each node's first
-    # arrival position in destination-sorted order; the appended total
-    # closes the table for the invalid-item sentinel group.
-    offsets = _kops.prefix_scan(counts[None, :], exclusive=True)[0]
-    first_pos = jnp.concatenate(
-        [offsets, jnp.sum(counts, keepdims=True)]).astype(jnp.int32)
-
-    # Phase 3 — stable route: sort unique composite (dest, source) keys so
-    # equal destinations keep source order (the FIFO contract).  stride = n
-    # makes keys collision-free; invalid items take dest = n_nodes and sort
-    # last, before the bitonic network's int32-max padding.
-    stride = max(n, 1)
-    src = jnp.arange(n, dtype=jnp.int32)
-    sort_key = jnp.where(valid, flat_dest, n_nodes) * stride + src
-    sorted_key, sorted_src = _kops.bitonic_sort(sort_key[None, :],
-                                                src[None, :])
-    sorted_dest = sorted_key[0] // stride
-    # Phase 4 — slot: arrival rank = sorted position − first position of
-    # the destination's segment; scatter ranks back to source order.
-    rank_sorted = src - first_pos[sorted_dest]
-    rank = jnp.zeros((n,), jnp.int32).at[sorted_src[0]].set(rank_sorted)
+    if n == 0:
+        counts = jnp.zeros((n_nodes,), jnp.int32)
+        rank = jnp.zeros((0,), jnp.int32)
+    else:
+        tile = _tile_width(n_nodes, tile_n)
+        n_tiles = -(-n // tile)
+        # Source-order tiling; the tail pads with the "no item" sentinel.
+        dtile = jnp.pad(flat_dest, (0, n_tiles * tile - n),
+                        constant_values=-1).reshape(n_tiles, tile)
+        # Phase 1 — counts, fused: per-tile fan-in C, cross-tile exclusive
+        # prefix P (Thm 4.2 R1 "send the counts": how many same-dest items
+        # earlier tiles hold), and in-tile bucket offsets F, one launch.
+        C, P, F = _kops.bincount_tiles(dtile, n_nodes)
+        counts = P[-1] + C[-1]                       # global per-node fan-in
+        # Phase 2 — tile-local stable sort on segmented keys: equal dests
+        # keep local source order; invalid items take the sentinel bucket
+        # n_nodes and sort last, below the int32-max padding.
+        lsrc = jnp.broadcast_to(jnp.arange(tile, dtype=jnp.int32),
+                                (n_tiles, tile))
+        key = jnp.where(dtile >= 0, dtile, n_nodes) * tile + lsrc
+        sorted_key, sorted_src = _kops.bitonic_sort(key, lsrc)
+        sorted_dest = sorted_key // tile             # in [0, n_nodes]
+        # Phase 3 — global FIFO rank: in-tile rank (sorted position minus
+        # the dest run's first in-tile slot) plus the cross-tile prefix.
+        # Sentinel columns close both tables for invalid/padded items.
+        first = jnp.concatenate([F, F[:, -1:] + C[:, -1:]], axis=1)
+        cross = jnp.concatenate([P, jnp.zeros((n_tiles, 1), P.dtype)],
+                                axis=1)
+        pos = jnp.broadcast_to(jnp.arange(tile, dtype=jnp.int32),
+                               (n_tiles, tile))
+        rank_sorted = (pos - jnp.take_along_axis(first, sorted_dest, axis=1)
+                       + jnp.take_along_axis(cross, sorted_dest, axis=1))
+        # Phase 4 — scatter ranks back to source order (tile-local inverse
+        # permutation), then drop the tail padding.
+        rows = jnp.broadcast_to(
+            jnp.arange(n_tiles, dtype=jnp.int32)[:, None], (n_tiles, tile))
+        rank = (jnp.zeros((n_tiles, tile), jnp.int32)
+                .at[rows, sorted_src].set(rank_sorted).reshape(-1)[:n])
 
     # Materialize through the tail shared with the dense shuffle; only the
     # remaining stats come from the kernel-computed counts.
@@ -134,7 +250,8 @@ def kernel_shuffle(dests: jnp.ndarray, payload: Payload, n_nodes: int,
     stats = RoundStats(
         items_sent=jnp.sum(counts),
         max_sent=max_sent,
-        max_received=jnp.max(counts).astype(jnp.int32),
+        max_received=jnp.max(counts).astype(jnp.int32) if n_nodes
+        else jnp.int32(0),
         dropped=jnp.sum(jnp.maximum(counts - capacity, 0)),
     )
     return box, stats

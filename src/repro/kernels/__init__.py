@@ -5,15 +5,16 @@ sweep against; the public entry points below are the jit'd wrappers from
 :mod:`repro.kernels.ops`, which select ``interpret=True`` automatically off
 TPU (the kernel body then runs as traced jnp with identical control flow to
 the Mosaic lowering).  The engine-level consumer is
-:func:`repro.core.kshuffle.kernel_shuffle`, which composes ``bincount`` →
-``prefix_scan`` → ``bitonic_sort`` into the capacity-bounded shuffle round
-(DESIGN.md §7).
+:func:`repro.core.kshuffle.kernel_shuffle`, which composes the multi-tile
+radix dataflow ``bincount_tiles`` (fused per-tile counts + cross-tile scan
++ in-tile offsets) → ``bitonic_sort`` (tile-local stable routing order)
+into the capacity-bounded shuffle round (DESIGN.md §7).
 """
-from .ops import (bincount, bitonic_sort, flash_attention, prefix_scan,
-                  ssm_scan)
+from .ops import (bincount, bincount_tiles, bitonic_sort, flash_attention,
+                  prefix_scan, ssm_scan)
 from . import ops, ref
 
 __all__ = [
-    "bincount", "bitonic_sort", "flash_attention", "prefix_scan", "ssm_scan",
-    "ops", "ref",
+    "bincount", "bincount_tiles", "bitonic_sort", "flash_attention",
+    "prefix_scan", "ssm_scan", "ops", "ref",
 ]

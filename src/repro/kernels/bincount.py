@@ -1,4 +1,4 @@
-"""Bucket-histogram Pallas kernel — the fan-in counting round of the shuffle.
+"""Bucket-histogram Pallas kernels — the fan-in counting round of the shuffle.
 
 Every shuffle/dispatch round of the paper starts by counting how many items
 target each reducer (Thm 4.2's R1 "send the counts" round; MoE dispatch's
@@ -6,6 +6,18 @@ tokens-per-expert).  On TPU a histogram is MXU-friendly when phrased as a
 one-hot contraction: each VMEM tile of ids becomes a (tile, n_buckets)
 comparison matrix reduced over rows; the sequential grid accumulates tile
 partials into the output block — a depth-1 funnel in VMEM.
+
+Two variants share that body:
+
+- :func:`bincount` — one global histogram (the original depth-1 funnel);
+- :func:`bincount_tiles` — the multi-tile radix front end of
+  :func:`repro.core.kshuffle.kernel_shuffle`: one launch emits, per input
+  tile, the tile's own counts, the *cross-tile exclusive prefix* of counts
+  (how many same-bucket items earlier tiles hold — the paper's "send the
+  counts" table, folded into the sequential grid's carry), and the
+  *in-tile bucket offsets* (exclusive prefix along the bucket axis).  The
+  count → cross-tile-scan → in-tile-offset dataflow that used to take a
+  bincount launch plus two prefix_scan launches is one kernel.
 """
 from __future__ import annotations
 
@@ -14,6 +26,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _bincount_kernel(ids_ref, o_ref, *, n_buckets: int):
@@ -56,3 +69,64 @@ def bincount(ids: jnp.ndarray, n_buckets: int, *, block_t: int = 1024,
         interpret=interpret,
     )(ids2)
     return out[0]
+
+
+def _bincount_tiles_kernel(ids_ref, c_ref, p_ref, f_ref, carry_ref, *,
+                           n_buckets: int):
+    """Grid step t counts tile t and snapshots the running cross-tile totals.
+
+    TPU grids execute sequentially, so ``carry`` holds the bucket totals of
+    all tiles to the *left* — written out before this tile's counts join it,
+    giving the exclusive cross-tile prefix each tile's items rank after.
+    """
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    ids = ids_ref[...]                                # (1, tile_n) int32
+    buckets = jax.lax.broadcasted_iota(jnp.int32, (1, n_buckets), 1)
+    onehot = (ids[0, :, None] == buckets[0, None, :]).astype(jnp.int32)
+    counts = jnp.sum(onehot, axis=0, keepdims=True)   # (1, n_buckets)
+    p_ref[...] = carry_ref[...][None, :]              # items in earlier tiles
+    f_ref[...] = jnp.cumsum(counts, axis=1) - counts  # in-tile bucket offsets
+    c_ref[...] = counts
+    carry_ref[...] = carry_ref[...] + counts[0]
+
+
+@functools.partial(jax.jit, static_argnames=("n_buckets", "interpret"))
+def bincount_tiles(tiles: jnp.ndarray, n_buckets: int, *,
+                   interpret: bool = False):
+    """Per-tile histogram + fused cross-tile/in-tile exclusive scans.
+
+    tiles: (T, tile_n) int32 ids in [0, n_buckets); ids < 0 are ignored.
+    Returns three (T, n_buckets) int32 arrays:
+
+    - ``counts[t, b]``  — occurrences of b in tile t;
+    - ``tile_prefix[t, b]`` — occurrences of b in tiles 0..t-1 (exclusive
+      cross-tile scan: the global rank offset of tile t's first b-item);
+    - ``bucket_offsets[t, b]`` — occurrences of buckets 0..b-1 in tile t
+      (exclusive in-tile scan: the first slot of b's run in a bucket-sorted
+      tile).
+
+    Bucket totals over all tiles are ``tile_prefix[-1] + counts[-1]``.
+    """
+    if tiles.ndim != 2:
+        raise ValueError("bincount_tiles expects (T, tile_n)")
+    T, tile_n = tiles.shape
+    if T == 0 or tile_n == 0:
+        z = jnp.zeros((T, n_buckets), jnp.int32)
+        return z, z, z
+    out_shape = jax.ShapeDtypeStruct((T, n_buckets), jnp.int32)
+    spec = pl.BlockSpec((1, n_buckets), lambda i: (i, 0))
+    counts, prefix, offsets = pl.pallas_call(
+        functools.partial(_bincount_tiles_kernel, n_buckets=n_buckets),
+        grid=(T,),
+        in_specs=[pl.BlockSpec((1, tile_n), lambda i: (i, 0))],
+        out_specs=[spec, spec, spec],
+        out_shape=[out_shape, out_shape, out_shape],
+        scratch_shapes=[pltpu.VMEM((n_buckets,), jnp.int32)],
+        interpret=interpret,
+    )(tiles)
+    return counts, prefix, offsets

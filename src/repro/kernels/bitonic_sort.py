@@ -9,6 +9,12 @@ divergence, fully VPU-vectorized.  n must be a power of two (pad with +inf).
 Stages: for k in 2,4,..,n (merge size), for j in k/2,..,1 (distance):
 elements at distance j swap so each k-block becomes ascending/descending by
 position — log^2(n) dense passes over the tile.
+
+Rows sort independently, so the launch *grids over row blocks*: each grid
+step sorts ``block_rows`` rows in one VMEM tile of <= _ROW_BLOCK_ELEMS
+elements.  A (T, tile_n) call — the multi-tile radix shuffle's T local
+sorts (repro.core.kshuffle) — is therefore ONE pallas_call at any T; only
+a single row's padded width is bounded by VMEM.
 """
 from __future__ import annotations
 
@@ -54,37 +60,54 @@ def _bitonic_kernel(k_ref, v_ref, ok_ref, ov_ref):
     ov_ref[...] = vals
 
 
+#: per-grid-step VMEM budget (elements per array) — one row block
+_ROW_BLOCK_ELEMS = 1 << 18
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def bitonic_sort(keys: jnp.ndarray, values: jnp.ndarray, *,
                  interpret: bool = False):
     """Sort each row of (rows, n) ascending by key, permuting values along.
 
     n is padded to the next power of two with +inf keys (dropped on return).
-    The whole tile must fit VMEM: rows * n_pad <= ~512K f32 elements.
+    Rows are independent networks, so the launch grids over blocks of
+    ``_ROW_BLOCK_ELEMS // n_pad`` rows — any row count fits; only a single
+    row's padded width must fit one VMEM tile (n_pad <= _ROW_BLOCK_ELEMS).
     """
     if keys.shape != values.shape or keys.ndim != 2:
         raise ValueError("bitonic_sort expects matching (rows, n) arrays")
     rows, n = keys.shape
-    if n == 0:                       # empty rows are trivially sorted
+    if n == 0 or rows == 0:          # empty rows are trivially sorted
         return keys, values
     n_pad = 1
     while n_pad < n:
         n_pad *= 2
+    if n_pad > _ROW_BLOCK_ELEMS:
+        raise ValueError(
+            f"bitonic_sort: one row of n={n} (padded {n_pad}) exceeds the "
+            f"single-VMEM-tile budget ({_ROW_BLOCK_ELEMS}); split the row "
+            f"into tiles first (see repro.core.kshuffle)")
     if n_pad != n:
         big = (jnp.finfo(keys.dtype).max
                if jnp.issubdtype(keys.dtype, jnp.floating)
                else jnp.iinfo(keys.dtype).max)
         keys = jnp.pad(keys, ((0, 0), (0, n_pad - n)), constant_values=big)
         values = jnp.pad(values, ((0, 0), (0, n_pad - n)))
+    block_rows = min(rows, max(1, _ROW_BLOCK_ELEMS // n_pad))
+    grid_r = -(-rows // block_rows)
+    if grid_r * block_rows != rows:  # zero rows sort (harmlessly) in-block
+        pad_r = grid_r * block_rows - rows
+        keys = jnp.pad(keys, ((0, pad_r), (0, 0)))
+        values = jnp.pad(values, ((0, pad_r), (0, 0)))
+    spec = pl.BlockSpec((block_rows, n_pad), lambda i: (i, 0))
     out_k, out_v = pl.pallas_call(
         _bitonic_kernel,
-        grid=(1,),
-        in_specs=[pl.BlockSpec((rows, n_pad), lambda i: (0, 0)),
-                  pl.BlockSpec((rows, n_pad), lambda i: (0, 0))],
-        out_specs=[pl.BlockSpec((rows, n_pad), lambda i: (0, 0)),
-                   pl.BlockSpec((rows, n_pad), lambda i: (0, 0))],
-        out_shape=[jax.ShapeDtypeStruct((rows, n_pad), keys.dtype),
-                   jax.ShapeDtypeStruct((rows, n_pad), values.dtype)],
+        grid=(grid_r,),
+        in_specs=[spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((grid_r * block_rows, n_pad), keys.dtype),
+            jax.ShapeDtypeStruct((grid_r * block_rows, n_pad), values.dtype)],
         interpret=interpret,
     )(keys, values)
-    return out_k[:, :n], out_v[:, :n]
+    return out_k[:rows, :n], out_v[:rows, :n]

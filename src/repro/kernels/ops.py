@@ -37,6 +37,12 @@ def bincount(ids: jnp.ndarray, n_buckets: int, *,
                               interpret=_interpret())
 
 
+def bincount_tiles(tiles: jnp.ndarray, n_buckets: int):
+    """Fused (counts, cross-tile exclusive prefix, in-tile bucket offsets)
+    over (T, tile_n) ids — the radix shuffle's one-launch counting phase."""
+    return _bincount.bincount_tiles(tiles, n_buckets, interpret=_interpret())
+
+
 def bitonic_sort(keys: jnp.ndarray, values: jnp.ndarray):
     return _bitonic.bitonic_sort(keys, values, interpret=_interpret())
 

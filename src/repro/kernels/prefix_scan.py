@@ -9,7 +9,10 @@ flows sequentially across grid steps (TPU grids execute in order, so the
 carry lives in a VMEM scratch accumulator).
 
 Used for MoE dispatch offsets (tokens-per-expert -> send offsets) and as the
-building block of the chunked SSM scan.
+building block of the chunked SSM scan.  The kernel shuffle's cross-tile
+count scan used to be a call here too; it now lives fused inside
+:func:`repro.kernels.bincount.bincount_tiles` (same carry-across-grid-steps
+structure, one launch fewer on the hot loop).
 """
 from __future__ import annotations
 

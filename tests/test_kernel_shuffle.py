@@ -1,4 +1,5 @@
-"""kernel_shuffle (Pallas counts → offsets → sort → slot) vs the dense oracle.
+"""kernel_shuffle (multi-tile radix: fused counts → tile sort → scatter) vs
+the dense oracle.
 
 Bit-identity is the contract (DESIGN.md §7): same mailbox payload and
 validity, same RoundStats values *and dtypes*, same drop set, for every
@@ -15,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import CostAccum, LocalEngine, ShardedEngine, get_engine
-from repro.core.kshuffle import kernel_shuffle
+from repro.core.kshuffle import kernel_fits, kernel_shuffle
 from repro.core.mrmodel import shuffle as dense_shuffle
 
 
@@ -85,19 +86,212 @@ class TestKernelShuffleParity:
         assert_identical(dense_shuffle(dests, payload, 64, 2),
                          kernel_shuffle(dests, payload, 64, 2))
 
-    def test_key_space_guard(self):
-        n = 70000
-        with pytest.raises(ValueError, match="key space"):
-            kernel_shuffle(jnp.zeros((n,), jnp.int32),
-                           jnp.zeros((n,), jnp.float32), 2**16, 4)
+    @pytest.mark.parametrize("tile_n", [1, 3, 8])
+    def test_multi_tile_parity(self, tile_n):
+        """Forcing tiny tiles crosses every tile boundary with small inputs:
+        the cross-tile prefix (Thm 4.2 "send the counts") must stitch the
+        per-tile FIFO ranks into the identical global order."""
+        rng = np.random.default_rng(42 + tile_n)
+        V, cap, n = 7, 3, 45
+        dests = jnp.asarray(rng.integers(-1, V, n).astype(np.int32))
+        payload = jnp.asarray(rng.normal(size=n).astype(np.float32))
+        assert_identical(dense_shuffle(dests, payload, V, cap),
+                         kernel_shuffle(dests, payload, V, cap,
+                                        tile_n=tile_n),
+                         ctx=f"tile_n={tile_n}")
 
-    def test_vmem_tile_guard(self):
-        """Sizes past the bitonic single-tile budget raise identically in
-        interpret and compiled mode (the CPU CI must not mask a TPU OOM)."""
-        n = (1 << 18) + 1
-        with pytest.raises(ValueError, match="VMEM"):
-            kernel_shuffle(jnp.zeros((n,), jnp.int32),
-                           jnp.zeros((n,), jnp.float32), 4, 4)
+
+class TestGuardBoundaries:
+    """kernel_fits pinned at the exact guard edges (DESIGN.md §7).
+
+    The old cliffs — single-VMEM-tile n <= 2^18 and the global int32 key
+    space — are gone; the two remaining guards (minimum derived tile width,
+    count-matrix budget) are asserted on both sides of each boundary.  Pure
+    predicate checks: nothing here executes a kernel at the big shapes.
+    """
+
+    def test_old_single_tile_cliff_gone(self):
+        from repro.core.kshuffle import _MAX_SORT_N
+        assert kernel_fits(_MAX_SORT_N - 1, 64)
+        assert kernel_fits(_MAX_SORT_N, 64)
+        assert kernel_fits(_MAX_SORT_N + 1, 64)
+
+    def test_old_int32_key_cliff_gone(self):
+        # Old global key dest*n_pad+src: 65537 * pow2ceil(40000) > 2^31.
+        # Segmented per-tile keys stay at 65537 * 128 — comfortably int32.
+        assert kernel_fits(40000, 2 ** 16)
+
+    def test_counts_budget_exact_edge(self):
+        # V+1 = 1024 -> derived tile 4096 -> T <= 2^25/1024 = 32768 tiles,
+        # i.e. n <= 32768 * 4096 = 2^27 exactly.
+        assert kernel_fits(1 << 27, 1023)
+        assert not kernel_fits((1 << 27) + 1, 1023)
+
+    def test_min_tile_width_exact_edge(self):
+        # tile = pow2floor(2^24 // (V+1)): V+1 = 2^21 -> tile 8 (= _MIN_TILE_N
+        # fits); V+1 = 2^21 + 1 -> tile 4 -> bail dense.
+        assert kernel_fits(100, (1 << 21) - 1)
+        assert not kernel_fits(100, 1 << 21)
+
+    def test_explicit_tile_int32_edge(self):
+        # An explicit tile_n must keep (V+1)*tile_n within int32: with
+        # V+1 = 2^21, tile 512 is the last fitting power of two (2^30).
+        assert kernel_fits(512, (1 << 21) - 1, tile_n=512)
+        assert not kernel_fits(512, (1 << 21) - 1, tile_n=1024)
+
+    def test_empty_input_fits_iff_tile_does(self):
+        assert kernel_fits(0, 5)
+        assert not kernel_fits(0, 1 << 22)
+
+    def test_strict_guard_raises_key_space(self):
+        with pytest.raises(ValueError, match="key space"):
+            kernel_shuffle(jnp.zeros((8,), jnp.int32),
+                           jnp.zeros((8,), jnp.float32), 1 << 22, 4)
+
+    def test_strict_guard_raises_counts_budget(self):
+        with pytest.raises(ValueError, match="counts budget"):
+            kernel_shuffle(jnp.zeros((200,), jnp.int32),
+                           jnp.zeros((200,), jnp.float32), (1 << 21) - 1, 4,
+                           tile_n=8)
+
+    def test_strict_guard_is_the_predicate(self):
+        """One predicate, two policies: _check_fits raises exactly where
+        kernel_fits is False."""
+        from repro.core.kshuffle import _check_fits
+        cases = [(100, 8, None), (0, 5, None), ((1 << 18) + 1, 64, None),
+                 (40000, 2 ** 16, None), (70000, 2 ** 16, None),
+                 (1 << 27, 1023, None), ((1 << 27) + 1, 1023, None),
+                 (100, (1 << 21) - 1, None), (100, 1 << 21, None),
+                 (512, (1 << 21) - 1, 512), (512, (1 << 21) - 1, 1024),
+                 (200, (1 << 21) - 1, 8)]
+        for n, V, t in cases:
+            raised = False
+            try:
+                _check_fits(n, V, t)
+            except ValueError:
+                raised = True
+            assert raised == (not kernel_fits(n, V, t)), (n, V, t)
+
+    def test_multi_tile_path_actually_taken(self):
+        """Regression: a shape past the old single-tile cliff must route
+        through the kernel (route_log), not silently fall back to dense."""
+        from repro.core.kshuffle import _MAX_SORT_N, route_log
+        rng = np.random.default_rng(3)
+        n, V, cap = _MAX_SORT_N + 64, 16, 20000
+        dests = jnp.asarray(rng.integers(-1, V, n).astype(np.int32))
+        payload = jnp.asarray(rng.normal(size=n).astype(np.float32))
+        eng = get_engine("pallas")
+        route_log.reset()
+        got = eng.shuffle(dests, payload, V, cap)
+        assert route_log.snapshot() == (1, 0)
+        assert_identical(LocalEngine().shuffle(dests, payload, V, cap), got,
+                         ctx="past-old-cliff")
+
+
+class TestDifferentialFuzz:
+    """Seeded random differential suite: kernel vs dense oracle across both
+    sides of every guard boundary — single vs multi-tile (tile_n forced
+    tiny), all destination patterns the dense shuffle accepts, Local and
+    per-shard Sharded."""
+
+    PATTERNS = ("uniform", "all_same", "all_invalid", "overflow",
+                "more_nodes", "empty_2d")
+
+    @staticmethod
+    def _case(seed):
+        rng = np.random.default_rng(seed)
+        pattern = TestDifferentialFuzz.PATTERNS[
+            seed % len(TestDifferentialFuzz.PATTERNS)]
+        V = int(rng.integers(1, 24))
+        cap = int(rng.integers(1, 6))
+        n = int(rng.integers(0, 300))
+        if pattern == "uniform":
+            dests = rng.integers(-1, V, n)
+        elif pattern == "all_same":
+            dests = np.full(n, int(rng.integers(0, V)))
+        elif pattern == "all_invalid":
+            dests = np.full(n, -1)
+        elif pattern == "overflow":
+            V, cap = int(rng.integers(1, 4)), 1
+            dests = rng.integers(-1, V, n)
+        elif pattern == "more_nodes":
+            V, n = 300, int(rng.integers(0, 40))
+            dests = rng.integers(-1, V, n)
+        else:                                    # empty_2d: (0, M) sends
+            dests = np.zeros((0, int(rng.integers(1, 5))))
+        dests = jnp.asarray(dests.astype(np.int32))
+        payload = {
+            "x": jnp.asarray(rng.normal(size=dests.shape).astype(np.float32)),
+            "y": jnp.asarray(rng.integers(0, 99, dests.shape + (2,))
+                             .astype(np.int32))}
+        return dests, payload, V, cap
+
+    @pytest.mark.parametrize("seed", range(18))
+    def test_fuzz_local(self, seed):
+        dests, payload, V, cap = self._case(seed)
+        tile_n = (None, 8, 32)[seed % 3]
+        assert_identical(
+            dense_shuffle(dests, payload, V, cap),
+            kernel_shuffle(dests, payload, V, cap, tile_n=tile_n),
+            ctx=f"seed={seed} V={V} cap={cap} shape={dests.shape} "
+                f"tile_n={tile_n}")
+
+    @pytest.mark.parametrize("seed", [0, 1, 3, 4])
+    def test_fuzz_sharded(self, seed):
+        """Same cases through the shard_map route: per-shard kernel scatter
+        vs per-shard dense scatter, bit-identical stats included."""
+        dests, payload, V, cap = self._case(seed)
+        V = ShardedEngine().aligned_nodes(V)
+        assert_identical(
+            ShardedEngine().shuffle(dests, payload, V, cap),
+            ShardedEngine(shuffle_impl="kernel").shuffle(dests, payload,
+                                                         V, cap),
+            ctx=f"sharded seed={seed} V={V} cap={cap}")
+
+
+class TestShardedPerLevelRouting:
+    def test_late_levels_route_through_kernel(self, monkeypatch):
+        """The guard is re-derived per call (not baked in at _build time):
+        with the counts budget shrunk so the entry shape cannot fit, a
+        later, smaller call in the same engine still takes the kernel path
+        — the shape-scheduled programs' shrinking levels stay kernel-backed.
+        """
+        from repro.core import kshuffle as K
+        V, cap = 8, 4
+        tile = K._tile_width(V)                  # derived width (4096)
+        # Budget admits exactly one tile of counts: n <= tile fits,
+        # n > tile does not.
+        monkeypatch.setattr(K, "_COUNTS_BUDGET", V + 1)
+        rng = np.random.default_rng(9)
+        big = jnp.asarray(rng.integers(-1, V, 2 * tile).astype(np.int32))
+        small = jnp.asarray(rng.integers(-1, V, 64).astype(np.int32))
+        eng = ShardedEngine(shuffle_impl="kernel")
+        oracle = ShardedEngine()
+        K.route_log.reset()
+        for d in (big, small):
+            p = jnp.arange(d.shape[0], dtype=jnp.float32)
+            assert_identical(oracle.shuffle(d, p, V, cap),
+                             eng.shuffle(d, p, V, cap),
+                             ctx=f"n={d.shape[0]}")
+        assert K.route_log.snapshot() == (1, 1)
+
+    def test_local_engine_per_call_guard(self, monkeypatch):
+        """LocalEngine('pallas') falls back to dense past the budget and
+        returns to the kernel below it, bit-identically, same instance."""
+        from repro.core import kshuffle as K
+        V, cap = 8, 4
+        tile = K._tile_width(V)
+        monkeypatch.setattr(K, "_COUNTS_BUDGET", V + 1)
+        rng = np.random.default_rng(10)
+        eng = get_engine("pallas")
+        oracle = LocalEngine()
+        K.route_log.reset()
+        for n in (2 * tile, 64):
+            d = jnp.asarray(rng.integers(-1, V, n).astype(np.int32))
+            p = jnp.arange(n, dtype=jnp.float32)
+            assert_identical(oracle.shuffle(d, p, V, cap),
+                             eng.shuffle(d, p, V, cap), ctx=f"n={n}")
+        assert K.route_log.snapshot() == (1, 1)
 
 
 class TestEngineWiring:

@@ -1,4 +1,6 @@
 """Per-kernel shape/dtype sweeps: Pallas (interpret=True on CPU) vs ref.py."""
+import sys
+
 import numpy as np
 import pytest
 import jax
@@ -7,6 +9,11 @@ import jax.numpy as jnp
 from repro.kernels import ops, ref
 # raw kernel entry points (explicit interpret flag), not the ops wrappers
 from repro.kernels.bincount import bincount as raw_bincount
+from repro.kernels.bincount import bincount_tiles as raw_bincount_tiles
+# the package re-exports the bitonic_sort *function*; reach the submodule
+# explicitly to monkeypatch its row-block budget
+import repro.kernels.bitonic_sort
+bitonic_mod = sys.modules["repro.kernels.bitonic_sort"]
 from repro.kernels.bitonic_sort import bitonic_sort as raw_bitonic_sort
 from repro.kernels.prefix_scan import prefix_scan as raw_prefix_scan
 
@@ -44,6 +51,68 @@ def test_bincount(n, n_buckets, block_t):
     got = ops.bincount(ids, n_buckets, block_t=block_t)
     want = ref.bincount_ref(ids, n_buckets)
     np.testing.assert_array_equal(got, want)
+
+
+def _bincount_tiles_oracle(tiles, n_buckets):
+    """numpy oracle: per-tile histogram + the two exclusive scans."""
+    t = np.asarray(tiles)
+    C = np.stack([np.bincount(row[row >= 0], minlength=n_buckets)
+                  for row in t]).astype(np.int32) if t.shape[0] else \
+        np.zeros((0, n_buckets), np.int32)
+    P = np.cumsum(C, axis=0) - C                  # cross-tile exclusive
+    F = np.cumsum(C, axis=1) - C                  # in-tile bucket offsets
+    return C, P, F
+
+
+@pytest.mark.parametrize("interpret", INTERPRET_MODES)
+@pytest.mark.parametrize("T,tile_n,n_buckets", [
+    (1, 32, 8),          # single tile: prefix must be all-zero
+    (5, 16, 8),          # multi-tile carry across grid steps
+    (3, 7, 100),         # n_buckets > items per tile
+    (4, 8, 1),           # single bucket
+    (0, 16, 8),          # no tiles
+    (2, 0, 8),           # empty tiles
+])
+def test_bincount_tiles(T, tile_n, n_buckets, interpret):
+    tiles = jnp.asarray(RNG.integers(-1, n_buckets, (T, tile_n))
+                        .astype(np.int32))
+    got = raw_bincount_tiles(tiles, n_buckets, interpret=interpret)
+    want = _bincount_tiles_oracle(tiles, n_buckets)
+    for g, w, name in zip(got, want, ("counts", "tile_prefix",
+                                      "bucket_offsets")):
+        np.testing.assert_array_equal(np.asarray(g), w, err_msg=name)
+
+
+@pytest.mark.parametrize("interpret", INTERPRET_MODES)
+def test_bincount_tiles_totals_match_bincount(interpret):
+    """tile_prefix[-1] + counts[-1] is the global histogram."""
+    tiles = jnp.asarray(RNG.integers(-1, 13, (6, 32)).astype(np.int32))
+    C, P, _ = raw_bincount_tiles(tiles, 13, interpret=interpret)
+    want = raw_bincount(tiles.reshape(-1), 13, block_t=64,
+                        interpret=interpret)
+    np.testing.assert_array_equal(np.asarray(P[-1] + C[-1]), np.asarray(want))
+
+
+def test_bitonic_sort_grids_over_row_blocks(monkeypatch):
+    """Row counts past one VMEM block split across grid steps (the T-tile
+    sort of the radix shuffle): shrink the budget so a small case grids,
+    including a non-multiple tail row block."""
+    monkeypatch.setattr(bitonic_mod, "_ROW_BLOCK_ELEMS", 64)
+    rows, n = 10, 12                  # n_pad 16 -> block_rows 4 -> grid 3
+    base = RNG.permutation(rows * n * 4)[:rows * n].reshape(rows, n)
+    k = jnp.asarray(base.astype(np.int32))
+    v = jnp.asarray(RNG.normal(size=(rows, n)).astype(np.float32))
+    ks, vs = raw_bitonic_sort(k, v, interpret=True)
+    kr, vr = ref.bitonic_sort_ref(k, v)
+    np.testing.assert_array_equal(np.asarray(ks), np.asarray(kr))
+    np.testing.assert_array_equal(np.asarray(vs), np.asarray(vr))
+
+
+def test_bitonic_sort_single_row_width_guard(monkeypatch):
+    monkeypatch.setattr(bitonic_mod, "_ROW_BLOCK_ELEMS", 8)
+    with pytest.raises(ValueError, match="single-VMEM-tile"):
+        raw_bitonic_sort(jnp.zeros((1, 9), jnp.int32),
+                         jnp.zeros((1, 9), jnp.float32), interpret=True)
 
 
 @pytest.mark.parametrize("rows,n", [(1, 8), (2, 64), (3, 100), (1, 7), (4, 256)])

@@ -241,15 +241,21 @@ class TestJitAndScan:
 
 
 class TestKernelGuardFallback:
-    def test_oversize_call_falls_back_to_dense(self):
+    def test_oversize_call_falls_back_to_dense(self, monkeypatch):
         """The pallas engine re-derives the kernel guards per call: a call
-        past the int32 key space budget runs the dense shuffle instead of
-        raising, bit-identically."""
+        past the counts budget runs the dense shuffle instead of raising,
+        bit-identically (budget shrunk so a modest shape exceeds it)."""
+        from repro.core import kshuffle as K
+        V = 8
+        monkeypatch.setattr(K, "_COUNTS_BUDGET", V + 1)  # one tile of counts
+        n = 2 * K._tile_width(V)                         # two tiles: too big
+        assert not K.kernel_fits(n, V)
         eng = get_engine("pallas")
-        n, V = 70000, 2 ** 16          # V * n >= 2^31: kernel cannot fit
         dests = jnp.asarray(RNG.integers(0, V, n).astype(np.int32))
         payload = jnp.asarray(RNG.normal(size=n).astype(np.float32))
+        K.route_log.reset()
         box_k, st_k = eng.shuffle(dests, payload, V, 4)
+        assert K.route_log.snapshot() == (0, 1)
         box_d, st_d = LocalEngine().shuffle(dests, payload, V, 4)
         np.testing.assert_array_equal(np.asarray(box_k.payload),
                                       np.asarray(box_d.payload))
@@ -258,8 +264,12 @@ class TestKernelGuardFallback:
         for fa, fb in zip(st_k, st_d):
             assert int(fa) == int(fb)
 
-    def test_small_call_still_uses_kernel(self):
+    def test_kernel_fits_new_guards(self):
         from repro.core.kshuffle import kernel_fits
         assert kernel_fits(100, 8)
+        # the old single-tile and int32-key cliffs are gone...
+        assert kernel_fits((1 << 18) + 1, 4)
+        assert kernel_fits(40000, 2 ** 16)
+        # ...what remains: tile width floor and the counts budget
+        assert not kernel_fits(100, 1 << 21)
         assert not kernel_fits(70000, 2 ** 16)
-        assert not kernel_fits((1 << 18) + 1, 4)
