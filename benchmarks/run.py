@@ -769,11 +769,107 @@ def cfg_headroom(row, max_wait_ms):
     return max_wait_ms / max(row["p99_wait_ms"], 1e-9)
 
 
+def bench_obs(quick):
+    """Observability coverage and overhead (DESIGN.md §12).
+
+    Two costs matter for ``repro.obs``: the tracer must see everything at
+    host boundaries (coverage) and must cost nothing when disabled or on
+    jitted paths (overhead).  The gated ``"series"`` are deterministic and
+    higher-is-better: **stage coverage** (fraction of a traced eager sort's
+    declared stages that appear as ``plan.stage`` spans — drops below 1.0
+    if an instrumentation hook is lost in a refactor), **round coverage**
+    (``engine.round`` events per declared shuffle round, entry included),
+    and **serve event density** (lifecycle events per query in a seeded
+    VirtualClock open-loop run — drops if a dispatch/queue/retry hook is
+    lost).  Wall-clock tracing overhead on the jitted path is reported
+    under ``"info"``, never gated.  Every run carries an in-bench
+    neutrality assert: traced and untraced outputs (values + CostAccum)
+    must be bit-identical.
+    """
+    import json
+    from repro.core import LocalEngine, execute_plan, sort_plan
+    from repro.obs import Tracer, summarize
+    from repro.serve import QueryService, VirtualClock
+    from repro.serve.loadgen import (TrafficConfig, make_suite,
+                                     make_workload, run_open_loop)
+
+    n, M = 512, 32             # fixed: the series must compare across runs
+    tr = Tracer()
+    eng_on, eng_off = LocalEngine(tracer=tr), LocalEngine()
+    plan = sort_plan(n, M, align=eng_off.aligned_nodes)
+    x = jnp.asarray(np.random.default_rng(0).permutation(n)
+                    .astype(np.float32))
+
+    # -- neutrality: eager traced vs eager untraced, bit for bit ---------
+    out_on = execute_plan(plan, eng_on, (x,))
+    out_off = execute_plan(plan, eng_off, (x,))
+    for la, lb in zip(jax.tree_util.tree_leaves(out_on),
+                      jax.tree_util.tree_leaves(out_off)):
+        assert np.array_equal(np.asarray(la), np.asarray(lb)), \
+            "bench_obs: tracing changed the output"
+
+    # -- coverage from the trace alone -----------------------------------
+    s = summarize(tr)
+    assert s["schedule_ok"], "bench_obs: measured rounds != declared"
+    stage_rows = len(s["stages"])
+    stage_cov = stage_rows / len(plan.stages)
+    # engine.round fires once per physical shuffle; account stages declare
+    # rounds without shuffling, so the denominator is the shuffle stages
+    shuffle_stages = sum(1 for st in plan.stages if st.shuffles) or 1
+    rounds_seen = sum(1 for e in tr.events() if e.kind == "engine.round")
+    round_cov = rounds_seen / shuffle_stages
+
+    # -- jitted-path overhead (info only): tracer on vs off --------------
+    exe_on, exe_off = eng_on.compile(plan), eng_off.compile(plan)
+    reps = 3 if quick else 10
+    us_on = _timeit(lambda: jax.block_until_ready(exe_on(x).values), n=reps)
+    us_off = _timeit(lambda: jax.block_until_ready(exe_off(x).values),
+                     n=reps)
+
+    # -- serve lifecycle density (seeded, VirtualClock) ------------------
+    cfg = TrafficConfig(n_queries=32, seed=7)
+    clock = VirtualClock()
+    str_ = Tracer(clock=clock)
+    seng = LocalEngine(tracer=str_)
+    svc = QueryService(seng, max_batch=4, max_wait_ms=5.0, clock=clock,
+                       tracer=str_)
+    row = run_open_loop(svc, make_workload(make_suite(seng, cfg), cfg),
+                        offered_qps=800.0, clock=clock,
+                        process="poisson", seed=cfg.seed)
+    serve_events = sum(1 for e in str_.events()
+                       if e.kind.startswith("serve."))
+    serve_density = serve_events / cfg.n_queries
+
+    series = {
+        "obs_stage_coverage": stage_cov,
+        "obs_round_coverage": round_cov,
+        "obs_serve_event_density": serve_density,
+    }
+    info = {"tracing_overhead_jitted": us_on / us_off,
+            "eager_events": len(tr), "serve_events": serve_events,
+            "serve_accepted": row["accepted"]}
+    payload = {"bench": "observability", "n": n, "M": M,
+               "backend": jax.default_backend(),
+               "rows": [{"stage_rows": stage_rows,
+                         "declared_stages": len(plan.stages),
+                         "rounds_seen": rounds_seen,
+                         "shuffle_stages": shuffle_stages,
+                         "us_traced": us_on, "us_untraced": us_off,
+                         "neutrality": True}],
+               "series": series, "info": info}
+    with open("BENCH_obs.json", "w", encoding="utf-8") as f:
+        json.dump(payload, f, indent=2)
+    print(f"obs_coverage,{us_on:.0f},stage_cov={stage_cov:.2f}"
+          f"|round_cov={round_cov:.2f}|serve_density={serve_density:.2f}"
+          f"|overhead={us_on/us_off:.2f}x|neutral=True")
+    print("obs_bench_json,0,wrote BENCH_obs.json (1 row)")
+
+
 BENCHES = [bench_prefix_sums, bench_random_indexing, bench_multisearch,
            bench_sorting, bench_funnel, bench_queues, bench_shuffle,
            bench_kernels, bench_moe_dispatch, bench_geometry,
            bench_cost_model, bench_plan, bench_shape, bench_serve,
-           bench_faults]
+           bench_faults, bench_obs]
 
 
 def main() -> None:

@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from .plan import Plan, execute_plan
+from ..obs import NULL_TRACER
 
 
 class CacheInfo(NamedTuple):
@@ -148,7 +149,20 @@ class Executable:
         return self._traces
 
     def __call__(self, *inputs, key=None):
-        return self._fn(key, *inputs)
+        tr = getattr(self.engine, "tracer", NULL_TRACER)
+        if not tr.enabled:
+            return self._fn(key, *inputs)
+        t0 = tr.clock()
+        n0 = self._traces
+        out = self._fn(key, *inputs)
+        backend = getattr(self.engine, "name", "?")
+        if self._traces > n0 and getattr(self.engine, "jittable", False):
+            tr.event("exe.compile", plan=self.plan.name, backend=backend,
+                     trace_count=self._traces)
+        tr.event("exe.call", _dur=tr.clock() - t0, plan=self.plan.name,
+                 backend=backend)
+        tr.count("exe.calls")
+        return out
 
     # -- batching ------------------------------------------------------------
     def _batch_keys(self, keys, B: int):

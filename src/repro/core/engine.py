@@ -77,6 +77,7 @@ from jax import lax
 from .costmodel import CostAccum, MRCost, RoundStats
 from .mrmodel import Mailbox, Payload, RoundFn, make_mailbox
 from .mrmodel import shuffle as _dense_shuffle
+from ..obs import NULL_TRACER, round_event as _round_event
 
 
 class RoundProgram(NamedTuple):
@@ -119,6 +120,15 @@ class MREngine:
     #: bound on the per-engine plan/shuffle cache (see BoundedCache)
     cache_size = 128
     _cache = None
+    #: observability hook (repro.obs, DESIGN.md §12): a no-op NullTracer by
+    #: default; an attached live Tracer records round/compile/route events
+    #: at host boundaries only (its events drop at jax trace time, so
+    #: jitted round programs lower identically either way)
+    tracer = NULL_TRACER
+
+    def __init__(self, tracer=None):
+        if tracer is not None:
+            self.tracer = tracer
 
     # -- plan/compile/execute split (repro.core.plan / repro.core.api) -------
     def _ensure_cache(self):
@@ -154,8 +164,15 @@ class MREngine:
         cache = self._ensure_cache()
         key = self.plan_key(plan)
         exe = cache.lookup(key)
+        tr = self.tracer
         if exe is None:
             exe = cache.store(key, Executable(plan, self))
+            if tr.enabled:
+                tr.event("cache.miss", plan=plan.name, backend=self.name)
+                tr.count("plan_cache.misses")
+        elif tr.enabled:
+            tr.event("cache.hit", plan=plan.name, backend=self.name)
+            tr.count("plan_cache.hits")
         return exe
 
     def cache_info(self):
@@ -195,8 +212,18 @@ class MREngine:
         compact numbering [0, n_nodes).  None keeps the current shape."""
         cap = capacity if capacity is not None else box.capacity
         V = n_nodes if n_nodes is not None else box.n_nodes
+        tr = self.tracer
+        if not tr.enabled:
+            dests, payload = f(round_idx, self.node_ids(box.n_nodes), box)
+            return self.shuffle(dests, payload, V, cap)
+        # Traced (per-round) path: the event drops silently under jit/scan
+        # tracing, so the jitted round loop is untouched; on eager rounds
+        # reading the stats is a host sync — the opt-in cost of tracing.
+        t0 = tr.clock()
         dests, payload = f(round_idx, self.node_ids(box.n_nodes), box)
-        return self.shuffle(dests, payload, V, cap)
+        out_box, stats = self.shuffle(dests, payload, V, cap)
+        _round_event(tr, t0, self.name, round_idx, V, cap, stats)
+        return out_box, stats
 
     def run_rounds(self, f: RoundFn, box: Mailbox, n_rounds: int,
                    capacity: Optional[int] = None,
@@ -346,24 +373,35 @@ class LocalEngine(MREngine):
     are re-derived per shuffle call from that call's (n, V) shape
     (:func:`repro.core.kshuffle.kernel_fits`): a call whose shape exceeds
     them falls back to the bit-identical dense shuffle.  Every routing
-    decision is counted in :data:`repro.core.kshuffle.route_log`, so tests
-    and benches can assert the kernel path was actually taken.
+    decision is counted in this engine's own ``route_log``
+    (:class:`repro.core.kshuffle.RouteLog` — per-engine so concurrent
+    services on different engines cannot interleave counts; the
+    module-global :data:`repro.core.kshuffle.route_log` remains as a
+    deprecated process-wide aggregate) and, when a tracer is attached,
+    recorded as a ``shuffle.route`` trace event, so tests and benches can
+    assert the kernel path was actually taken.
     """
 
     name = "local"
     jittable = True
     vmappable = True
 
-    def __init__(self, use_scan: bool = True, shuffle_impl: str = "dense"):
+    def __init__(self, use_scan: bool = True, shuffle_impl: str = "dense",
+                 tracer=None):
+        super().__init__(tracer=tracer)
         if shuffle_impl not in ("dense", "kernel"):
             raise ValueError(f"shuffle_impl must be 'dense' or 'kernel', "
                              f"got {shuffle_impl!r}")
         self.use_scan = use_scan
         self.shuffle_impl = shuffle_impl
+        from .kshuffle import RouteLog
+        #: per-engine routing counters (PR 9: the old module-global
+        #: route_log was shared mutable state across engines/threads)
+        self.route_log = RouteLog()
         if shuffle_impl == "kernel":
             from .kshuffle import kernel_fits, kernel_shuffle, route_log
             self._kernel_fits = kernel_fits
-            self._route_log = route_log
+            self._global_route_log = route_log   # deprecated aggregate view
             self._shuffle_fn = kernel_shuffle
             self.name = "pallas"
         else:
@@ -374,11 +412,23 @@ class LocalEngine(MREngine):
         dests = jnp.asarray(dests)
         fn = self._shuffle_fn
         if self.shuffle_impl == "kernel":
-            if self._kernel_fits(int(np.prod(dests.shape)), n_nodes):
-                self._route_log.kernel += 1
+            n = int(np.prod(dests.shape))
+            if self._kernel_fits(n, n_nodes):
+                impl = "kernel"
+                self.route_log.kernel += 1
+                self._global_route_log.kernel += 1
             else:
-                self._route_log.dense += 1
+                impl = "dense"
+                self.route_log.dense += 1
+                self._global_route_log.dense += 1
                 fn = _dense_shuffle      # per-stage guard: oversize -> dense
+            tr = self.tracer
+            if tr.enabled:
+                # Recorded even at jax trace time: the decision fires once
+                # per traced shape, exactly like the route_log counters.
+                tr.trace_event("shuffle.route", impl=impl, n=n,
+                               n_nodes=int(n_nodes), backend=self.name)
+                tr.metrics.counter(f"shuffle.route.{impl}").inc()
         return fn(dests, payload, n_nodes, capacity)
 
     def run_rounds(self, f: RoundFn, box: Mailbox, n_rounds: int,
@@ -464,15 +514,17 @@ class ShardedEngine(MREngine):
     :func:`repro.core.kshuffle.kernel_fits` predicate LocalEngine uses (not
     baked in at ``_build`` time), so in a shape-scheduled program the late
     shrinking levels route through the kernel scatter even when the entry
-    level cannot, and every decision lands in
-    :data:`repro.core.kshuffle.route_log`.
+    level cannot, and every decision lands in this engine's own
+    ``route_log`` (plus the deprecated module-global aggregate
+    :data:`repro.core.kshuffle.route_log`).
     """
 
     name = "sharded"
 
     def __init__(self, axis_name: str = "nodes",
                  mesh: Optional[jax.sharding.Mesh] = None,
-                 shuffle_impl: str = "dense"):
+                 shuffle_impl: str = "dense", tracer=None):
+        super().__init__(tracer=tracer)
         if mesh is None:
             mesh = jax.make_mesh((jax.device_count(),), (axis_name,))
         if axis_name not in mesh.axis_names:
@@ -484,10 +536,12 @@ class ShardedEngine(MREngine):
         self.axis_name = axis_name
         self.n_shards = mesh.shape[axis_name]
         self.shuffle_impl = shuffle_impl
+        from .kshuffle import RouteLog
+        self.route_log = RouteLog()          # per-engine (PR 9 bugfix)
         if shuffle_impl == "kernel":
             from .kshuffle import kernel_fits, kernel_shuffle, route_log
             self._kernel_fits = kernel_fits
-            self._route_log = route_log
+            self._global_route_log = route_log   # deprecated aggregate view
             self._local_shuffle = kernel_shuffle
         else:
             self._local_shuffle = _dense_shuffle
@@ -585,12 +639,22 @@ class ShardedEngine(MREngine):
         # through the kernel scatter, and route_log sees each decision.
         use_kernel = False
         if self.shuffle_impl == "kernel":
-            use_kernel = self._kernel_fits(int(np.prod(dests.shape)),
-                                           n_nodes // self.n_shards)
+            n = int(np.prod(dests.shape))
+            use_kernel = self._kernel_fits(n, n_nodes // self.n_shards)
             if use_kernel:
-                self._route_log.kernel += 1
+                self.route_log.kernel += 1
+                self._global_route_log.kernel += 1
             else:
-                self._route_log.dense += 1
+                self.route_log.dense += 1
+                self._global_route_log.dense += 1
+            tr = self.tracer
+            if tr.enabled:
+                tr.trace_event("shuffle.route",
+                               impl="kernel" if use_kernel else "dense",
+                               n=n, n_nodes=int(n_nodes), backend=self.name)
+                tr.metrics.counter(
+                    f"shuffle.route.{'kernel' if use_kernel else 'dense'}"
+                ).inc()
         # Per-shape lowerings share the engine's bounded cache with compiled
         # plans (previously an unbounded private dict — DESIGN.md §8).
         cache = self._ensure_cache()

@@ -85,6 +85,11 @@ class RouteLog:
     predicate is evaluated — once per eager call, once per traced shape
     under jit/scan — so tests and benches can assert the kernel path was
     actually *taken* (``dense == 0``) rather than silently falling back.
+
+    Each kernel-capable engine owns its own instance (``engine.route_log``)
+    so concurrent services on different engines never interleave counts;
+    routing decisions also surface as ``shuffle.route`` events on an
+    attached :class:`repro.obs.Tracer`.
     """
 
     __slots__ = ("kernel", "dense")
@@ -100,7 +105,11 @@ class RouteLog:
         return (self.kernel, self.dense)
 
 
-#: module-level routing introspection hook (reset() between probes)
+#: DEPRECATED process-wide aggregate of every engine's routing decisions
+#: (kept as a shim: engines still mirror their per-engine ``route_log``
+#: counts here, but concurrent engines interleave in it — prefer
+#: ``engine.route_log``, scoped per engine since PR 9).  reset() between
+#: probes when you do use it.
 route_log = RouteLog()
 
 

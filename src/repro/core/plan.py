@@ -32,6 +32,7 @@ import jax.numpy as jnp
 
 from .costmodel import CostAccum
 from .mrmodel import Mailbox
+from ..obs import NULL_TRACER, plan_token, round_event as _round_event
 
 
 class PlanStage(NamedTuple):
@@ -234,9 +235,41 @@ def execute_plan(plan: Plan, engine, inputs: Tuple, key=None,
         from .recovery import _apply_stages
         state = _apply_stages(plan, engine, state, 0, checkpointer)
     else:
-        for stage in plan.stages:
-            state = stage.apply(engine, state)
+        tr = getattr(engine, "tracer", NULL_TRACER)
+        if tr.enabled and jax.core.trace_state_clean():
+            # Eager traced execution: per-stage spans carry the declared
+            # schedule next to the measured CostAccum deltas (reading them
+            # is a host sync — the opt-in cost of tracing).  Under jit the
+            # spans would no-op, so the compiled Executable path takes the
+            # identical plain loop below.
+            state = _traced_stages(plan, engine, state, tr)
+        else:
+            for stage in plan.stages:
+                state = stage.apply(engine, state)
     return plan.epilogue(state)
+
+
+def _traced_stages(plan: Plan, engine, state: PlanState, tr) -> PlanState:
+    """The observable stage loop of :func:`execute_plan`: one
+    ``plan.execute`` span wrapping one ``plan.stage`` span per stage, each
+    recording its measured round/communication/drop deltas so
+    :func:`repro.obs.summary.summarize` can check measured == declared."""
+    with tr.span("plan.execute", plan=plan.name, digest=plan_token(plan),
+                 backend=getattr(engine, "name", "?")):
+        for stage in plan.stages:
+            r0 = int(state.accum.rounds)
+            c0 = float(state.accum.communication)
+            d0 = int(state.accum.dropped)
+            with tr.span("plan.stage", plan=plan.name, stage=stage.name,
+                         rounds=stage.rounds, capacity=stage.capacity,
+                         n_nodes=stage.n_nodes,
+                         shuffles=stage.shuffles) as sp:
+                state = stage.apply(engine, state)
+                sp["measured_rounds"] = int(state.accum.rounds) - r0
+                sp["items_sent"] = int(
+                    float(state.accum.communication) - c0)
+                sp["dropped"] = int(state.accum.dropped) - d0
+    return state
 
 
 # ---------------------------------------------------------------------------
@@ -264,9 +297,14 @@ def entry_stage(name: str, n_nodes: int, capacity: int,
     input collection into a fresh (n_nodes, capacity) mailbox."""
 
     def apply(engine, state: PlanState) -> PlanState:
+        tr = getattr(engine, "tracer", NULL_TRACER)
+        t0 = tr.clock() if tr.enabled else 0.0
+        V = engine.aligned_nodes(n_nodes)
         dests, payload = emit(state.carry)
-        box, st = engine.shuffle(dests, payload,
-                                 engine.aligned_nodes(n_nodes), capacity)
+        box, st = engine.shuffle(dests, payload, V, capacity)
+        if tr.enabled:
+            _round_event(tr, t0, getattr(engine, "name", "?"), 0,
+                         V, capacity, st)
         return PlanState(box, state.carry, state.accum.add_round_stats(st))
 
     return PlanStage(name, 1, capacity, apply, n_nodes)

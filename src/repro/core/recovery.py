@@ -76,6 +76,7 @@ from .costmodel import CostAccum
 from .engine import MREngine, ShardedEngine
 from .mrmodel import Mailbox
 from .plan import Plan, PlanState
+from ..obs import NULL_TRACER, Tracer, plan_token
 from ..train import checkpoint as _ckpt
 
 
@@ -129,17 +130,36 @@ class FaultConfig:
 class FaultInjector:
     """Seeded fault source shared by one engine proxy across replays.
 
-    ``calls`` is the monotonic shuffle-attempt counter; every injected event
-    is appended to ``events`` as ``(kind, attempt, shard)`` so tests and the
-    fault benchmark can audit exactly what fired."""
+    ``calls`` is the monotonic shuffle-attempt counter.  Injected events are
+    recorded as ``fault.failure`` / ``fault.straggler`` obs events into a
+    private :class:`repro.obs.Tracer` sink — and mirrored into the bound
+    engine tracer when one is live (``tracer``, auto-wired by
+    :class:`FaultInjectingEngine`) — so traces, the fault benchmark, and
+    tests all read one stream.  The legacy ``events`` attribute survives as
+    a read-only view of that sink (``(kind, attempt, shard)`` tuples)."""
 
-    def __init__(self, config: FaultConfig):
+    def __init__(self, config: FaultConfig, tracer=None):
         self.config = config
         self.calls = 0
         self.failures = 0
         self.stragglers = 0
         self.simulated_delay_s = 0.0
-        self.events = []
+        self.tracer = NULL_TRACER if tracer is None else tracer
+        self._sink = Tracer()
+
+    @property
+    def events(self):
+        """Legacy audit view: ``(kind, attempt, shard)`` per injected event,
+        reconstructed from the obs event sink."""
+        return [(e.kind.split(".", 1)[1], e.attrs["attempt"],
+                 e.attrs["shard"]) for e in self._sink.events()]
+
+    def _emit(self, kind: str, **attrs) -> None:
+        self._sink.event(kind, **attrs)
+        tr = self.tracer
+        if tr.enabled:
+            tr.event(kind, **attrs)
+            tr.count(f"{kind}s")
 
     def _budget_left(self) -> bool:
         mf = self.config.max_failures
@@ -147,7 +167,7 @@ class FaultInjector:
 
     def _fail(self, attempt: int, shard: int):
         self.failures += 1
-        self.events.append(("failure", attempt, shard))
+        self._emit("fault.failure", attempt=attempt, shard=shard)
         raise ShardFailure(attempt, shard)
 
     def on_shuffle(self, n_shards: int) -> None:
@@ -169,7 +189,8 @@ class FaultInjector:
             elif u < cfg.failure_probability + cfg.straggler_probability:
                 self.stragglers += 1
                 self.simulated_delay_s += cfg.straggler_delay_s
-                self.events.append(("straggler", attempt, shard))
+                self._emit("fault.straggler", attempt=attempt, shard=shard,
+                           delay_s=cfg.straggler_delay_s)
 
 
 class FaultInjectingEngine(MREngine):
@@ -193,6 +214,13 @@ class FaultInjectingEngine(MREngine):
                          else FaultInjector(faults))
         self.name = f"faulty-{engine.name}"
         self.n_shards = getattr(engine, "n_shards", 1)
+        # MREngine defines `tracer` as a class attribute, so __getattr__
+        # below would never delegate it — adopt the inner engine's tracer
+        # explicitly, and hand it to the injector so fault events land in
+        # the same trace as the rounds they kill.
+        self.tracer = getattr(engine, "tracer", NULL_TRACER)
+        if self.tracer.enabled and not self.injector.tracer.enabled:
+            self.injector.tracer = self.tracer
 
     def aligned_nodes(self, n_nodes: int) -> int:
         return self.inner.aligned_nodes(n_nodes)
@@ -289,7 +317,7 @@ class Checkpointer:
 
     def __init__(self, directory, plan: Optional[Plan] = None, *,
                  every: int = 1, keep: Optional[int] = None,
-                 tag: Optional[str] = None):
+                 tag: Optional[str] = None, tracer=None):
         if plan is None and tag is None:
             raise ValueError("Checkpointer needs a plan (fingerprint key) "
                              "or an explicit tag")
@@ -303,6 +331,9 @@ class Checkpointer:
         self.saved_rounds = []
         self.bytes_written = 0
         self._last_saved = 0
+        # ckpt.save / ckpt.restore sink; the recovery drivers re-wire this
+        # to the engine's tracer when one is live (opt-in, like every hook).
+        self.tracer = NULL_TRACER if tracer is None else tracer
 
     # -- policy --------------------------------------------------------------
     def due(self, rounds_done: int) -> bool:
@@ -336,6 +367,10 @@ class Checkpointer:
         self.bytes_written += nbytes
         self.saved_rounds.append(int(round_idx))
         self._last_saved = int(round_idx)
+        if self.tracer.enabled:
+            self.tracer.event("ckpt.save", round=int(round_idx),
+                              bytes=nbytes)
+            self.tracer.count("ckpt.saves")
         if self.keep is not None:
             self._prune()
         return path
@@ -369,6 +404,10 @@ class Checkpointer:
             info = manifest["tensors"][f"leaf_{i:05d}"]
             arr = np.load(final / info["file"], allow_pickle=False)
             leaves.append(_cast_leaf(kind, arr))
+        if self.tracer.enabled:
+            self.tracer.event("ckpt.restore", round=int(round_idx),
+                              stage_index=meta.get("stage_index"))
+            self.tracer.count("ckpt.restores")
         return jax.tree_util.tree_unflatten(treedef, leaves), meta
 
 
@@ -464,14 +503,46 @@ def _state_from_tree(tree) -> PlanState:
                      accum=tree["accum"])
 
 
+def _wire_tracer(checkpointer: Optional[Checkpointer], tr) -> None:
+    """Point an un-traced checkpointer at the engine's live tracer so
+    ckpt.* events land in the same stream as the rounds they snapshot."""
+    if (checkpointer is not None and tr.enabled
+            and not checkpointer.tracer.enabled):
+        checkpointer.tracer = tr
+
+
+def _staged_apply(plan: Plan, engine, i: int, state: PlanState,
+                  tr) -> PlanState:
+    """One stage application under an (optional) ``plan.stage`` span — the
+    eager-driver counterpart of ``plan._traced_stages``, recording the same
+    measured CostAccum deltas.  A stage killed mid-apply by an injected
+    fault records its span with ``aborted=True`` (see obs trace module)."""
+    stage = plan.stages[i]
+    if not tr.enabled:
+        return stage.apply(engine, state)
+    r0 = int(state.accum.rounds)
+    c0 = float(state.accum.communication)
+    d0 = int(state.accum.dropped)
+    with tr.span("plan.stage", plan=plan.name, stage=stage.name,
+                 rounds=stage.rounds, capacity=stage.capacity,
+                 n_nodes=stage.n_nodes, shuffles=stage.shuffles) as sp:
+        state = stage.apply(engine, state)
+        sp["measured_rounds"] = int(state.accum.rounds) - r0
+        sp["items_sent"] = int(float(state.accum.communication) - c0)
+        sp["dropped"] = int(state.accum.dropped) - d0
+    return state
+
+
 def _apply_stages(plan: Plan, engine, state: PlanState, start: int,
                   checkpointer: Optional[Checkpointer],
                   report: Optional[RecoveryReport] = None) -> PlanState:
     """Run stages ``start..`` with round-boundary checkpoints (the shared
     body of ``execute_plan(checkpointer=...)`` and the recovery loop)."""
     cum = _cumulative_rounds(plan)
+    tr = getattr(engine, "tracer", NULL_TRACER)
+    _wire_tracer(checkpointer, tr)
     for i in range(start, len(plan.stages)):
-        state = plan.stages[i].apply(engine, state)
+        state = _staged_apply(plan, engine, i, state, tr)
         if checkpointer is not None:
             saved = checkpointer.maybe_save(
                 cum[i], _state_tree(state),
@@ -489,39 +560,47 @@ def _drive(plan: Plan, base_engine, eng, state: PlanState, start: int,
     last durable round-boundary checkpoint (or from scratch)."""
     cum = _cumulative_rounds(plan)
     done = cum[start - 1] if start > 0 and cum else 0
-    while True:
-        try:
-            for i in range(start, len(plan.stages)):
-                state = plan.stages[i].apply(eng, state)
-                done = cum[i]
-                if checkpointer is not None:
-                    saved = checkpointer.maybe_save(
-                        done, _state_tree(state),
-                        meta={"stage_index": i, "plan": plan.name,
-                              "rounds_done": done})
-                    if saved:
-                        report.checkpoints_written += 1
-            return state
-        except FaultError:
-            report.restarts += 1
-            if report.restarts > max_restarts:
-                raise
-            last = (checkpointer.latest()
-                    if checkpointer is not None else None)
-            if last is None:
-                state = _fresh_state(plan, inputs, key)
-                start = 0
-                report.rounds_replayed += done
-                done = 0
-            else:
-                tree, meta = checkpointer.load(last)
-                state = _state_from_tree(tree)
-                if state.box is not None:
-                    state = state._replace(
-                        box=realign_mailbox(state.box, base_engine))
-                start = int(meta["stage_index"]) + 1
-                report.rounds_replayed += max(0, done - int(last))
-                done = int(last)
+    tr = getattr(eng, "tracer", NULL_TRACER)
+    _wire_tracer(checkpointer, tr)
+    with tr.span("plan.execute", plan=plan.name, digest=plan_token(plan),
+                 backend=getattr(eng, "name", "?")):
+        while True:
+            try:
+                for i in range(start, len(plan.stages)):
+                    state = _staged_apply(plan, eng, i, state, tr)
+                    done = cum[i]
+                    if checkpointer is not None:
+                        saved = checkpointer.maybe_save(
+                            done, _state_tree(state),
+                            meta={"stage_index": i, "plan": plan.name,
+                                  "rounds_done": done})
+                        if saved:
+                            report.checkpoints_written += 1
+                return state
+            except FaultError:
+                report.restarts += 1
+                if report.restarts > max_restarts:
+                    raise
+                last = (checkpointer.latest()
+                        if checkpointer is not None else None)
+                if last is None:
+                    state = _fresh_state(plan, inputs, key)
+                    start = 0
+                    report.rounds_replayed += done
+                    done = 0
+                else:
+                    tree, meta = checkpointer.load(last)
+                    state = _state_from_tree(tree)
+                    if state.box is not None:
+                        state = state._replace(
+                            box=realign_mailbox(state.box, base_engine))
+                    start = int(meta["stage_index"]) + 1
+                    report.rounds_replayed += max(0, done - int(last))
+                    done = int(last)
+                if tr.enabled:
+                    tr.event("recover.restart", restarts=report.restarts,
+                             from_round=done)
+                    tr.count("recover.restarts")
 
 
 def _finish(plan, state, report, eng, checkpointer):

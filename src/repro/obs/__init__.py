@@ -1,0 +1,35 @@
+"""repro.obs — round-level observability (DESIGN.md §12).
+
+One coherent telemetry surface over every layer grown since PR 1: an
+injectable :class:`Tracer` records typed span/event records (plan digest,
+stage, round index, backend, declared vs measured (V_r, M_r), shuffle
+stats, kernel-vs-dense route, compile/cache events, serve dispatch
+lifecycle, fault/checkpoint/restore events) into a bounded ring buffer
+next to a :class:`MetricsRegistry` of named counters/gauges/histograms.
+The default hook everywhere is :data:`NULL_TRACER` and a live tracer drops
+events while jax traces, so jitted paths lower identically with or without
+observability — outputs and cost accounting stay bit-identical
+(``tests/test_obs.py``).
+
+Exporters render a trace as JSON-lines or a perfetto-loadable Chrome
+trace; :func:`summarize` folds it into the per-stage round/bytes/latency
+table (``tools/trace_summary.py`` is the CLI).
+"""
+from .trace import (NULL_TRACER, NullTracer, TraceEvent, Tracer, plan_token,
+                    round_event)
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .export import (read_jsonl, to_chrome_trace, write_chrome_trace,
+                     write_jsonl)
+from .summary import diff_summaries, format_diff, format_table, summarize
+
+__all__ = [
+    # trace core
+    "TraceEvent", "Tracer", "NullTracer", "NULL_TRACER",
+    "plan_token", "round_event",
+    # metrics registry
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    # exporters
+    "write_jsonl", "read_jsonl", "to_chrome_trace", "write_chrome_trace",
+    # aggregation
+    "summarize", "format_table", "diff_summaries", "format_diff",
+]

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from ..configs.base import ArchConfig
 from ..models import build_model
 from ..core.costmodel import MRCost
+from ..obs import NULL_TRACER
 
 
 @dataclasses.dataclass
@@ -63,10 +64,11 @@ class ServeEngine:
     are deterministic when the test controls the clock."""
 
     def __init__(self, cfg: ArchConfig, params, scfg: ServeConfig,
-                 clock: Callable[[], float] = time.time):
+                 clock: Callable[[], float] = time.time, tracer=None):
         self.cfg = cfg
         self.scfg = scfg
         self.clock = clock
+        self.tracer = NULL_TRACER if tracer is None else tracer
         self.model = build_model(cfg)
         self.params = params
         self.queue: Deque[Request] = deque()    # Thm 4.2 FIFO input buffer
@@ -126,6 +128,13 @@ class ServeEngine:
                 self.active[slot] = None
         self.rounds += 1
         self.cost.round(items_sent=len(live), max_io=len(live))
+        tr = self.tracer
+        if tr.enabled:
+            tr.event("serve.token_round", round=self.rounds,
+                     live=len(live), emitted=emitted,
+                     queued=len(self.queue))
+            tr.count("serve.token_rounds")
+            tr.count("serve.tokens", emitted)
         return emitted
 
     def run_until_drained(self, max_rounds: int = 100_000) -> List[Request]:

@@ -190,8 +190,32 @@ def run_closed_loop(service: QueryService, workload: Sequence[Query],
     return results, wall
 
 
+def arrival_times(n: int, offered_qps: float, process: str = "deterministic",
+                  seed: int = 0) -> np.ndarray:
+    """Arrival schedule (seconds) for ``n`` open-loop requests.
+
+    ``"deterministic"`` spaces arrivals exactly ``1/offered_qps`` apart —
+    the worst case *for* batching (no bursts to coalesce).
+    ``"poisson"`` draws i.i.d. exponential inter-arrival gaps of mean
+    ``1/offered_qps`` from ``default_rng(seed)`` — the classic open-loop
+    model, whose bursts fill windows early and whose lulls ride the
+    deadline.  Both are deterministic functions of ``(n, offered_qps,
+    process, seed)``, so latency series built on a
+    :class:`~repro.serve.mr.VirtualClock` stay machine-independent."""
+    if process == "deterministic":
+        return np.arange(n, dtype=np.float64) / float(offered_qps)
+    if process == "poisson":
+        gaps = np.random.default_rng(seed).exponential(
+            1.0 / float(offered_qps), size=n)
+        return np.cumsum(gaps)
+    raise ValueError(f"unknown arrival process {process!r} "
+                     f"(want 'deterministic' or 'poisson')")
+
+
 def run_open_loop(service: QueryService, workload: Sequence[Query],
-                  offered_qps: float, clock: VirtualClock) -> Dict[str, Any]:
+                  offered_qps: float, clock: VirtualClock, *,
+                  process: str = "deterministic",
+                  seed: int = 0) -> Dict[str, Any]:
     """Open-loop arrivals at ``offered_qps`` on the service's virtual
     clock; rejected arrivals are dropped (counted), not retried.
 
@@ -199,13 +223,18 @@ def run_open_loop(service: QueryService, workload: Sequence[Query],
     pure batching-window queueing delay — the deterministic
     latency-vs-offered-load curve: low load saturates at the
     ``max_wait_ms`` deadline, high load fills windows before the deadline
-    and latency collapses.  Returns the row dict for ``BENCH_serve.json``."""
+    and latency collapses.  ``process`` picks the arrival schedule (see
+    :func:`arrival_times`): ``"poisson"`` replaces the uniform spacing
+    with seeded exponential gaps, exercising burst/lull queueing while
+    staying bit-reproducible.  Returns the row dict for
+    ``BENCH_serve.json``; when the service carries a live tracer, the row
+    includes its queueing metrics snapshot under ``"metrics"``."""
     if service.clock is not clock:
         raise ValueError("run_open_loop needs the service to run on the "
                          "given VirtualClock")
+    arrivals = arrival_times(len(workload), offered_qps, process, seed)
     accepted, rejected = [], 0
-    for i, q in enumerate(workload):
-        t_arr = i / float(offered_qps)
+    for q, t_arr in zip(workload, arrivals):
         if t_arr > clock():
             clock.advance(t_arr - clock())
         service.step()
@@ -219,8 +248,9 @@ def run_open_loop(service: QueryService, workload: Sequence[Query],
     service.drain()
     lat_ms = np.asarray([t.latency for t in accepted], np.float64) * 1e3
     occ = [t.batch_occupancy for t in accepted]
-    return {
+    row = {
         "offered_qps": float(offered_qps),
+        "process": process,
         "accepted": len(accepted), "rejected": rejected,
         "p50_wait_ms": float(np.percentile(lat_ms, 50)) if len(lat_ms)
         else None,
@@ -228,6 +258,9 @@ def run_open_loop(service: QueryService, workload: Sequence[Query],
         else None,
         "mean_occupancy": float(np.mean(occ)) if occ else None,
     }
+    if service.tracer.enabled:
+        row["metrics"] = service.tracer.metrics.snapshot()
+    return row
 
 
 def _suite_of(workload: Sequence[Query]) -> Dict[str, Tuple[Any, Callable]]:
@@ -240,5 +273,5 @@ def _suite_of(workload: Sequence[Query]) -> Dict[str, Tuple[Any, Callable]]:
 
 
 __all__ = ["Query", "TrafficConfig", "make_suite", "make_workload",
-           "run_sequential", "run_closed_loop", "run_open_loop",
-           "assert_results_equal"]
+           "arrival_times", "run_sequential", "run_closed_loop",
+           "run_open_loop", "assert_results_equal"]

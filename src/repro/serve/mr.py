@@ -70,6 +70,7 @@ import jax.numpy as jnp
 
 from ..core.api import pad_batch
 from ..core.plan import Plan
+from ..obs import NULL_TRACER
 
 
 class VirtualClock:
@@ -184,7 +185,7 @@ class Ticket:
         burns retry budget; the ticket then completes exceptionally) and
         raises the :class:`DispatchError` of a failed ticket."""
         while not self.done:
-            self._service._dispatch(self._plan_key)
+            self._service._dispatch(self._plan_key, cause="wait")
         if self.error is not None:
             raise self.error
         return self.value
@@ -213,7 +214,8 @@ class QueryService:
     def __init__(self, engine, *, max_batch: int = 16,
                  max_wait_ms: float = 5.0, max_pending: int = 256,
                  max_retries: int = 2,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 tracer=None):
         if int(max_batch) < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if int(max_pending) < int(max_batch):
@@ -228,9 +230,14 @@ class QueryService:
         self.max_pending = int(max_pending)
         self.max_retries = int(max_retries)
         self.clock = clock
+        # serve.* lifecycle events; defaults to the engine's tracer so one
+        # Tracer sees the whole stack (rounds, dispatches, faults)
+        self.tracer = (tracer if tracer is not None
+                       else getattr(engine, "tracer", NULL_TRACER))
         self._queues: "OrderedDict[Any, deque]" = OrderedDict()
         self._plans: Dict[Any, Plan] = {}
         self._exes: Dict[Any, Any] = {}
+        self._wait_ms: Dict[Any, float] = {}   # per-plan deadline overrides
         self._uid = 0
         self.finished: List[Ticket] = []
         # service-level counters (host ints; stats() summarizes them)
@@ -252,8 +259,34 @@ class QueryService:
     def _active_plan_keys(self) -> List:
         return [pk for pk, q in self._queues.items() if q]
 
+    def _deadline_ms(self, pk) -> float:
+        """The dispatch deadline for one plan queue: its registered
+        ``max_wait_ms`` override, else the service default."""
+        return self._wait_ms.get(pk, self.max_wait_ms)
+
     # -- admission -----------------------------------------------------------
-    def submit(self, plan: Plan, *inputs, key=None) -> Ticket:
+    def register(self, plan: Plan, *, max_wait_ms: Optional[float] = None
+                 ) -> None:
+        """Register per-plan serving policy ahead of traffic.
+
+        ``max_wait_ms`` overrides the service-wide dispatch deadline for
+        this plan's queue — a latency-sensitive family (point lookups)
+        can dispatch partial windows sooner than a throughput family
+        (bulk sorts) sharing the same service.  ``None`` clears the
+        override.  ``submit(..., max_wait_ms=...)`` is the per-call
+        shorthand for the same override."""
+        pk = self.engine.plan_key(plan)
+        self._plans.setdefault(pk, plan)
+        if max_wait_ms is None:
+            self._wait_ms.pop(pk, None)
+        else:
+            if float(max_wait_ms) < 0:
+                raise ValueError(
+                    f"max_wait_ms must be >= 0, got {max_wait_ms}")
+            self._wait_ms[pk] = float(max_wait_ms)
+
+    def submit(self, plan: Plan, *inputs, key=None,
+               max_wait_ms: Optional[float] = None) -> Ticket:
         """Admit one query for ``plan`` (FIFO per fingerprint) or raise
         :class:`QueueFull`.
 
@@ -263,15 +296,23 @@ class QueryService:
         would — bit-identity includes the randomness.  A queue that
         reaches ``max_batch`` dispatches immediately from inside
         ``submit`` (the window-full path); deadline dispatch of partial
-        windows happens in :meth:`step`."""
+        windows happens in :meth:`step`.  ``max_wait_ms`` registers a
+        per-plan deadline override for this plan's queue (see
+        :meth:`register`)."""
         now = self.clock()
+        tr = self.tracer
         if self.pending >= self.max_pending:
             self.rejected += 1
+            if tr.enabled:
+                tr.event("serve.reject", plan=plan.name, reason="pending")
+                tr.count("serve.rejects")
             raise QueueFull(
                 "pending",
                 f"admission window full: {self.pending} queries pending "
                 f">= max_pending={self.max_pending}", self.max_wait_ms)
         pk = self.engine.plan_key(plan)
+        if max_wait_ms is not None:
+            self.register(plan, max_wait_ms=max_wait_ms)
         if pk not in self._queues and not self.engine.plan_cached(plan):
             # LRU thrash guard: compiling a cold fingerprint while this
             # many distinct plans have queued work would evict an
@@ -280,6 +321,10 @@ class QueryService:
             active = len(self._active_plan_keys())
             if active + 1 > max(1, cap):
                 self.rejected += 1
+                if tr.enabled:
+                    tr.event("serve.reject", plan=plan.name,
+                             reason="plan-cache")
+                    tr.count("serve.rejects")
                 raise QueueFull(
                     "plan-cache",
                     f"plan-cache thrash: {active} distinct plans already "
@@ -293,8 +338,12 @@ class QueryService:
         self._plans[pk] = plan
         self._queues.setdefault(pk, deque()).append(ticket)
         self.submitted += 1
+        if tr.enabled:
+            tr.event("serve.submit", plan=plan.name, uid=ticket.uid,
+                     pending=self.pending)
+            tr.count("serve.submits")
         if len(self._queues[pk]) >= self.max_batch:
-            self._dispatch(pk)
+            self._dispatch(pk, cause="window")
         return ticket
 
     def warmup(self, plans: Sequence[Plan],
@@ -329,16 +378,24 @@ class QueryService:
 
         Due means the window is full (``>= max_batch`` queued — normally
         already dispatched by ``submit``, but a caller-managed backlog can
-        accumulate) or the oldest request has waited ``max_wait_ms``.
-        Returns the number of queries completed this tick."""
+        accumulate) or the oldest request has waited past its queue's
+        deadline (the per-plan ``max_wait_ms`` override, else the service
+        default).  Returns the number of queries completed this tick."""
         now = self.clock() if now is None else now
+        tr = self.tracer
         done = 0
         for pk in list(self._queues):
             q = self._queues[pk]
             while len(q) >= self.max_batch:
-                done += self._dispatch(pk)
-            if q and (now - q[0].submitted_at) * 1e3 >= self.max_wait_ms:
-                done += self._dispatch(pk)
+                done += self._dispatch(pk, cause="window")
+            deadline = self._deadline_ms(pk)
+            if q and (now - q[0].submitted_at) * 1e3 >= deadline:
+                if tr.enabled:
+                    tr.event("serve.deadline",
+                             plan=q[0].plan_name,
+                             waited_ms=(now - q[0].submitted_at) * 1e3,
+                             deadline_ms=deadline)
+                done += self._dispatch(pk, cause="deadline")
         return done
 
     def drain(self) -> int:
@@ -358,7 +415,7 @@ class QueryService:
         done = 0
         while self.pending:
             for pk in self._active_plan_keys():
-                done += self._dispatch(pk)
+                done += self._dispatch(pk, cause="drain")
         return done
 
     def dispatch_oldest(self) -> int:
@@ -370,9 +427,9 @@ class QueryService:
         if not heads:
             return 0
         _, pk = min(heads)
-        return self._dispatch(pk)
+        return self._dispatch(pk, cause="pump")
 
-    def _dispatch(self, pk) -> int:
+    def _dispatch(self, pk, cause: str = "pump") -> int:
         """Coalesce up to ``max_batch`` queries from one queue into a
         single padded ``Executable.batch`` call and demultiplex.
 
@@ -401,7 +458,7 @@ class QueryService:
             leaves, treedef = jax.tree_util.tree_flatten(out)
             host = [np.asarray(leaf) for leaf in leaves]  # one transfer each
         except Exception as e:
-            return self._fail_or_requeue(pk, batch, e)
+            return self._fail_or_requeue(pk, batch, e, cause)
         completed_at = self.clock()
         for i, t in enumerate(batch):
             t.value = jax.tree_util.tree_unflatten(
@@ -415,10 +472,22 @@ class QueryService:
         self.coalesced += k
         self.pad_slots += self.max_batch - k
         self.completed += k
+        tr = self.tracer
+        if tr.enabled:
+            tr.event("serve.dispatch", _dur=completed_at - dispatched_at,
+                     plan=batch[0].plan_name, cause=cause, occupancy=k,
+                     pad=self.max_batch - k)
+            tr.count("serve.dispatches")
+            tr.count("serve.completed", k)
+            tr.observe("serve.occupancy", k)
+            for t in batch:
+                tr.observe("serve.wait_ms",
+                           (t.dispatched_at - t.submitted_at) * 1e3)
         return k
 
     def _fail_or_requeue(self, pk, batch: List[Ticket],
-                         cause: Exception) -> int:
+                         cause: Exception,
+                         dispatch_cause: str = "pump") -> int:
         """Retry policy after a failed dispatch: each popped ticket burns
         one attempt; those within budget requeue at the *front* of their
         queue in original order (FIFO preserved — they were the oldest),
@@ -442,6 +511,20 @@ class QueryService:
         self.requeued += len(keep)
         self.failed += len(dead)
         self.finished.extend(dead)
+        tr = self.tracer
+        if tr.enabled:
+            tr.event("serve.dispatch_error", plan=batch[0].plan_name,
+                     cause=dispatch_cause, batch=len(batch),
+                     error=type(cause).__name__)
+            tr.count("serve.dispatch_errors")
+            if keep:
+                tr.event("serve.requeue", plan=batch[0].plan_name,
+                         count=len(keep))
+                tr.count("serve.requeues", len(keep))
+            for t in dead:
+                tr.event("serve.fail", plan=t.plan_name, uid=t.uid,
+                         attempts=t.retries)
+                tr.count("serve.failures")
         return len(dead)
 
     # -- reporting -----------------------------------------------------------

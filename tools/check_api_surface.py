@@ -5,15 +5,28 @@ The plan/compile/execute split made ``repro.core`` the public query surface
 (DESIGN.md §8), and the shape schedule made ``repro.core.plan`` a public
 module in its own right (PlanStage carries the documented per-stage
 ``n_nodes`` footprint field; DESIGN.md §9), and the query service made
-``repro.serve`` the serving surface (DESIGN.md §10) — so accidental drift
-— a re-export dropped in a refactor, a private helper leaking into
-``__all__`` — is an API break.  This tool pins all three surfaces exactly: it
+``repro.serve`` the serving surface (DESIGN.md §10), and the observability
+subsystem made ``repro.obs`` the telemetry surface (DESIGN.md §12) — so
+accidental drift — a re-export dropped in a refactor, a private helper
+leaking into ``__all__`` — is an API break.  This tool pins the surfaces exactly: it
 fails when an ``__all__`` gains or loses names relative to the EXPECTED
 lists below, and when any advertised name does not actually resolve.
 Deliberate changes update EXPECTED in the same commit (the diff then
 documents the API change).  CI runs this in the docs job.
 """
 import sys
+
+EXPECTED_OBS = frozenset([
+    # trace core (DESIGN.md §12)
+    "TraceEvent", "Tracer", "NullTracer", "NULL_TRACER",
+    "plan_token", "round_event",
+    # metrics registry
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    # exporters
+    "write_jsonl", "read_jsonl", "to_chrome_trace", "write_chrome_trace",
+    # aggregation
+    "summarize", "format_table", "diff_summaries", "format_diff",
+])
 
 EXPECTED_SERVE = frozenset([
     # token-level continuous batching (decode slots)
@@ -108,11 +121,13 @@ def main() -> int:
     import repro.core
     import repro.core.plan
     import repro.core.recovery
+    import repro.obs
     import repro.serve
 
     rc = check_surface(repro.core, EXPECTED)
     rc |= check_surface(repro.core.plan, EXPECTED_PLAN)
     rc |= check_surface(repro.core.recovery, EXPECTED_RECOVERY)
+    rc |= check_surface(repro.obs, EXPECTED_OBS)
     rc |= check_surface(repro.serve, EXPECTED_SERVE)
     return rc
 
