@@ -110,6 +110,45 @@ def shuffle_alltoall(dests: jnp.ndarray, payload: Any, axis_name: str,
                       dropped=lax.psum(dropped, axis_name))
 
 
+def keyed_hop(dests: jnp.ndarray, leaves: Sequence[jnp.ndarray],
+              axis_name: str, n_nodes: int
+              ) -> Tuple[jnp.ndarray, list]:
+    """Phase 1 of the sharded Shuffle: the keyed ``all_to_all`` hop.
+
+    Routes every local (dest, *leaves) item to the shard that owns node
+    ``dest`` (contiguous ownership: shard s owns [s*V/n, (s+1)*V/n)) with
+    per-pair capacity equal to the local item count, so the hop itself is
+    lossless — overflow can only happen at the phase-2 scatter, the same
+    event the local backends count.  Must be called inside shard_map over
+    ``axis_name``.
+
+    Returns ``(local_dest, recv_flat)``: the shard-local destination of
+    each arrival (-1 = empty slot) and the flattened received leaves, in
+    source-shard-major order — which, with contiguous sources, preserves
+    the global flattened-source FIFO order the scatter relies on
+    (DESIGN.md §13).
+    """
+    n_shards = lax.psum(1, axis_name)
+    local_v = n_nodes // n_shards
+    flat_dest = dests.reshape(-1).astype(jnp.int32)
+    n_local = flat_dest.shape[0]
+    flat_leaves = [l.reshape((n_local,) + l.shape[dests.ndim:])
+                   for l in leaves]
+    owner = jnp.where(flat_dest >= 0,
+                      jnp.clip(flat_dest, 0, n_nodes - 1) // local_v,
+                      -1)
+    routed = shuffle_alltoall(owner, (flat_dest, flat_leaves), axis_name,
+                              capacity=n_local)
+    recv_dest, recv_leaves = routed.payload
+    recv_valid = routed.valid.reshape(-1)
+    shard = lax.axis_index(axis_name)
+    local_dest = jnp.where(recv_valid,
+                           recv_dest.reshape(-1) - shard * local_v,
+                           -1)
+    recv_flat = [rl.reshape((-1,) + rl.shape[2:]) for rl in recv_leaves]
+    return local_dest, recv_flat
+
+
 # ---------------------------------------------------------------------------
 # Invisible funnel with f = + (Theorem 3.2) — hierarchical gradient reduction
 # ---------------------------------------------------------------------------

@@ -229,7 +229,8 @@ class MREngine:
                    capacity: Optional[int] = None,
                    accum: Optional[CostAccum] = None,
                    n_nodes: Optional[int] = None,
-                   checkpointer=None, round_offset: int = 0
+                   checkpointer=None, round_offset: int = 0,
+                   early_dests: bool = False
                    ) -> Tuple[Mailbox, CostAccum]:
         """Drive R rounds, returning the final mailbox and accumulated cost.
 
@@ -237,7 +238,15 @@ class MREngine:
         activates the ``checkpoint_every`` policy: after each round the
         ``{"box", "accum"}`` state is offered to ``maybe_save`` under the
         global round index ``round_offset + r + 1`` — the round-boundary
-        snapshot recovery replays from (DESIGN.md §11)."""
+        snapshot recovery replays from (DESIGN.md §11).
+
+        ``early_dests`` is the stage's declared scheduling-legality bit
+        (:class:`repro.core.plan.PlanStage`, DESIGN.md §13): True promises
+        the round function's destinations depend only on node ids and the
+        static schedule, which lets :class:`ShardedEngine` double-buffer
+        the hop of round r+1 under the reducer compute of round r.  The
+        flag never changes results — backends without an overlapped
+        scheduler (this base loop included) simply ignore it."""
         acc = accum if accum is not None else CostAccum.zero()
         for r in range(n_rounds):
             box, stats = self.run_round(f, box, r, capacity, n_nodes=n_nodes)
@@ -259,8 +268,9 @@ class MREngine:
                    checkpointer=None, round_offset: int = 0
                    ) -> Tuple[Mailbox, CostAccum]:
         """Drive a heterogeneous round schedule: ``stages`` is a sequence of
-        ``(round_fn, capacity)`` pairs or ``(round_fn, capacity, n_nodes)``
-        triples, each executed as one round.
+        ``(round_fn, capacity)`` pairs, ``(round_fn, capacity, n_nodes)``
+        triples or ``(round_fn, capacity, n_nodes, early_dests)``
+        quadruples, each executed as one round.
 
         This is the staged counterpart of :meth:`run_program` for
         computations whose mailbox footprint changes per round (e.g. the
@@ -268,7 +278,10 @@ class MREngine:
         partial results at one node — and the live node count shrinks by
         ``a`` per level).  Capacities and node counts are Python ints, so
         the schedule is static and the whole driver stays jit-compatible
-        on array backends."""
+        on array backends.  The optional ``early_dests`` flag declares
+        overlap legality per round (see :meth:`run_rounds`); this base
+        loop ignores it — :class:`ShardedEngine` overrides the driver to
+        double-buffer maximal runs of consecutive early rounds."""
         acc = accum if accum is not None else CostAccum.zero()
         for r, stage in enumerate(stages):
             fn, cap = stage[0], stage[1]
@@ -435,8 +448,11 @@ class LocalEngine(MREngine):
                    capacity: Optional[int] = None,
                    accum: Optional[CostAccum] = None,
                    n_nodes: Optional[int] = None,
-                   checkpointer=None, round_offset: int = 0
+                   checkpointer=None, round_offset: int = 0,
+                   early_dests: bool = False
                    ) -> Tuple[Mailbox, CostAccum]:
+        # early_dests is a Sharded scheduling hint; the scanned local loop
+        # already overlaps nothing (one fused program), so it is ignored.
         acc = accum if accum is not None else CostAccum.zero()
         if not self.use_scan or n_rounds <= 1:
             return super().run_rounds(f, box, n_rounds, capacity, acc,
@@ -490,18 +506,38 @@ class LocalEngine(MREngine):
 class ShardedEngine(MREngine):
     """Distributed backend: nodes are partitioned contiguously across a mesh
     axis (shard s owns nodes [s*V/n, (s+1)*V/n)) and the Shuffle step runs as
-    a two-phase route inside ``shard_map``:
+    a two-phase route, each phase its own jitted ``shard_map`` program
+    (DESIGN.md §13):
 
-      1. a lossless keyed ``all_to_all`` (:func:`repro.core.distributed.
-         shuffle_alltoall` with per-pair capacity = the shard's item count)
-         delivers every item to its owner shard in source-shard order;
-      2. the dense local shuffle places arrivals into the owner's (V_local,
-         capacity) mailbox slots.
+      1. **hop** — a lossless keyed ``all_to_all``
+         (:func:`repro.core.distributed.keyed_hop` with per-pair capacity =
+         the shard's item count) delivers every item to its owner shard in
+         source-shard order;
+      2. **scatter** — the per-shard local shuffle (dense or Pallas kernel)
+         places arrivals into the owner's (V_local, capacity) mailbox slots.
 
     Because sources are contiguous per shard and phase 1 preserves source
     order, the composition implements exactly the global FIFO + overflow
     semantics of :class:`LocalEngine` at any axis size; with axis size 1 it
     degenerates to the local operation (how the CPU tests validate it).
+
+    Splitting the phases makes the hierarchical route explicit *and*
+    schedulable: the per-shard scatter is no longer barriered inside the
+    same XLA program as the inter-shard collective, so for stages declared
+    ``early_dests`` (destinations depend only on node ids and the static
+    schedule) the overridden :meth:`run_rounds` / :meth:`run_stages`
+    double-buffer rounds — JAX's async dispatch keeps round r+1's hop in
+    flight while round r's reducer compute and scatter execute, with the
+    hop's receive buffers donated into the scatter (off CPU) so no copy
+    lands between the phases.  The overlapped path defers all per-round
+    stat folds to the end of the run (per-round host reads would drain the
+    device queue to depth 1); results and per-round ``CostAccum`` are
+    bit-identical to the sequential path because both run the *same two
+    programs per round* in the same order — only the host's issue/sync
+    schedule differs.  Construct with ``overlap=False`` for a
+    strictly-sequential comparator (benches, A/B tests); a checkpointer
+    also forces the sequential path, since round-boundary snapshots need
+    every round's state materialized.
 
     Node counts and the leading dim of 1-D destination arrays must be
     divisible by the axis size — grow V with :meth:`aligned_nodes`.
@@ -523,7 +559,8 @@ class ShardedEngine(MREngine):
 
     def __init__(self, axis_name: str = "nodes",
                  mesh: Optional[jax.sharding.Mesh] = None,
-                 shuffle_impl: str = "dense", tracer=None):
+                 shuffle_impl: str = "dense", tracer=None,
+                 overlap: bool = True):
         super().__init__(tracer=tracer)
         if mesh is None:
             mesh = jax.make_mesh((jax.device_count(),), (axis_name,))
@@ -536,6 +573,10 @@ class ShardedEngine(MREngine):
         self.axis_name = axis_name
         self.n_shards = mesh.shape[axis_name]
         self.shuffle_impl = shuffle_impl
+        #: double-buffer rounds of early_dests stages (False = always run
+        #: the strictly-sequential per-round schedule — the comparator the
+        #: parity tests and bench_scaling measure against)
+        self.overlap = overlap
         from .kshuffle import RouteLog
         self.route_log = RouteLog()          # per-engine (PR 9 bugfix)
         if shuffle_impl == "kernel":
@@ -549,39 +590,21 @@ class ShardedEngine(MREngine):
     def aligned_nodes(self, n_nodes: int) -> int:
         return -(-max(1, int(n_nodes)) // self.n_shards) * self.n_shards
 
-    def _build(self, n_nodes: int, capacity: int, lead: int, treedef,
-               shapes_dtypes, use_kernel: bool):
-        from .distributed import shard_map, shuffle_alltoall
+    def _build_hop(self, n_nodes: int, lead: int, n_leaves: int):
+        """Jit the phase-1 program: the keyed ``all_to_all`` hop plus the
+        send-side global stats (items_sent, max_sent).  Independent of
+        ``capacity`` and of the phase-2 scatter implementation, so one hop
+        lowering is shared by every stage with the same send shape."""
+        from .distributed import keyed_hop, shard_map
 
         axis = self.axis_name
-        n_shards = self.n_shards
-        local_v = n_nodes // n_shards
-
-        local_shuffle = self._local_shuffle if use_kernel else _dense_shuffle
 
         def body(dests, *leaves):
             flat_dest = dests.reshape(-1).astype(jnp.int32)
             n_local = flat_dest.shape[0]
-            flat_leaves = [l.reshape((n_local,) + l.shape[dests.ndim:])
-                           for l in leaves]
-            owner = jnp.where(flat_dest >= 0,
-                              jnp.clip(flat_dest, 0, n_nodes - 1) // local_v,
-                              -1)
-            # Phase 1: lossless hop to the owner shard (per-pair capacity =
-            # all local items, so overflow can only happen at phase 2 — the
-            # same event LocalEngine counts).
-            routed = shuffle_alltoall(owner, (flat_dest, flat_leaves), axis,
-                                      capacity=n_local)
-            recv_dest, recv_leaves = routed.payload
-            recv_valid = routed.valid.reshape(-1)
-            shard = lax.axis_index(axis)
-            local_dest = jnp.where(recv_valid,
-                                   recv_dest.reshape(-1) - shard * local_v,
-                                   -1)
-            recv_flat = [rl.reshape((-1,) + rl.shape[2:]) for rl in recv_leaves]
-            box, st = local_shuffle(local_dest, recv_flat, local_v,
-                                    capacity)
-            # Global stats: identical on every shard after the collectives.
+            local_dest, recv_flat = keyed_hop(dests, leaves, axis, n_nodes)
+            # Send-side global stats: identical on every shard after the
+            # collectives.
             items_sent = lax.psum(jnp.sum(flat_dest >= 0), axis)
             if lead > 1 and n_local > 0:
                 sent_per_node = jnp.sum(
@@ -591,30 +614,69 @@ class ShardedEngine(MREngine):
                 # Empty (V, M) sends have no source nodes: max_sent = 0,
                 # matching the dense and reference backends.
                 max_sent = jnp.array(0 if lead > 1 else 1, jnp.int32)
-            stats = RoundStats(
-                items_sent=items_sent.astype(jnp.int32),
-                max_sent=jnp.asarray(max_sent, jnp.int32),
-                max_received=lax.pmax(st.max_received, axis),
-                dropped=lax.psum(st.dropped, axis),
-            )
-            return box.payload, box.valid, stats
+            return (local_dest, list(recv_flat),
+                    items_sent.astype(jnp.int32),
+                    jnp.asarray(max_sent, jnp.int32))
 
         P = jax.sharding.PartitionSpec
-        n_leaves = len(shapes_dtypes)
         in_specs = (P(axis),) + (P(axis),) * n_leaves
-        out_specs = ([P(axis)] * n_leaves, P(axis),
-                     RoundStats(P(), P(), P(), P()))
+        out_specs = (P(axis), [P(axis)] * n_leaves, P(), P())
+        return jax.jit(shard_map(body, mesh=self.mesh, in_specs=in_specs,
+                                 out_specs=out_specs))
+
+    def _build_scatter(self, n_nodes: int, capacity: int, n_leaves: int,
+                       use_kernel: bool):
+        """Jit the phase-2 program: the per-shard local scatter (dense or
+        Pallas kernel) of hop arrivals into (V_local, capacity) mailbox
+        slots, plus the receive-side global stats.  Off CPU the hop's
+        output buffers are donated in — they are dead after this call, so
+        XLA may alias them instead of copying, and the scatter launches as
+        its own program no longer barriered behind the collective."""
+        from .distributed import shard_map
+
+        axis = self.axis_name
+        local_v = n_nodes // self.n_shards
+        local_shuffle = self._local_shuffle if use_kernel else _dense_shuffle
+
+        def body(local_dest, *recv_flat):
+            box, st = local_shuffle(local_dest, list(recv_flat), local_v,
+                                    capacity)
+            return (box.payload, box.valid,
+                    lax.pmax(st.max_received, axis),
+                    lax.psum(st.dropped, axis))
+
+        P = jax.sharding.PartitionSpec
+        in_specs = (P(axis),) + (P(axis),) * n_leaves
+        out_specs = ([P(axis)] * n_leaves, P(axis), P(), P())
         kwargs = {}
         if use_kernel:
             # jax 0.4.x has no replication rule for pallas_call; the body's
             # outputs carry explicit per-shard specs, so skipping the check
             # is sound.
             kwargs["check_rep"] = False
-        return jax.jit(shard_map(body, mesh=self.mesh, in_specs=in_specs,
-                                 out_specs=out_specs, **kwargs))
+        fn = shard_map(body, mesh=self.mesh, in_specs=in_specs,
+                       out_specs=out_specs, **kwargs)
+        donate = ()
+        if self.mesh.devices.flat[0].platform != "cpu":
+            # Donation is unimplemented on the CPU backend (warning spam);
+            # elsewhere the hop outputs alias straight into the scatter.
+            donate = tuple(range(1 + n_leaves))
+        return jax.jit(fn, donate_argnums=donate)
 
     def shuffle(self, dests, payload: Payload, n_nodes: int,
                 capacity: int) -> Tuple[Mailbox, RoundStats]:
+        box, stats, _ = self._shuffle_phased(dests, payload, n_nodes,
+                                             capacity)
+        return box, stats
+
+    def _shuffle_phased(self, dests, payload: Payload, n_nodes: int,
+                        capacity: int, measure: bool = False
+                        ) -> Tuple[Mailbox, RoundStats, Tuple[float, float]]:
+        """The two-phase Shuffle: issue the hop program, then the scatter
+        program, without ever blocking the host (async dispatch queues
+        both).  ``measure=True`` blocks after each phase and returns the
+        measured (hop_s, scatter_s) wall seconds — the calibration probe
+        the overlapped scheduler runs once per window (DESIGN.md §13)."""
         dests = jnp.asarray(dests)
         if n_nodes % self.n_shards:
             raise ValueError(
@@ -656,19 +718,153 @@ class ShardedEngine(MREngine):
                     f"shuffle.route.{'kernel' if use_kernel else 'dense'}"
                 ).inc()
         # Per-shape lowerings share the engine's bounded cache with compiled
-        # plans (previously an unbounded private dict — DESIGN.md §8).
+        # plans (previously an unbounded private dict — DESIGN.md §8).  The
+        # hop key carries no capacity and no scatter impl: one hop lowering
+        # serves every stage with the same send shape.
         cache = self._ensure_cache()
-        key = ("shuffle", n_nodes, capacity, dests.shape, dests.ndim, treedef,
-               tuple((l.shape, str(l.dtype)) for l in leaves), use_kernel)
-        fn = cache.lookup(key)
-        if fn is None:
-            fn = cache.store(key, self._build(
-                n_nodes, capacity, dests.ndim, treedef,
-                [(l.shape, l.dtype) for l in leaves], use_kernel))
-        out_leaves, valid, stats = fn(dests, *leaves)
+        leaf_sig = tuple((l.shape, str(l.dtype)) for l in leaves)
+        hop_key = ("hop", n_nodes, dests.shape, dests.ndim, leaf_sig)
+        hop = cache.lookup(hop_key)
+        if hop is None:
+            hop = cache.store(hop_key, self._build_hop(
+                n_nodes, dests.ndim, len(leaves)))
+        clock = self.tracer.clock
+        t0 = clock() if measure else 0.0
+        local_dest, recv_flat, items_sent, max_sent = hop(dests, *leaves)
+        hop_s = 0.0
+        if measure:
+            jax.block_until_ready((local_dest, recv_flat))
+            hop_s = clock() - t0
+        recv_sig = tuple((l.shape, str(l.dtype)) for l in recv_flat)
+        sc_key = ("scatter", n_nodes, capacity, local_dest.shape, recv_sig,
+                  use_kernel)
+        sc = cache.lookup(sc_key)
+        if sc is None:
+            sc = cache.store(sc_key, self._build_scatter(
+                n_nodes, capacity, len(recv_flat), use_kernel))
+        t1 = clock() if measure else 0.0
+        out_leaves, valid, max_received, dropped = sc(local_dest, *recv_flat)
+        scatter_s = 0.0
+        if measure:
+            jax.block_until_ready((out_leaves, valid))
+            scatter_s = clock() - t1
+        stats = RoundStats(items_sent=items_sent, max_sent=max_sent,
+                           max_received=max_received, dropped=dropped)
         box = Mailbox(payload=jax.tree_util.tree_unflatten(treedef, out_leaves),
                       valid=valid)
-        return box, stats
+        return box, stats, (hop_s, scatter_s)
+
+    # -- overlapped (double-buffered) round scheduling — DESIGN.md §13 -------
+    def run_rounds(self, f: RoundFn, box: Mailbox, n_rounds: int,
+                   capacity: Optional[int] = None,
+                   accum: Optional[CostAccum] = None,
+                   n_nodes: Optional[int] = None,
+                   checkpointer=None, round_offset: int = 0,
+                   early_dests: bool = False
+                   ) -> Tuple[Mailbox, CostAccum]:
+        if not (early_dests and self.overlap) or checkpointer is not None \
+                or n_rounds <= 0:
+            # Data-dependent destinations, a sequential comparator, or a
+            # checkpointer (round-boundary snapshots materialize per-round
+            # state) — the base per-round schedule.
+            return super().run_rounds(f, box, n_rounds, capacity, accum,
+                                      n_nodes=n_nodes,
+                                      checkpointer=checkpointer,
+                                      round_offset=round_offset)
+        window = [(f, capacity, n_nodes, r) for r in range(n_rounds)]
+        return self._run_overlapped(window, box, accum)
+
+    def run_stages(self, stages, box: Mailbox,
+                   accum: Optional[CostAccum] = None,
+                   checkpointer=None, round_offset: int = 0
+                   ) -> Tuple[Mailbox, CostAccum]:
+        if checkpointer is not None or not self.overlap:
+            return super().run_stages(stages, box, accum=accum,
+                                      checkpointer=checkpointer,
+                                      round_offset=round_offset)
+        acc = accum if accum is not None else CostAccum.zero()
+        stages = list(stages)
+        i = 0
+        while i < len(stages):
+            if not (len(stages[i]) > 3 and stages[i][3]):
+                fn, cap = stages[i][0], stages[i][1]
+                V = stages[i][2] if len(stages[i]) > 2 else None
+                box, stats = self.run_round(fn, box, i, capacity=cap,
+                                            n_nodes=V)
+                acc = acc.add_round_stats(stats)
+                i += 1
+                continue
+            # Maximal run of consecutive early_dests rounds: one overlapped
+            # window (each round keeps its global schedule index).
+            window = []
+            while i < len(stages) and len(stages[i]) > 3 and stages[i][3]:
+                s = stages[i]
+                window.append((s[0], s[1],
+                               s[2] if len(s) > 2 else None, i))
+                i += 1
+            box, acc = self._run_overlapped(window, box, acc)
+        return box, acc
+
+    def _run_overlapped(self, window, box: Mailbox, accum
+                        ) -> Tuple[Mailbox, CostAccum]:
+        """Issue a window of ``(fn, capacity, n_nodes, round_idx)`` rounds
+        without ever blocking the host between rounds.
+
+        The double buffer is the device queue itself: because the host
+        reads nothing back until the window ends, round r+1's hop program
+        is dispatched while round r's scatter (and the reducer compute
+        inside fn) is still executing — the all_to_all flies under the
+        compute.  Per-round :class:`RoundStats` stay on device in issue
+        order and fold into the accumulator at the end, so the resulting
+        ``CostAccum`` is bit-identical to the sequential schedule (same
+        values, same fold order).
+
+        With a live tracer the first round runs as a calibration probe —
+        blocked after fn, hop, and scatter to measure the un-overlapped
+        per-phase costs — then the rest of the window runs free; one
+        ``pipeline.overlap`` event carries the measured window wall time
+        next to the calibrated (hop_s, compute_s) so the hop-hidden
+        fraction is computable from the trace alone (``pipeline.hop``
+        marks each issued round without reading any device value)."""
+        acc = accum if accum is not None else CostAccum.zero()
+        tr = self.tracer
+        live = tr.enabled and jax.core.trace_state_clean()
+        clock = tr.clock
+        t_start = clock() if live else 0.0
+        calibrated = not live
+        hop_s = compute_s = 0.0
+        pending = []
+        self.route_log.overlapped += len(window)
+        for fn, capacity, n_nodes, r in window:
+            cap = capacity if capacity is not None else box.capacity
+            V = n_nodes if n_nodes is not None else box.n_nodes
+            measure = not calibrated
+            t_f = clock() if measure else 0.0
+            dests, payload = fn(r, self.node_ids(box.n_nodes), box)
+            f_s = 0.0
+            if measure:
+                jax.block_until_ready((dests, payload))
+                f_s = clock() - t_f
+            box, st, spans = self._shuffle_phased(dests, payload, V, cap,
+                                                  measure=measure)
+            pending.append(st)
+            if measure:
+                calibrated = True
+                hop_s = spans[0]
+                compute_s = f_s + spans[1]
+            if live:
+                tr.event("pipeline.hop", round=int(r), n_nodes=int(V),
+                         capacity=int(cap), backend=self.name)
+                tr.count("pipeline.hops")
+        for st in pending:
+            acc = acc.add_round_stats(st)
+        if live:
+            jax.block_until_ready(box.valid)
+            tr.event("pipeline.overlap", _dur=clock() - t_start,
+                     rounds=len(window), backend=self.name,
+                     hop_s=hop_s, compute_s=compute_s)
+            tr.count("pipeline.overlaps")
+        return box, acc
 
 
 @functools.lru_cache(maxsize=1)

@@ -90,9 +90,14 @@ class RouteLog:
     so concurrent services on different engines never interleave counts;
     routing decisions also surface as ``shuffle.route`` events on an
     attached :class:`repro.obs.Tracer`.
+
+    ``overlapped`` counts rounds the ShardedEngine scheduled through the
+    double-buffered path (DESIGN.md §13) — a scheduling counter, not a
+    routing one, so :meth:`snapshot` (the kernel-vs-dense pair the parity
+    tests compare) deliberately excludes it.
     """
 
-    __slots__ = ("kernel", "dense")
+    __slots__ = ("kernel", "dense", "overlapped")
 
     def __init__(self) -> None:
         self.reset()
@@ -100,6 +105,7 @@ class RouteLog:
     def reset(self) -> None:
         self.kernel = 0
         self.dense = 0
+        self.overlapped = 0
 
     def snapshot(self) -> Tuple[int, int]:
         return (self.kernel, self.dense)

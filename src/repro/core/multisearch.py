@@ -230,18 +230,21 @@ def multisearch_plan(n_queries: int, n_pivots: int, M: int, *,
         # footprint T[r+1] = end of level r's range (prefix-ordered layout,
         # so destination ids are unchanged).  Steady state: K rounds at V.
         stages = [entry_stage("entry", K, cap, emit_entry)]
+        # early_dests: descent targets are child ids in the prefix-ordered
+        # static tree layout (the tree is carry, never mailbox-mutated) —
+        # the scan rounds double-buffer on ShardedEngine.
         stages += [round_stage(f"descend-{r}", make_step(r), 1,
-                               n_nodes=T[r + 1])
+                               n_nodes=T[r + 1], early_dests=True)
                    for r in range(L)]
         stages.append(round_stage("descend-steady", make_step(L), K,
-                                  n_nodes=V))
+                                  n_nodes=V, early_dests=True))
         stages.append(account_stage("output", ((n_q, 1),)))
         stages = tuple(stages)
     else:
         stages = (
             # Entry round: query j is thrown into its batch's source node.
             entry_stage("entry", V, cap, emit_entry),
-            round_stage("descend", make_step(0), K + L),
+            round_stage("descend", make_step(0), K + L, early_dests=True),
             account_stage("output", ((n_q, 1),)),
         )
 

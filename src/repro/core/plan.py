@@ -60,6 +60,16 @@ class PlanStage(NamedTuple):
     #: accounting-only and compute stages set False so footprint metrics
     #: (peak/total_mailbox_slots) skip them even when both dims inherit
     shuffles: bool = True
+    #: *declared* overlap legality (DESIGN.md §13): True promises the
+    #: stage's destinations depend only on node ids and the static schedule
+    #: (the sortmr refine ladder, hull2d merge tree, multisearch scan
+    #: rounds), never on mailbox data — which lets ShardedEngine
+    #: double-buffer its rounds (issue round r+1's all_to_all hop under
+    #: round r's reducer compute).  Declared by the builder, never
+    #: inferred; data-dependent CRCW/funnel writes stay False and always
+    #: take the sequential schedule.  A scheduling hint only — results and
+    #: CostAccum are bit-identical either way.
+    early_dests: bool = False
 
 
 class PlanState(NamedTuple):
@@ -312,7 +322,8 @@ def entry_stage(name: str, n_nodes: int, capacity: int,
 
 def round_stage(name: str, make_fn: Callable, n_rounds: int,
                 capacity: Optional[int] = None,
-                n_nodes: Optional[int] = None) -> PlanStage:
+                n_nodes: Optional[int] = None,
+                early_dests: bool = False) -> PlanStage:
     """``n_rounds`` applications of one round function over the current
     mailbox.  ``make_fn(carry) -> RoundFn`` binds the carry (splitters,
     padded pivots, ...) at execute time; uniform capacity means
@@ -322,16 +333,23 @@ def round_stage(name: str, make_fn: Callable, n_rounds: int,
     round shuffles into a ``(n_nodes, capacity)`` mailbox (a *shape-change
     round* when it differs from the current box shape; DESIGN.md §9) —
     the backend's layout granularity is applied at execute time via
-    ``engine.aligned_nodes``.  None inherits the current node count."""
+    ``engine.aligned_nodes``.  None inherits the current node count.
+
+    ``early_dests=True`` declares that the round function's destinations
+    depend only on node ids and the static schedule (never on mailbox
+    data), unlocking ShardedEngine's double-buffered round schedule for
+    this stage (DESIGN.md §13)."""
 
     def apply(engine, state: PlanState) -> PlanState:
         V = None if n_nodes is None else engine.aligned_nodes(n_nodes)
         box, accum = engine.run_rounds(make_fn(state.carry), state.box,
                                        n_rounds, capacity=capacity,
-                                       accum=state.accum, n_nodes=V)
+                                       accum=state.accum, n_nodes=V,
+                                       early_dests=early_dests)
         return state._replace(box=box, accum=accum)
 
-    return PlanStage(name, n_rounds, capacity, apply, n_nodes)
+    return PlanStage(name, n_rounds, capacity, apply, n_nodes,
+                     early_dests=early_dests)
 
 
 def compute_stage(name: str, fn: Callable) -> PlanStage:
@@ -347,13 +365,18 @@ def compute_stage(name: str, fn: Callable) -> PlanStage:
 
 def custom_stage(name: str, rounds: int, capacity: Optional[int],
                  apply: Callable,
-                 n_nodes: Optional[int] = None) -> PlanStage:
+                 n_nodes: Optional[int] = None,
+                 early_dests: bool = False) -> PlanStage:
     """Escape hatch for stages that drive the engine directly (invisible
     funnels, PRAM steps, BSP supersteps); ``apply(engine, state) -> state``
     must account exactly ``rounds`` rounds.  ``n_nodes`` declares the
     stage's peak physical footprint for the shape schedule (purely
-    declarative here — the body drives its own shuffles)."""
-    return PlanStage(name, rounds, capacity, apply, n_nodes)
+    declarative here — the body drives its own shuffles).  ``early_dests``
+    likewise only *declares* overlap legality (DESIGN.md §13): a custom
+    body that wants the double-buffered schedule must itself pass the flag
+    to ``engine.run_rounds``/``run_stages``."""
+    return PlanStage(name, rounds, capacity, apply, n_nodes,
+                     early_dests=early_dests)
 
 
 __all__ = [

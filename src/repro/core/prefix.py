@@ -191,13 +191,18 @@ def _physical_prefix_plan(n: int, M: int, d: int, dtype, inclusive: bool,
         return make_fn
 
     stages = [entry_stage("up-0", sizes[0], d, emit_entry)]
+    # early_dests: both sweeps address parents/children of the static d-ary
+    # tree by node id alone — the whole ladder double-buffers on
+    # ShardedEngine.
     for j in range(1, J + 1):
         stages.append(round_stage(f"up-{j}", make_up(j), 1, capacity=d,
-                                  n_nodes=sizes[j] if shape else None))
+                                  n_nodes=sizes[j] if shape else None,
+                                  early_dests=True))
     for j in range(J - 1, -1, -1):
         stages.append(round_stage(f"down-{j}", make_down(j, j == J - 1), 1,
                                   capacity=1,
-                                  n_nodes=sizes[j] if shape else None))
+                                  n_nodes=sizes[j] if shape else None,
+                                  early_dests=True))
     stages.append(account_stage("output", ((n, 1),)))
 
     def epilogue(state):

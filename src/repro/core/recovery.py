@@ -313,11 +313,25 @@ class Checkpointer:
     persists only when at least ``every`` rounds completed since the last
     durable checkpoint.  ``keep`` (optional) prunes the oldest checkpoints
     beyond the newest ``keep``.
+
+    ``async_save=True`` routes saves through
+    :class:`repro.train.checkpoint.AsyncSaver`: the round loop is blocked
+    only for the device→host snapshot (device_get on the caller thread);
+    the ``.npy`` writes and the atomic publish happen on a background
+    thread, overlapping the next rounds' device compute — the
+    checkpoint-I/O counterpart of the DESIGN.md §13 round overlap.  One
+    save may be outstanding at a time; the next save (or any read —
+    :meth:`rounds`/:meth:`latest`/:meth:`load` — or an explicit
+    :meth:`flush`) settles it first, accounting its bytes, emitting its
+    ``ckpt.save`` event, and re-raising any background write error.  The
+    on-disk format, the ``every`` cadence, and recovery semantics are
+    identical to the synchronous default.
     """
 
     def __init__(self, directory, plan: Optional[Plan] = None, *,
                  every: int = 1, keep: Optional[int] = None,
-                 tag: Optional[str] = None, tracer=None):
+                 tag: Optional[str] = None, tracer=None,
+                 async_save: bool = False):
         if plan is None and tag is None:
             raise ValueError("Checkpointer needs a plan (fingerprint key) "
                              "or an explicit tag")
@@ -331,6 +345,9 @@ class Checkpointer:
         self.saved_rounds = []
         self.bytes_written = 0
         self._last_saved = 0
+        self.async_save = bool(async_save)
+        self._saver = _ckpt.AsyncSaver() if self.async_save else None
+        self._pending_round = None
         # ckpt.save / ckpt.restore sink; the recovery drivers re-wire this
         # to the engine's tracer when one is live (opt-in, like every hook).
         self.tracer = NULL_TRACER if tracer is None else tracer
@@ -351,7 +368,14 @@ class Checkpointer:
     # -- storage -------------------------------------------------------------
     def save(self, round_idx: int, tree, meta=None) -> str:
         """Persist ``tree`` as the round-``round_idx`` checkpoint
-        (step-atomic; overwrites an existing checkpoint of the same round)."""
+        (step-atomic; overwrites an existing checkpoint of the same round).
+
+        Synchronous by default.  With ``async_save`` the device→host
+        snapshot happens here (so the returned state is consistent no
+        matter what the round loop does next) but the disk write runs on
+        the saver's background thread; the returned path is where the
+        checkpoint *will* be published — settle with :meth:`flush` before
+        reading it."""
         leaves, treedef = jax.tree_util.tree_flatten(tree)
         kinds = [_leaf_kind(l) for l in leaves]
         flat = {f"leaf_{i:05d}": np.asarray(jax.device_get(l))
@@ -360,20 +384,48 @@ class Checkpointer:
                      pickle.dumps(treedef)).decode("ascii"),
                  "leaf_kinds": kinds,
                  **(meta or {})}
-        path = _ckpt.save(str(self.root), int(round_idx), flat,
-                          extra_meta=extra)
+        if self.async_save:
+            # Settle the previous outstanding save first: account its
+            # bytes, emit its ckpt.save event, surface any write error.
+            self._settle()
+            self._saver.save_async(str(self.root), int(round_idx), flat,
+                                   extra_meta=extra)
+            self._pending_round = int(round_idx)
+            path = str(self.root / f"step_{int(round_idx):08d}")
+        else:
+            path = _ckpt.save(str(self.root), int(round_idx), flat,
+                              extra_meta=extra)
+            self._account(int(round_idx), path)
+        self.saved_rounds.append(int(round_idx))
+        self._last_saved = int(round_idx)
+        return path
+
+    def _account(self, round_idx: int, path) -> None:
+        """Fold one *published* checkpoint into the byte counters, the
+        tracer, and the ``keep`` pruning policy."""
         nbytes = sum(p.stat().st_size
                      for p in pathlib.Path(path).glob("*.npy"))
         self.bytes_written += nbytes
-        self.saved_rounds.append(int(round_idx))
-        self._last_saved = int(round_idx)
         if self.tracer.enabled:
             self.tracer.event("ckpt.save", round=int(round_idx),
                               bytes=nbytes)
             self.tracer.count("ckpt.saves")
         if self.keep is not None:
             self._prune()
-        return path
+
+    def _settle(self) -> None:
+        if self._saver is None:
+            return
+        self._saver.wait()           # joins the writer; re-raises its error
+        if self._pending_round is not None:
+            self._account(self._pending_round, self._saver.last_path)
+            self._pending_round = None
+
+    def flush(self) -> None:
+        """Block until any outstanding async save is durably published and
+        accounted (no-op for the synchronous default).  Re-raises an error
+        the background writer hit."""
+        self._settle()
 
     def _prune(self) -> None:
         steps = sorted(self.rounds())
@@ -382,6 +434,7 @@ class Checkpointer:
 
     def rounds(self):
         """Round indices with a durable checkpoint, ascending."""
+        self._settle()
         if not self.root.exists():
             return []
         return sorted(int(p.name.split("_")[1]) for p in self.root.iterdir()
@@ -389,12 +442,14 @@ class Checkpointer:
 
     def latest(self) -> Optional[int]:
         """Newest durable round index (None when nothing was saved)."""
+        self._settle()
         return _ckpt.latest_step(str(self.root))
 
     def load(self, round_idx: int) -> Tuple[Any, Dict[str, Any]]:
         """Restore the round-``round_idx`` checkpoint: returns
         ``(tree, meta)`` with array leaves as jnp arrays and scalar leaves
         cast back to their Python types."""
+        self._settle()
         final = self.root / f"step_{int(round_idx):08d}"
         manifest = json.loads((final / "manifest.json").read_text())
         meta = manifest["meta"]
@@ -611,6 +666,7 @@ def _finish(plan, state, report, eng, checkpointer):
         report.stragglers_injected = inj.stragglers
         report.simulated_delay_s = inj.simulated_delay_s
     if checkpointer is not None:
+        checkpointer.flush()         # settle an outstanding async save
         report.checkpoint_bytes = checkpointer.bytes_written
     return outputs, report
 

@@ -243,9 +243,13 @@ def sort_plan(n: int, M: int, *, dtype=jnp.float32, levels: int = 1,
             def refine(r, ids, b):
                 return level_dest(spl, b.payload, b.valid, _d), b.payload
             return refine
+        # early_dests: the refine ladder's group targets come from the
+        # static level schedule (splitters are carry, not mailbox data) —
+        # legal for the ShardedEngine double-buffered schedule.
         stages.append(round_stage(f"refine-{d}", make_refine, 1,
                                   capacity=group_cap(d),
-                                  n_nodes=group_nodes(d) if shape else None))
+                                  n_nodes=group_nodes(d) if shape else None,
+                                  early_dests=True))
 
     big = (jnp.finfo(dtype).max if jnp.issubdtype(dtype, jnp.floating)
            else jnp.iinfo(dtype).max)
@@ -260,7 +264,8 @@ def sort_plan(n: int, M: int, *, dtype=jnp.float32, levels: int = 1,
             return dest, svals
         return local_sort
 
-    stages.append(round_stage("local-sort", make_local_sort, 1))
+    stages.append(round_stage("local-sort", make_local_sort, 1,
+                              early_dests=True))   # keep-at-self dests
     stages.append(account_stage("output", ((n, 1),)))   # leaves -> output
 
     def epilogue(state):

@@ -195,3 +195,179 @@ class TestAlgorithmConformance:
             np.testing.assert_array_equal(np.asarray(ref.x),
                                           np.asarray(res.x), err_msg=e.name)
             assert_same_accum(ref.stats, res.stats, ctx=e.name)
+
+
+class TestOverlappedScheduleConformance:
+    """DESIGN.md §13: the double-buffered sharded schedule must be
+    *bit-identical* to the strictly-sequential comparator
+    (``ShardedEngine(overlap=False)``) — mailbox values, validity, and the
+    per-round CostAccum fold.  The schedule is value-agnostic (both paths
+    issue the same two jitted programs per round in the same order; only
+    the host's issue/sync timing differs), so parity must hold even for
+    round programs whose destinations are data-dependent — i.e. programs
+    that *overstate* ``early_dests``.  Axis size 1 runs in-process; axis
+    sizes 2 and 4 run in a subprocess over mesh device subsets."""
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_random_program_overlap_parity(self, seed):
+        rng = np.random.default_rng(seed)
+        V = int(rng.integers(4, 10))
+        cap = int(rng.integers(2, 5))
+        n_rounds = 4
+        entry_dests = rng.integers(-1, V, size=(V, cap)).astype(np.int32)
+        payload = rng.normal(size=(V, cap)).astype(np.float32)
+        tables = jnp.asarray(
+            rng.integers(-1, V, size=(n_rounds, V, cap)).astype(np.int32))
+
+        def fn(r, ids, box):
+            dests = jnp.where(box.valid, tables[r], -1)
+            return dests, box.payload
+
+        ref_box = ref_acc = None
+        for eng, early in [(ShardedEngine(overlap=False), False),
+                           (ShardedEngine(overlap=False), True),
+                           (ShardedEngine(), True),
+                           (LocalEngine(), True)]:
+            box, st = eng.shuffle(entry_dests, payload, V, cap)
+            acc = CostAccum.zero().add_round_stats(st)
+            box, acc = eng.run_rounds(fn, box, n_rounds, accum=acc,
+                                      early_dests=early)
+            if ref_box is None:
+                ref_box, ref_acc = box, acc
+            else:
+                ctx = f"seed={seed} {eng.name} early={early}"
+                assert_same_box(ref_box, box, ctx=ctx)
+                assert_same_accum(ref_acc, acc, ctx=ctx)
+        overlapped = ShardedEngine()
+        overlapped.run_rounds(fn, ref_box, 1, accum=ref_acc,
+                              early_dests=True)
+        assert overlapped.route_log.overlapped == 1   # scheduler engaged
+
+    @pytest.mark.parametrize("seed,n,M", [(0, 96, 8), (1, 64, 16)])
+    def test_sort_overlap_parity(self, seed, n, M):
+        from repro.core import sort_plan
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=n).astype(np.float32))
+        key = jax.random.PRNGKey(seed)
+        seq = ShardedEngine(overlap=False)
+        ovl = ShardedEngine()
+        res_s = seq.compile(sort_plan(n, M, align=seq.aligned_nodes))(
+            x, key=key)
+        res_o = ovl.compile(sort_plan(n, M, align=ovl.aligned_nodes))(
+            x, key=key)
+        np.testing.assert_array_equal(np.asarray(res_s.values),
+                                      np.asarray(res_o.values))
+        assert_same_accum(res_s.stats, res_o.stats, ctx="sort overlap")
+
+    @pytest.mark.parametrize("seed,n,M", [(2, 64, 16)])
+    def test_hull2d_overlap_parity(self, seed, n, M):
+        from repro.core import hull2d_plan
+        rng = np.random.default_rng(seed)
+        pts = jnp.asarray(rng.normal(size=(n, 2)).astype(np.float32))
+        key = jax.random.PRNGKey(seed)
+        seq = ShardedEngine(overlap=False)
+        ovl = ShardedEngine()
+        res_s = seq.compile(hull2d_plan(n, M, align=seq.aligned_nodes))(
+            pts, key=key)
+        res_o = ovl.compile(hull2d_plan(n, M, align=ovl.aligned_nodes))(
+            pts, key=key)
+        np.testing.assert_array_equal(np.asarray(res_s.points),
+                                      np.asarray(res_o.points))
+        assert int(res_s.count) == int(res_o.count)
+        assert_same_accum(res_s.stats, res_o.stats, ctx="hull2d overlap")
+
+    def test_pipeline_events_tracer_neutral(self):
+        """pipeline.* events are pure telemetry: overlapped results are
+        identical with the tracer on and off, the overlapped run emits
+        pipeline.hop per round plus one pipeline.overlap per window, and
+        the sequential comparator emits no pipeline.* events at all."""
+        from repro.obs import Tracer
+        rng = np.random.default_rng(3)
+        V, cap, R = 6, 3, 4
+        entry = rng.integers(-1, V, size=(V, cap)).astype(np.int32)
+        payload = rng.normal(size=(V, cap)).astype(np.float32)
+        node = jnp.arange(V, dtype=jnp.int32)[:, None]
+
+        def fn(r, ids, box):
+            return jnp.where(box.valid, (node + 1 + r) % V, -1), box.payload
+
+        def run(eng):
+            box, st = eng.shuffle(entry, payload, V, cap)
+            return eng.run_rounds(fn, box, R,
+                                  accum=CostAccum.zero().add_round_stats(st),
+                                  early_dests=True)
+
+        traced = ShardedEngine(tracer=Tracer())
+        box_t, acc_t = run(traced)
+        box_u, acc_u = run(ShardedEngine())                 # untraced
+        box_s, acc_s = run(ShardedEngine(overlap=False,
+                                         tracer=Tracer())) # sequential
+        assert_same_box(box_s, box_t, ctx="traced overlap")
+        assert_same_box(box_s, box_u, ctx="untraced overlap")
+        assert_same_accum(acc_s, acc_t, ctx="traced overlap")
+        assert_same_accum(acc_s, acc_u, ctx="untraced overlap")
+
+        kinds = [e.kind for e in traced.tracer.events()]
+        assert kinds.count("pipeline.hop") == R
+        assert kinds.count("pipeline.overlap") == 1
+
+    def test_multidevice_overlap_parity(self):
+        """Axis sizes 2 and 4 under real cross-shard collectives (mesh over
+        device subsets in one 4-device subprocess): random round program +
+        the sort plan, overlapped vs sequential, values and CostAccum."""
+        import os
+        import subprocess
+        import sys
+        import textwrap
+        repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        env["PYTHONPATH"] = os.path.join(repo, "src")
+        proc = subprocess.run([sys.executable, "-c", textwrap.dedent("""
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.core import CostAccum, ShardedEngine, sort_plan
+
+        for n_sub in (2, 4):
+            mesh = Mesh(np.array(jax.devices()[:n_sub]), ("nodes",))
+            seq = ShardedEngine(mesh=mesh, overlap=False)
+            ovl = ShardedEngine(mesh=mesh)
+            rng = np.random.default_rng(n_sub)
+            V, cap, R = seq.aligned_nodes(8), 3, 4
+            entry = rng.integers(-1, V, size=(V, cap)).astype(np.int32)
+            payload = rng.normal(size=(V, cap)).astype(np.float32)
+            tables = jnp.asarray(
+                rng.integers(-1, V, size=(R, V, cap)).astype(np.int32))
+            def fn(r, ids, box):
+                return jnp.where(box.valid, tables[r], -1), box.payload
+            outs = []
+            for eng, early in ((seq, False), (ovl, True)):
+                box, st = eng.shuffle(entry, payload, V, cap)
+                box, acc = eng.run_rounds(
+                    fn, box, R, accum=CostAccum.zero().add_round_stats(st),
+                    early_dests=early)
+                outs.append((box, acc))
+            (bs, as_), (bo, ao) = outs
+            np.testing.assert_array_equal(np.asarray(bs.payload),
+                                          np.asarray(bo.payload))
+            np.testing.assert_array_equal(np.asarray(bs.valid),
+                                          np.asarray(bo.valid))
+            for a, b in zip(as_, ao):
+                assert float(a) == float(b), (n_sub, a, b)
+            assert ovl.route_log.overlapped == R
+
+            key = jax.random.PRNGKey(0)
+            x = jnp.asarray(rng.normal(size=32 * n_sub).astype(np.float32))
+            rs = seq.compile(sort_plan(x.size, 8,
+                                       align=seq.aligned_nodes))(x, key=key)
+            ro = ovl.compile(sort_plan(x.size, 8,
+                                       align=ovl.aligned_nodes))(x, key=key)
+            np.testing.assert_array_equal(np.asarray(rs.values),
+                                          np.asarray(ro.values))
+            for a, b in zip(rs.stats, ro.stats):
+                assert float(a) == float(b), (n_sub, a, b)
+        print("OK")
+        """)], capture_output=True, text=True, env=env, timeout=600)
+        assert proc.returncode == 0, proc.stderr[-4000:]
+        assert "OK" in proc.stdout
